@@ -1,0 +1,1 @@
+"""Benchmark harness: paper tables T1-T10 + roofline extraction."""

@@ -1,0 +1,24 @@
+"""Shared timing helpers: median wall time of a jitted callable."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def time_fn(fn, *args, warmup: int = 1, repeats: int = 3, **kw) -> float:
+    """Median seconds per call (block_until_ready)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args, **kw))
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args, **kw))
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def row(name: str, seconds: float, derived: str = "") -> tuple:
+    return (name, seconds * 1e6, derived)

@@ -1,0 +1,182 @@
+"""§Perf hillclimbing driver: hypothesis → change → re-lower → record.
+
+Three selected cells (from the baseline roofline table):
+
+* ``yi-34b × train_4k``       — worst memory fit (190 GiB/dev; memory-bound)
+* ``mamba2-2.7b × train_4k``  — most collective-bound (t_coll > t_mem)
+* ``phi3.5-moe × train_4k``   — most representative of the paper's farm
+                                 (MoE = router-fan over expert workers)
+
+Each variant is re-lowered + re-compiled on the 16×16 mesh and its roofline
+terms recorded to results/perf/.  The hypotheses and outcomes are written up
+in EXPERIMENTS.md §Perf.
+
+Usage: PYTHONPATH=src python -m benchmarks.hillclimb [--cell yi|mamba|moe]
+"""
+
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+
+import argparse
+import dataclasses
+import json
+import time
+
+PERF_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "perf")
+
+
+def run_variant(cell_name: str, variant: str, arch: str, shape: str,
+                cfg_mutate=None, rules=None, hypothesis: str = "",
+                grad_accum: int = 1):
+    from repro.configs import get_config
+    from repro.launch.dryrun import lower_cell
+
+    out_path = os.path.join(PERF_DIR, f"{cell_name}__{variant}.json")
+    if os.path.exists(out_path):
+        print(f"[hillclimb] skip {cell_name}/{variant} (done)", flush=True)
+        return json.load(open(out_path))
+    cfg = get_config(arch)
+    if cfg_mutate:
+        cfg = dataclasses.replace(cfg, **cfg_mutate)
+    t0 = time.monotonic()
+    try:
+        rec = lower_cell(arch, shape, multi_pod=False, cfg_override=cfg,
+                         rules_override=rules, verbose=False,
+                         grad_accum=grad_accum)
+        rec["ok"] = True
+    except Exception as e:  # noqa: BLE001
+        rec = {"ok": False, "error": repr(e)}
+    rec.update(variant=variant, cell=cell_name, hypothesis=hypothesis,
+               wall_s=round(time.monotonic() - t0, 1),
+               mutate=str(cfg_mutate), rules=str(rules))
+    os.makedirs(PERF_DIR, exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(rec, f, indent=1)
+    if rec["ok"]:
+        mem = (rec["mem"]["argument_bytes"]
+               + rec["mem"]["temp_bytes"]) / 2 ** 30
+        print(f"[hillclimb] {cell_name}/{variant}: "
+              f"flops={rec['flops_per_dev']:.3e} "
+              f"bytes={rec['bytes_per_dev']:.3e} "
+              f"coll={rec['coll_bytes_per_dev']:.3e} mem={mem:.1f}GiB "
+              f"({rec['wall_s']}s)", flush=True)
+    else:
+        print(f"[hillclimb] {cell_name}/{variant}: FAILED {rec['error']}",
+              flush=True)
+    return rec
+
+
+def climb_yi():
+    from repro.launch.mesh import train_rules
+    a, s = "yi-34b", "train_4k"
+    run_variant("yi_train", "v1_loss_chunk", a, s,
+                cfg_mutate={"loss_chunk": 512},
+                hypothesis="CE materialises (B,S,V) f32 logits ≈2.4GiB/dev "
+                           "×k copies in fwd+bwd; chunking to S/8 cuts peak "
+                           "temp and logits traffic ~8x at <1% extra flops")
+    run_variant("yi_train", "v2_fsdp", a, s,
+                cfg_mutate={"fsdp": True},
+                hypothesis="params+moments f32 sharded only over model=16 "
+                           "⇒ 26GiB/dev static; ZeRO-3 over data=16 cuts to "
+                           "1.6GiB at the cost of per-layer weight gathers "
+                           "(+2·params/dev ICI bytes)")
+    run_variant("yi_train", "v3_fsdp_chunk_accum", a, s,
+                cfg_mutate={"fsdp": True, "loss_chunk": 512},
+                hypothesis="combine v1+v2; activation peak then dominates; "
+                           "expect mem ≈ sum of both wins")
+    run_variant("yi_train", "v4_sp", a, s,
+                cfg_mutate={"fsdp": True, "loss_chunk": 512,
+                            "seq_shard": True},
+                rules=train_rules(seq_shard=True, fsdp=True),
+                hypothesis="remat carries = L·(B/16)·S·D·2B ≈ 56GiB/dev "
+                           "dominate; sequence-sharding activations over "
+                           "the model axis cuts them 16x to ~3.5GiB")
+    run_variant("yi_train", "v5_sp_accum4", a, s,
+                cfg_mutate={"fsdp": True, "loss_chunk": 512,
+                            "seq_shard": True},
+                rules=train_rules(seq_shard=True, fsdp=True), grad_accum=4,
+                hypothesis="microbatching 4x further divides live "
+                           "activations; compute unchanged (same flops, "
+                           "serialised)")
+
+
+def climb_mamba():
+    from repro.launch.mesh import train_rules
+    a, s = "mamba2-2.7b", "train_4k"
+    run_variant("mamba_train", "v1_no_tp_fsdp", a, s,
+                cfg_mutate={"fsdp": True},
+                rules=train_rules(fsdp=True, tp=False),
+                hypothesis="TP all-reduces 2×(B/16,S,d)≈335MiB/layer×64 "
+                           "dominate t_coll; d_inner matmuls are small "
+                           "enough per chip that pure DP+ZeRO3 beats TP")
+    run_variant("mamba_train", "v2_no_tp_fsdp_chunk", a, s,
+                cfg_mutate={"fsdp": True, "loss_chunk": 512},
+                rules=train_rules(fsdp=True, tp=False),
+                hypothesis="v1 plus CE chunking (vocab 50k logits traffic)")
+    run_variant("mamba_train", "v3_seq_shard", a, s,
+                cfg_mutate={"fsdp": True, "seq_shard": True},
+                rules=train_rules(seq_shard=True, fsdp=True, tp=False),
+                hypothesis="sequence-shard activations over the idle model "
+                           "axis: per-dev activation bytes /16, small "
+                           "boundary collectives")
+    from repro.parallel.axes import ShardingRules
+    run_variant("mamba_train", "v4_pure_dp256", a, s,
+                cfg_mutate={"fsdp": True, "loss_chunk": 512},
+                rules=ShardingRules(batch=("pod", "data", "model"),
+                                    d=("data", "model"), heads=None,
+                                    ff=None, vocab=None, expert=None),
+                hypothesis="v1 left the model axis idle (flops/dev 8x "
+                           "worse); flatten the whole 256-chip mesh into "
+                           "DP: batch 256 = 1 row/chip, ZeRO-3 over all "
+                           "256 → flops/dev back to global/256, coll = "
+                           "weight gathers + grad reduce only")
+
+
+def climb_moe():
+    a, s = "phi3.5-moe-42b-a6.6b", "train_4k"
+    run_variant("moe_train", "v1_cap1", a, s,
+                cfg_mutate={"moe": dataclasses.replace(
+                    __import__("repro.configs", fromlist=["ARCHS"])
+                    .ARCHS[a].moe, capacity_factor=1.0)},
+                hypothesis="dispatch/combine einsums scale ∝C∝cf; cf 1.25→1.0 "
+                           "cuts dispatch flops+bytes 20% with bounded drops")
+    run_variant("moe_train", "v2_fsdp_chunk", a, s,
+                cfg_mutate={"fsdp": True, "loss_chunk": 512},
+                hypothesis="42B params: moments 31GiB/dev on model-only "
+                           "sharding; ZeRO-3 + CE chunking fixes fit")
+    run_variant("moe_train", "v4_sp", a, s,
+                cfg_mutate={"fsdp": True, "loss_chunk": 512,
+                            "seq_shard": True},
+                rules=__import__("repro.launch.mesh",
+                                 fromlist=["train_rules"]).train_rules(
+                    seq_shard=True, fsdp=True),
+                hypothesis="SP cut t_mem 3.1x on yi and 3.7x on mamba by "
+                           "sharding residual-stream activations over the "
+                           "model axis; the MoE dispatch tensors already "
+                           "shard over (batch,expert) but the attention "
+                           "half of each layer should see the same win")
+    run_variant("moe_train", "v3_all", a, s,
+                cfg_mutate={"fsdp": True, "loss_chunk": 512,
+                            "moe": dataclasses.replace(
+                                __import__("repro.configs",
+                                           fromlist=["ARCHS"]).ARCHS[a].moe,
+                                capacity_factor=1.0)},
+                hypothesis="combine v1+v2")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", default="all",
+                    choices=("all", "yi", "mamba", "moe"))
+    args = ap.parse_args()
+    if args.cell in ("all", "yi"):
+        climb_yi()
+    if args.cell in ("all", "mamba"):
+        climb_mamba()
+    if args.cell in ("all", "moe"):
+        climb_moe()
+
+
+if __name__ == "__main__":
+    main()

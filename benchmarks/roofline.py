@@ -1,0 +1,178 @@
+"""Roofline analysis from the dry-run artifacts (§Roofline deliverable).
+
+Per (arch × shape) on the single-pod 16×16 mesh:
+
+    compute term    = HLO_FLOPs_per_dev / peak_FLOPs          [s]
+    memory term     = HLO_bytes_per_dev / HBM_bw              [s]
+    collective term = coll_bytes_per_dev / link_bw            [s]
+
+(the dry-run records *per-device* numbers from the post-SPMD compiled
+module, so no further division by chip count).  Also reports MODEL_FLOPS =
+6·N·D (dense) / 6·N_active·D (MoE) and the useful-compute ratio
+MODEL_FLOPS / (HLO_FLOPs·n_dev).
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI (per assignment).
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.configs import ARCHS, SHAPES_BY_NAME
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9       # bytes/s / chip
+LINK_BW = 50e9       # bytes/s / link (ICI)
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
+                           "dryrun")
+
+
+def active_params(cfg) -> float:
+    """Parameters touched per token (MoE: routed top-k + shared only)."""
+    D, L, V = cfg.d_model, cfg.n_layers, cfg.vocab
+    hd, H, K = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    emb = V * D * (1 if cfg.tied_embeddings else 2)
+    attn = D * (H * hd) * 2 + D * (K * hd) * 2
+    total = emb
+    if cfg.family in ("dense", "vlm"):
+        total += L * (attn + 3 * D * cfg.d_ff)
+    elif cfg.family == "moe":
+        m = cfg.moe
+        moe_ffn = 3 * D * m.d_expert * (m.top_k + m.n_shared)
+        dense_layers = 1 if m.layer0_dense else 0
+        total += dense_layers * (attn + 3 * D * cfg.d_ff)
+        total += (L - dense_layers) * (attn + moe_ffn)
+    elif cfg.family == "ssm":
+        s = cfg.ssm
+        di = s.expand * D
+        proj = D * (2 * di + 2 * s.n_groups * s.d_state + di // s.head_dim)
+        total += L * (proj + di * D)
+    elif cfg.family == "hybrid":
+        s = cfg.ssm
+        di = s.expand * D
+        proj = D * (2 * di + 2 * s.n_groups * s.d_state + di // s.head_dim)
+        total += L * (proj + di * D)
+        total += attn + 3 * D * cfg.hybrid.shared_d_ff  # one shared block
+    elif cfg.family == "audio":
+        enc = cfg.encdec.n_enc_layers * (attn + 2 * D * cfg.d_ff)
+        dec = L * (2 * attn + 2 * D * cfg.d_ff)
+        total += enc + dec
+    return float(total)
+
+
+def model_flops(cfg, shape) -> float:
+    """6·N_active·tokens (train); 2·N_active·tokens (inference fwd)."""
+    n = active_params(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    # decode: one token per sequence, plus KV-cache attention reads are
+    # memory- not flop-dominated; count the matmul flops only
+    return 2.0 * n * shape.global_batch
+
+
+def load_cells(mesh: str = "16x16") -> list[dict]:
+    cells = []
+    for f in sorted(glob.glob(os.path.join(RESULTS_DIR, "*.json"))):
+        with open(f) as fh:
+            rec = json.load(fh)
+        if rec.get("mesh") == mesh:
+            cells.append(rec)
+    return cells
+
+
+def analyse(rec: dict) -> dict:
+    cfg = ARCHS[rec["arch"]]
+    shape = SHAPES_BY_NAME[rec["shape"]]
+    t_comp = rec["flops_per_dev"] / PEAK_FLOPS
+    t_mem = rec["bytes_per_dev"] / HBM_BW
+    # lower bound: every resident byte (args+outputs+temps) touched once.
+    # The truth lies between t_mem_lb and t_mem — "bytes accessed" from the
+    # CPU-backend HLO ignores TPU fusion/VMEM reuse (see EXPERIMENTS.md
+    # §Roofline methodology).
+    unique = (rec["mem"]["argument_bytes"] + rec["mem"]["output_bytes"]
+              + rec["mem"]["temp_bytes"])
+    t_mem_lb = unique / HBM_BW
+    t_coll = rec["coll_bytes_per_dev"] / LINK_BW
+    dominant = max(("compute", t_comp), ("memory", t_mem),
+                   ("collective", t_coll), key=lambda kv: kv[1])[0]
+    mf = model_flops(cfg, shape)
+    hlo_total = rec["flops_per_dev"] * rec["n_devices"]
+    bound = max(t_comp, t_mem, t_coll)
+    return {
+        **{k: rec[k] for k in ("arch", "shape", "mesh")},
+        "t_compute_s": t_comp,
+        "t_memory_s": t_mem,
+        "t_memory_lb_s": t_mem_lb,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops": mf,
+        "useful_ratio": mf / hlo_total if hlo_total else 0.0,
+        # fraction of the roofline bound the dominant compute term uses:
+        # =1.0 when compute-bound (ideal); <1 when mem/coll dominate
+        "roofline_fraction": t_comp / bound if bound else 0.0,
+        "mem_gib_per_dev": (rec["mem"]["argument_bytes"]
+                            + rec["mem"]["temp_bytes"]) / 2 ** 30,
+    }
+
+
+def table(mesh: str = "16x16") -> list[dict]:
+    out = []
+    for rec in load_cells(mesh):
+        if rec.get("skipped"):
+            out.append({"arch": rec["arch"], "shape": rec["shape"],
+                        "mesh": rec["mesh"], "skipped": rec["reason"]})
+        elif not rec.get("ok"):
+            out.append({"arch": rec["arch"], "shape": rec["shape"],
+                        "mesh": rec["mesh"], "error": rec.get("error")})
+        elif "flops_per_dev" in rec:
+            out.append(analyse(rec))
+    return out
+
+
+def markdown(rows_: list[dict]) -> str:
+    hdr = ("| arch | shape | t_comp | t_mem | t_coll | dominant | "
+           "useful ratio | roofline frac | mem GiB/dev |")
+    sep = "|" + "---|" * 9
+    lines = [hdr, sep]
+    for r in rows_:
+        if "skipped" in r:
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                         f"skipped | — | — | — |")
+            continue
+        if "error" in r:
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                         f"ERROR | — | — | — |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']*1e3:.2f}ms | "
+            f"{r['t_memory_s']*1e3:.2f}ms | {r['t_collective_s']*1e3:.2f}ms "
+            f"| {r['dominant']} | {r['useful_ratio']:.2f} | "
+            f"{r['roofline_fraction']:.2f} | {r['mem_gib_per_dev']:.1f} |")
+    return "\n".join(lines)
+
+
+def run() -> list[tuple]:
+    rows_ = table()
+    out = []
+    for r in rows_:
+        if "skipped" in r or "error" in r:
+            st = "skipped" if "skipped" in r else "ERROR"
+            out.append((f"roofline_{r['arch']}_{r['shape']}", 0.0, st))
+            continue
+        bound = max(r["t_compute_s"], r["t_memory_s"], r["t_collective_s"])
+        out.append((f"roofline_{r['arch']}_{r['shape']}", bound * 1e6,
+                    f"dom={r['dominant']};useful={r['useful_ratio']:.2f};"
+                    f"frac={r['roofline_fraction']:.2f}"))
+    return out
+
+
+if __name__ == "__main__":
+    print(markdown(table()))

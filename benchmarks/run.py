@@ -1,0 +1,45 @@
+"""Benchmark runner: one function per paper table + the roofline report.
+
+Prints ``name,us_per_call,derived`` CSV rows (scaffold contract).
+Usage: PYTHONPATH=src python -m benchmarks.run [--only tN] [--skip-roofline]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="substring filter on table fn names (e.g. t4)")
+    ap.add_argument("--skip-roofline", action="store_true")
+    args = ap.parse_args()
+
+    from . import tables
+    from . import roofline
+
+    fns = list(tables.ALL_TABLES)
+    if not args.skip_roofline:
+        fns.append(roofline.run)
+    print("name,us_per_call,derived")
+    failures = 0
+    for fn in fns:
+        if args.only and args.only not in fn.__name__:
+            continue
+        try:
+            for name, us, derived in fn():
+                print(f"{name},{us:.2f},{derived}")
+                sys.stdout.flush()
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"{fn.__name__},NaN,ERROR:{e!r}")
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

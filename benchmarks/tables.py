@@ -1,0 +1,371 @@
+"""One benchmark per paper table (T1–T10).
+
+The test machine is a single CPU core, so JVM-thread speedup curves cannot
+be re-measured; what each benchmark reports instead is stated explicitly in
+its ``derived`` column:
+
+* the *sequential-oracle vs compiled-network* speedup (the same user methods
+  through ``run_sequential`` vs the fused SPMD program — the honest
+  single-machine analogue of the paper's parallelisation),
+* worker/partition-count result-invariance (the paper's correctness claim),
+* structural metrics (comm/compute ratios, code-length) where the paper's
+  number is hardware-bound.
+
+Paper-table cross-reference:
+  T1 Monte-Carlo π   T2/T3 Concordance GoP/PoG   T4 Jacobi   T5 N-body
+  T6 image stencil   T7 Goldbach                 T8 Mandelbrot multicore
+  T9 Mandelbrot cluster (multi-pod, derived)     T10 DSL code length
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (Collect, DataParallelCollect, Emit,
+                        GroupOfPipelineCollects, IterativeEngine, Network,
+                        OnePipelineCollect, StencilEngine,
+                        TaskParallelOfGroupCollects, Worker, build,
+                        run_sequential, rows)
+from ._timing import row, time_fn
+
+
+# --------------------------------------------------------------------------
+# T1: Monte-Carlo π
+# --------------------------------------------------------------------------
+
+def t1_mcpi() -> list:
+    ITER = 20_000
+    out = []
+
+    def create(i):
+        return jnp.asarray(i, jnp.uint32)
+
+    def within(seed):
+        pts = jax.random.uniform(jax.random.PRNGKey(seed), (ITER, 2))
+        return jnp.sum((pts ** 2).sum(-1) <= 1.0).astype(jnp.int32)
+
+    def coll(a, x):
+        return a + x
+
+    for instances in (256, 1024):
+        net = DataParallelCollect(
+            create=create, function=within, collector=coll,
+            init=jnp.asarray(0, jnp.int32),
+            finalise=lambda a: 4.0 * a / (instances * ITER),
+            workers=4, jit_combine=True)
+        cn = build(net)
+        batch = cn.make_batch(instances)
+        t_par = time_fn(lambda: cn.run(batch=batch))
+        t0 = time.perf_counter()
+        pi_seq = run_sequential(net, min(instances, 128))
+        t_seq = (time.perf_counter() - t0) * instances / min(instances, 128)
+        pi = float(cn.run(batch=batch)["collect"])
+        out.append(row(f"t1_mcpi_n{instances}", t_par,
+                       f"pi={pi:.4f};speedup_vs_oracle={t_seq/t_par:.1f}x"))
+    return out
+
+
+# --------------------------------------------------------------------------
+# T2/T3: Concordance as GoP and PoG
+# --------------------------------------------------------------------------
+
+def _concordance_net(pattern: str, N: int, ids: jnp.ndarray, V: int):
+    L = ids.shape[0]
+    csum = jnp.concatenate([jnp.zeros(1, jnp.int32), jnp.cumsum(ids)])
+
+    def create(n):
+        return jnp.asarray(n + 1, jnp.int32)
+
+    def value_list(n):
+        idx = jnp.arange(L)
+        return (n, jnp.where(idx + n <= L,
+                             csum[jnp.minimum(idx + n, L)] - csum[idx], -1))
+
+    def indices_map(item):
+        n, vals = item
+        hist = jnp.zeros(V * 16, jnp.int32).at[
+            jnp.clip(vals, 0, V * 16 - 1)].add((vals >= 0).astype(jnp.int32))
+        return (n, hist)
+
+    def words_map(item):
+        n, hist = item
+        return (n, jnp.sum(jnp.where(hist > 1, hist, 0)))
+
+    def coll(a, item):
+        return a + item[1]
+
+    kw = dict(create=create, stage_ops=[value_list, indices_map, words_map],
+              collector=coll, init=jnp.asarray(0, jnp.int32),
+              jit_combine=True)
+    if pattern == "gop":
+        return GroupOfPipelineCollects(groups=2, **kw)
+    if pattern == "pog":
+        return TaskParallelOfGroupCollects(workers=2, **kw)
+    return OnePipelineCollect(**kw)
+
+
+def t2_t3_concordance() -> list:
+    rng = np.random.default_rng(0)
+    V = 500
+    ids = jnp.asarray(rng.integers(0, V, 20_000), jnp.int32)  # synthetic text
+    out = []
+    results = {}
+    for name, pattern in (("t2_concordance_gop", "gop"),
+                          ("t3_concordance_pog", "pog")):
+        for N in (8, 16):
+            net = _concordance_net(pattern, N, ids, V)
+            cn = build(net)
+            batch = cn.make_batch(N)
+            t = time_fn(lambda: cn.run(batch=batch))
+            val = int(cn.run(batch=batch)["collect"])
+            results[(pattern, N)] = val
+            out.append(row(f"{name}_N{N}", t, f"repeats={val}"))
+    # refinement check in numbers: GoP ≡ PoG results
+    assert results[("gop", 8)] == results[("pog", 8)]
+    out.append(("t2t3_gop_equals_pog", 0.0,
+                f"identical_results={results[('gop', 8)]}"))
+    return out
+
+
+# --------------------------------------------------------------------------
+# T4: Jacobi
+# --------------------------------------------------------------------------
+
+def _jacobi_engine(n, nodes, iterations=50):
+    def partition(state, lo, size):
+        return {"A": rows(state["A"], lo, size),
+                "b": rows(state["b"], lo, size), "x": state["x"],
+                "lo": lo, "size": size}
+
+    def calculation(part):
+        idx = part["lo"] + jnp.arange(part["size"])
+        diag = jax.vmap(lambda r, j: r[j])(part["A"], idx)
+        return (part["b"] - part["A"] @ part["x"]
+                + diag * rows(part["x"], part["lo"], part["size"])) / diag
+
+    def update(state, new_x):
+        return {**state, "x": new_x}
+
+    return IterativeEngine(partition=partition, calculation=calculation,
+                           update=update, n_rows=n, nodes=nodes,
+                           iterations=iterations)
+
+
+def t4_jacobi() -> list:
+    rng = np.random.default_rng(0)
+    out = []
+    for n in (256, 1024):
+        A = rng.normal(size=(n, n)).astype(np.float32) + n * np.eye(
+            n, dtype=np.float32)
+        x_true = rng.normal(size=n).astype(np.float32)
+        state = {"A": jnp.asarray(A), "b": jnp.asarray(A @ x_true),
+                 "x": jnp.zeros(n, jnp.float32)}
+        base = None
+        for nodes in (1, 4):
+            eng = _jacobi_engine(n, nodes)
+            f = jax.jit(eng.apply)
+            t = time_fn(f, state)
+            err = float(jnp.max(jnp.abs(f(state)["x"] - x_true)))
+            if base is None:
+                base = err
+            out.append(row(f"t4_jacobi_n{n}_nodes{nodes}", t,
+                           f"err={err:.2e};partition_invariant="
+                           f"{abs(err-base) < 1e-5}"))
+    return out
+
+
+# --------------------------------------------------------------------------
+# T5: N-body
+# --------------------------------------------------------------------------
+
+def t5_nbody() -> list:
+    rng = np.random.default_rng(0)
+    out = []
+    dt = 1e-3
+
+    def make_engine(n, nodes, iterations=10):
+        def partition(state, lo, size):
+            return {"pos": state["pos"], "vel": rows(state["vel"], lo, size),
+                    "mass": state["mass"],
+                    "my_pos": rows(state["pos"], lo, size)}
+
+        def calculation(part):
+            diff = part["pos"][None] - part["my_pos"][:, None]
+            inv_r3 = (jnp.sum(diff * diff, -1) + 1e-3) ** -1.5
+            acc = jnp.einsum("ijk,ij,j->ik", diff, inv_r3, part["mass"])
+            return part["vel"] + dt * acc
+
+        def update(state, new_vel):
+            return {**state, "vel": new_vel,
+                    "pos": state["pos"] + dt * new_vel}
+
+        return IterativeEngine(partition=partition, calculation=calculation,
+                               update=update, n_rows=n, nodes=nodes,
+                               iterations=iterations)
+
+    for n in (512, 2048):
+        state = {"pos": jnp.asarray(rng.normal(size=(n, 3)), jnp.float32),
+                 "vel": jnp.zeros((n, 3), jnp.float32),
+                 "mass": jnp.asarray(rng.random(n) + .5, jnp.float32)}
+        for nodes in (1, 4):
+            f = jax.jit(make_engine(n, nodes).apply)
+            t = time_fn(f, state)
+            out.append(row(f"t5_nbody_n{n}_nodes{nodes}", t,
+                           f"interactions_per_s={n*n*10/t:.2e}"))
+    return out
+
+
+# --------------------------------------------------------------------------
+# T6: image stencil (3x3 vs 5x5 — paper reports 8–20% increase)
+# --------------------------------------------------------------------------
+
+def t6_stencil() -> list:
+    rng = np.random.default_rng(0)
+    out = []
+    from repro.kernels.stencil import ref as st_ref
+    for hw in ((512, 512), (1024, 1024)):
+        img = jnp.asarray(rng.normal(size=hw).astype(np.float32))
+        ts = {}
+        for k in (3, 5):
+            kern = jnp.asarray(rng.normal(size=(k, k)).astype(np.float32))
+            f = jax.jit(lambda im, kn=kern: st_ref.stencil2d(im, kn))
+            ts[k] = time_fn(f, img)
+            out.append(row(f"t6_stencil_{hw[0]}_{k}x{k}", ts[k],
+                           f"Mpix_per_s={hw[0]*hw[1]/ts[k]/1e6:.1f}"))
+        out.append((f"t6_stencil_{hw[0]}_5v3_ratio", 0.0,
+                    f"{ts[5]/ts[3]:.2f}x (paper: 1.08-1.20x)"))
+    return out
+
+
+# --------------------------------------------------------------------------
+# T7: Goldbach
+# --------------------------------------------------------------------------
+
+def t7_goldbach() -> list:
+    out = []
+    for max_n in (2_000, 10_000):
+        sieve = np.ones(max_n + 1, bool)
+        sieve[:2] = False
+        for p in range(2, int(max_n ** 0.5) + 1):
+            if sieve[p]:
+                sieve[p * p::p] = False
+        isp = jnp.asarray(sieve)
+
+        def check_chunk(lo, isp=isp, max_n=max_n):
+            es = lo + 2 * jnp.arange(64)
+            cand = jnp.arange(2, max_n + 1)
+
+            def ok(e):
+                return jnp.any(isp[cand] & isp[jnp.clip(e - cand, 0, max_n)]
+                               & (cand <= e // 2)) | (e > max_n)
+
+            return jax.vmap(ok)(es)
+
+        n_chunks = (max_n - 4) // 128 + 1
+        net = DataParallelCollect(
+            create=lambda i: jnp.asarray(4 + 128 * i, jnp.int32),
+            function=check_chunk,
+            collector=lambda a, x: jnp.logical_and(a, jnp.all(x)),
+            init=jnp.asarray(True), workers=4, jit_combine=True)
+        cn = build(net)
+        batch = cn.make_batch(n_chunks)
+        t = time_fn(lambda: cn.run(batch=batch))
+        holds = bool(cn.run(batch=batch)["collect"])
+        out.append(row(f"t7_goldbach_{max_n}", t, f"conjecture_holds={holds}"))
+        assert holds
+    return out
+
+
+# --------------------------------------------------------------------------
+# T8: Mandelbrot (multicore table)
+# --------------------------------------------------------------------------
+
+def t8_mandelbrot() -> list:
+    out = []
+    from repro.kernels.mandelbrot import ref as mb_ref
+    for width in (350, 700, 1400):
+        height = width * 4 // 7
+        f = jax.jit(lambda: mb_ref.mandelbrot(
+            height, width, x0=-2.5, y0=-1.0, pixel_delta=3.5 / width,
+            max_iterations=100))
+        t = time_fn(f)
+        out.append(row(f"t8_mandelbrot_w{width}", t,
+                       f"Mpix_per_s={height*width/t/1e6:.2f}"))
+    return out
+
+
+# --------------------------------------------------------------------------
+# T9: Mandelbrot cluster (multi-pod derived)
+# --------------------------------------------------------------------------
+
+def t9_mandelbrot_cluster() -> list:
+    """The cluster table cannot be wall-clocked on one core; derive the
+    node-scaling model from measured per-line compute cost vs the per-line
+    result bytes over the paper's 1GbE (and the TPU pod DCN for contrast)."""
+    from repro.kernels.mandelbrot import ref as mb_ref
+    width, escape = 5600, 1000
+    f = jax.jit(lambda: mb_ref.mandelbrot(
+        64, width, x0=-2.5, y0=-1.0, pixel_delta=3.5 / width,
+        max_iterations=escape))
+    t64 = time_fn(f)
+    t_line = t64 / 64
+    line_bytes = width * 4
+    out = [row("t9_cluster_perline", t_line, f"bytes_per_line={line_bytes}")]
+    for name, bw in (("1gbe", 125e6), ("dcn", 25e9)):
+        t_comm = line_bytes / bw
+        for nodes in (2, 4, 6):
+            # farm model: compute scales, per-line results serialise at host
+            t_node = t_line / nodes + t_comm
+            sp = t_line / t_node
+            out.append((f"t9_cluster_{name}_n{nodes}", 0.0,
+                        f"derived_speedup={sp:.2f} (paper {nodes}n: "
+                        f"{ {2: 1.88, 4: 3.52, 6: 4.73}[nodes] })"))
+    return out
+
+
+# --------------------------------------------------------------------------
+# T10: DSL code length
+# --------------------------------------------------------------------------
+
+def t10_dsl() -> list:
+    """Declarative-spec size vs what the builder materialises (the paper
+    counts added lines; we count processes+channels the user never wrote)."""
+    out = []
+
+    def measure(name, net, decl_lines):
+        built = build(net)
+        n_proc = len(net.procs)
+        n_chan = len(net.channels)
+        out.append((f"t10_dsl_{name}", 0.0,
+                    f"decl_lines={decl_lines};procs={n_proc};"
+                    f"channels={n_chan};builder_adds="
+                    f"{n_proc + n_chan - decl_lines}"))
+
+    def f(x):
+        return x
+
+    def coll(a, x):
+        return a
+
+    measure("mcpi_pattern",
+            DataParallelCollect(create=lambda i: i, function=f,
+                                collector=coll, workers=4, explicit=True),
+            decl_lines=1)
+    measure("concordance_gop",
+            GroupOfPipelineCollects(create=lambda i: i,
+                                    stage_ops=[f, f, f], collector=coll,
+                                    groups=2, explicit=True), decl_lines=1)
+    measure("concordance_pog",
+            TaskParallelOfGroupCollects(create=lambda i: i,
+                                        stage_ops=[f, f, f], collector=coll,
+                                        workers=2, explicit=True),
+            decl_lines=1)
+    return out
+
+
+ALL_TABLES = [t1_mcpi, t2_t3_concordance, t4_jacobi, t5_nbody, t6_stencil,
+              t7_goldbach, t8_mandelbrot, t9_mandelbrot_cluster, t10_dsl]

@@ -1,0 +1,70 @@
+"""Groovy Parallel Patterns, JAX edition — the paper's primary contribution.
+
+A process-oriented parallel-patterns library: declarative networks of
+terminals / functionals / connectors, verified statically (``verify``) and by
+a bounded CSP model checker (``csp``), executable both as a host-level
+sequential oracle (``run_sequential``) and as one compiled SPMD program
+(``build``).  Higher-level patterns and the shared-data engines mirror the
+paper's §5.
+"""
+
+from .builder import CompiledNetwork, StageLog, build, run_sequential
+from .dataflow import (
+    ChannelDef,
+    Distribution,
+    Kind,
+    Network,
+    NetworkError,
+    ProcessDef,
+    UT,
+)
+from .engine import (
+    IterativeEngine,
+    MultiCoreEngine,
+    Stencil,
+    StencilEngine,
+    rows,
+)
+from .patterns import (
+    DataParallelCollect,
+    GroupOfPipelineCollects,
+    OnePipelineCollect,
+    TaskParallelOfGroupCollects,
+)
+from .processes import (
+    AnyFanOne,
+    Collect,
+    CombineNto1,
+    Emit,
+    EmitWithLocal,
+    ListParOne,
+    ListSeqOne,
+    OneFanAny,
+    OneFanList,
+    OneParCastList,
+    OneSeqCastList,
+    Worker,
+)
+from . import netlog
+from .verify import VerificationReport, verify
+
+__all__ = [
+    # dataflow
+    "Network", "NetworkError", "ProcessDef", "ChannelDef", "Kind",
+    "Distribution", "UT",
+    # processes
+    "Emit", "EmitWithLocal", "Collect", "Worker",
+    "OneFanAny", "OneFanList", "OneSeqCastList", "OneParCastList",
+    "AnyFanOne", "ListSeqOne", "ListParOne", "CombineNto1",
+    # builder
+    "build", "run_sequential", "CompiledNetwork", "StageLog",
+    # verification
+    "verify", "VerificationReport",
+    # patterns
+    "DataParallelCollect", "OnePipelineCollect", "GroupOfPipelineCollects",
+    "TaskParallelOfGroupCollects",
+    # engines
+    "IterativeEngine", "Stencil", "MultiCoreEngine", "StencilEngine", "rows",
+    # visualisation (paper §13 future work)
+    "netlog",
+]

@@ -1,0 +1,59 @@
+"""Network-log visualisation — the paper's §13 "Further Work", delivered.
+
+The paper reports a prototype that visualises log output to locate
+bottlenecks, limited to specific patterns; here the visualisation is derived
+from the network itself (their stated goal: "deduced from the DSL
+specification"): stage timeline bars scaled by wall time, annotated with
+per-stage HLO cost, plus the network topology.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+from .builder import CompiledNetwork, StageLog
+from .dataflow import Network
+
+__all__ = ["timeline", "topology", "report"]
+
+_BAR = "█"
+
+
+def timeline(logs: Sequence[StageLog], width: int = 48) -> str:
+    """ASCII Gantt of per-stage wall time (longest bar = bottleneck)."""
+    if not logs:
+        return "(no logged stages — run with logged=True)"
+    total = sum(l.wall_s for l in logs) or 1e-12
+    peak = max(l.wall_s for l in logs) or 1e-12
+    lines = ["stage                     time      share  timeline"]
+    for l in logs:
+        n = max(1, round(width * l.wall_s / peak))
+        share = 100 * l.wall_s / total
+        lines.append(f"{l.stage:<24} {l.wall_s*1e3:8.2f}ms {share:5.1f}%  "
+                     f"{_BAR * n}")
+    worst = max(logs, key=lambda l: l.wall_s)
+    ai = ""
+    if worst.flops and worst.bytes_accessed:
+        ai = (f" (arithmetic intensity "
+              f"{worst.flops / worst.bytes_accessed:.2f} flop/B)")
+    lines.append(f"bottleneck: {worst.stage}{ai}")
+    return "\n".join(lines)
+
+
+def topology(net: Network) -> str:
+    """One-line-per-process network rendering, deduced from the DSL spec."""
+    lines = [f"network {net.name!r}:"]
+    for name in net.toposort():
+        p = net.procs[name]
+        succs = net.successors(name)
+        arrow = " -> " + ", ".join(succs) if succs else "  (sink)"
+        kind = p.kind.value
+        if p.distribution is not None:
+            kind += f"/{p.distribution.value}"
+        lines.append(f"  [{kind:<16}] {name}{arrow}")
+    return "\n".join(lines)
+
+
+def report(cn: CompiledNetwork) -> str:
+    """Full §8-style report: topology + timeline of the last logged run."""
+    return topology(cn.net) + "\n\n" + timeline(cn.logs)

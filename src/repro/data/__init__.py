@@ -1,0 +1,3 @@
+"""Data substrate: the Emit terminal at framework scale."""
+
+from .pipeline import Prefetcher, SyntheticLM, TokenSource, shard_batch  # noqa: F401

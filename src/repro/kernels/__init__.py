@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+Each kernel subpackage is ``kernel.py`` (pl.pallas_call + BlockSpec VMEM
+tiling), ``ops.py`` (padded/jit public wrapper), ``ref.py`` (pure-jnp
+oracle).  On this CPU-only container kernels are validated with
+``interpret=True``; on TPU pass ``interpret=False``.
+
+  stencil/          2D image/Jacobi stencil (paper §6.4 StencilEngine hotspot)
+  flash_attention/  causal GQA flash attention (LM prefill/train hotspot)
+  ssd_scan/         Mamba2 SSD chunked scan (mamba2 / zamba2 archs)
+  mandelbrot/       escape-time fractal (paper §6.6 farm workload)
+  moe_gmm/          grouped expert matmul (MoE archs)
+"""

@@ -1,0 +1,2 @@
+"""flash_attention kernel package."""
+from . import ops, ref  # noqa: F401

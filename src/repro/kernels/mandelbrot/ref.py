@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the Mandelbrot escape-time computation (paper §6.6)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mandelbrot(height: int, width: int, *, x0: float = -2.25,
+               y0: float = -1.25, pixel_delta: float = 0.005,
+               max_iterations: int = 100) -> jax.Array:
+    """Iteration counts (escape value = max_iterations), int32 (H, W)."""
+    ys = y0 + pixel_delta * jnp.arange(height, dtype=jnp.float32)
+    xs = x0 + pixel_delta * jnp.arange(width, dtype=jnp.float32)
+    cr = jnp.broadcast_to(xs[None, :], (height, width))
+    ci = jnp.broadcast_to(ys[:, None], (height, width))
+
+    def body(_, st):
+        zr, zi, cnt = st
+        zr2, zi2 = zr * zr, zi * zi
+        inside = (zr2 + zi2) <= 4.0
+        zr, zi = jnp.where(inside, zr2 - zi2 + cr, zr), \
+            jnp.where(inside, 2.0 * zr * zi + ci, zi)
+        return zr, zi, cnt + inside.astype(jnp.int32)
+
+    z0 = jnp.zeros((height, width), jnp.float32)
+    _, _, cnt = jax.lax.fori_loop(
+        0, max_iterations, body, (z0, z0, jnp.zeros((height, width),
+                                                    jnp.int32)))
+    return cnt

@@ -1,0 +1,2 @@
+"""moe_gmm kernel package."""
+from . import ops, ref  # noqa: F401

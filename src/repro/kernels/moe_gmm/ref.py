@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the grouped expert matmul (MoE dispatch hotspot)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gmm(x: jax.Array, expert_of: jax.Array, w: jax.Array) -> jax.Array:
+    """x: (T, D) tokens; expert_of: (T,) int expert id per token;
+    w: (E, D, F).  Returns (T, F): each token through its own expert."""
+    we = jnp.take(w, expert_of, axis=0)  # (T, D, F) — oracle only; O(T·D·F) mem
+    return jnp.einsum("td,tdf->tf", x.astype(jnp.float32),
+                      we.astype(jnp.float32)).astype(x.dtype)
+
+
+def gmm_tiled_ref(x: jax.Array, tile_expert: jax.Array, w: jax.Array,
+                  tile_m: int) -> jax.Array:
+    """Tile-aligned contract used by the Pallas kernel: tokens are sorted and
+    group-padded so tile i belongs entirely to expert tile_expert[i]."""
+    T, D = x.shape
+    n = T // tile_m
+    xt = x.reshape(n, tile_m, D)
+    wt = jnp.take(w, tile_expert, axis=0)  # (n, D, F)
+    y = jnp.einsum("nmd,ndf->nmf", xt.astype(jnp.float32),
+                   wt.astype(jnp.float32))
+    return y.reshape(T, -1).astype(x.dtype)

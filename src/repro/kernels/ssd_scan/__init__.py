@@ -1,0 +1,2 @@
+"""ssd_scan kernel package."""
+from . import ops, ref  # noqa: F401

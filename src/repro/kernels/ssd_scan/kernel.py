@@ -1,0 +1,96 @@
+"""Pallas TPU kernel for the Mamba2 SSD chunked scan.
+
+TPU adaptation: the Mamba2 paper's Triton kernel parallelises chunks across
+thread-blocks and carries states through global memory between kernel
+launches.  On TPU the sequential-innermost-grid-axis property gives the
+inter-chunk recurrence for free: grid = (BH, S/chunk) with the running state
+``h`` (N × P, f32) living in VMEM scratch across the chunk axis — one kernel,
+no HBM round-trip for the state, and the three chunk matmuls
+(C·Bᵀ "attention", W·x, and the state update Bᵀ·(w⊙x)) all hit the MXU.
+
+Log-decays are pre-computed by ops.py as ``a = dt * A_head`` (≤ 0), so all
+exponentials are of non-positive numbers — numerically safe by construction.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, h_ref, *,
+                chunk: int):
+    ic = pl.program_id(1)
+
+    @pl.when(ic == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    x = x_ref[0].astype(jnp.float32)   # (L, P)
+    dt = dt_ref[0].astype(jnp.float32)  # (L,)
+    a = a_ref[0].astype(jnp.float32)   # (L,) log-decays (≤ 0)
+    B = b_ref[0].astype(jnp.float32)   # (L, N)
+    C = c_ref[0].astype(jnp.float32)   # (L, N)
+    L = chunk
+
+    cum = jnp.cumsum(a)        # inclusive log-decay prefix
+    total = cum[-1]
+
+    # intra-chunk (the "duality" attention form)
+    G = jax.lax.dot_general(C, B, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (L, L)
+    decay = jnp.exp(cum[:, None] - cum[None, :])
+    ti = jax.lax.broadcasted_iota(jnp.int32, (L, L), 0)
+    si = jax.lax.broadcasted_iota(jnp.int32, (L, L), 1)
+    W = jnp.where(si <= ti, G * decay, 0.0) * dt[None, :]
+    y = jax.lax.dot_general(W, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (L, P)
+
+    # inter-chunk contribution from the carried state
+    h = h_ref[...]  # (N, P)
+    Cw = C * jnp.exp(cum)[:, None]
+    y = y + jax.lax.dot_general(Cw, h, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+
+    # state update: h' = exp(total) h + Bᵀ (w ⊙ x)
+    w_state = (jnp.exp(total - cum) * dt)[:, None]  # (L, 1)
+    Bw = B * w_state
+    h_ref[...] = jnp.exp(total) * h + jax.lax.dot_general(
+        Bw, x, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    y_ref[0, ...] = y.astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x: jax.Array, dt: jax.Array, a: jax.Array, B: jax.Array,
+             C: jax.Array, *, chunk: int = 128,
+             interpret: bool = False) -> jax.Array:
+    """x: (BH, S, P); dt, a: (BH, S); B, C: (BH, S, N).  S % chunk == 0.
+
+    ``a`` are per-step log-decays (dt * A_head, ≤ 0).  Returns y: (BH, S, P).
+    """
+    BH, S, P = x.shape
+    N = B.shape[-1]
+    assert S % chunk == 0, (S, chunk)
+    grid = (BH, S // chunk)
+    kern = functools.partial(_ssd_kernel, chunk=chunk)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, P), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk), lambda b, c: (b, c)),
+            pl.BlockSpec((1, chunk), lambda b, c: (b, c)),
+            pl.BlockSpec((1, chunk, N), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, c: (b, c, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, P), lambda b, c: (b, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, P), x.dtype),
+        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, a, B, C)

@@ -1,0 +1,99 @@
+"""Pure-jnp oracles for the Mamba2 SSD (state-space duality) scan.
+
+``ssd_naive`` — the literal per-step recurrence (gold oracle):
+
+    h_t = exp(dt_t * A) * h_{t-1} + dt_t * B_t ⊗ x_t        h: (N, P)
+    y_t = C_t · h_t
+
+``ssd_chunked`` — the SSD chunked form (intra-chunk dual "attention" matmuls
++ inter-chunk state recurrence), pure jnp; this is the model's default path
+and is algebraically identical to ``ssd_naive``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_naive(x, dt, A, B, C):
+    """x: (BH, S, P); dt: (BH, S); A: (BH,) (negative); B, C: (BH, S, N).
+
+    Returns y: (BH, S, P), final state h: (BH, N, P)."""
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Bf = B.astype(jnp.float32)
+    Cf = C.astype(jnp.float32)
+
+    def per_seq(xs, dts, a, Bs, Cs):
+        N = Bs.shape[-1]
+        P = xs.shape[-1]
+
+        def step(h, inp):
+            xt, dtt, bt, ct = inp
+            da = jnp.exp(dtt * a)
+            h = da * h + dtt * jnp.outer(bt, xt)
+            y = ct @ h
+            return h, y
+
+        h0 = jnp.zeros((N, P), jnp.float32)
+        hT, ys = jax.lax.scan(step, h0, (xs, dts, Bs, Cs))
+        return ys, hT
+
+    ys, hT = jax.vmap(per_seq)(xf, dtf, A.astype(jnp.float32), Bf, Cf)
+    return ys.astype(x.dtype), hT
+
+
+def ssd_chunked(x, dt, A, B, C, *, chunk: int = 64):
+    """Chunked SSD, same contract as ssd_naive.  S % chunk == 0 required."""
+    BH, S, P = x.shape
+    N = B.shape[-1]
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+    xf = x.astype(jnp.float32).reshape(BH, nc, chunk, P)
+    dtf = dt.astype(jnp.float32).reshape(BH, nc, chunk)
+    Bf = B.astype(jnp.float32).reshape(BH, nc, chunk, N)
+    Cf = C.astype(jnp.float32).reshape(BH, nc, chunk, N)
+    a = dtf * A.astype(jnp.float32)[:, None, None]  # (BH, nc, L) log-decays
+    cum = jnp.cumsum(a, axis=-1)  # inclusive
+    total = cum[..., -1]
+
+    # intra-chunk: y[t] = sum_{s<=t} exp(cum t - cum s) dt_s (C_t·B_s) x_s
+    G = jnp.einsum("bctn,bcsn->bcts", Cf, Bf)
+    decay = jnp.exp(cum[..., :, None] - cum[..., None, :])
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    W = jnp.where(mask, G * decay, 0.0) * dtf[..., None, :]
+    y_intra = jnp.einsum("bcts,bcsp->bctp", W, xf)
+
+    # chunk state contributions: Z_c = sum_s exp(total - cum s) dt_s B_s⊗x_s
+    w_state = jnp.exp(total[..., None] - cum) * dtf  # (BH, nc, L)
+    Z = jnp.einsum("bcsn,bcs,bcsp->bcnp", Bf, w_state, xf)
+
+    # inter-chunk recurrence over nc: h_c = exp(total_c) h_{c-1} + Z_c
+    def step(h, inp):
+        tot, z = inp
+        h_out = h  # state *entering* the chunk
+        h = jnp.exp(tot)[:, None, None] * h + z
+        return h, h_out
+
+    h0 = jnp.zeros((BH, N, P), jnp.float32)
+    hT, h_in = jax.lax.scan(
+        step, h0, (jnp.moveaxis(total, 1, 0), jnp.moveaxis(Z, 1, 0)))
+    h_in = jnp.moveaxis(h_in, 0, 1)  # (BH, nc, N, P)
+
+    # inter-chunk output: y[t] += (C_t * exp(cum t)) · h_in
+    y_inter = jnp.einsum("bctn,bct,bcnp->bctp", Cf, jnp.exp(cum), h_in)
+    y = (y_intra + y_inter).reshape(BH, S, P)
+    return y.astype(x.dtype), hT
+
+
+def ssd_decode_step(h, x_t, dt_t, A, B_t, C_t):
+    """Single recurrent decode step.  h: (BH, N, P); x_t: (BH, P);
+    dt_t: (BH,); B_t, C_t: (BH, N).  Returns (y_t, h_new)."""
+    da = jnp.exp(dt_t.astype(jnp.float32) * A.astype(jnp.float32))  # (BH,)
+    h_new = (da[:, None, None] * h
+             + dt_t[:, None, None].astype(jnp.float32)
+             * jnp.einsum("bn,bp->bnp", B_t.astype(jnp.float32),
+                          x_t.astype(jnp.float32)))
+    y = jnp.einsum("bn,bnp->bp", C_t.astype(jnp.float32), h_new)
+    return y.astype(x_t.dtype), h_new

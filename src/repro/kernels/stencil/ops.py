@@ -1,0 +1,33 @@
+"""Public stencil op: pads to tile alignment, dispatches Pallas vs ref.
+
+``interpret=True`` runs the Pallas kernel body in Python on CPU (the
+validation mode for this container); on a real TPU pass ``interpret=False``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .kernel import stencil2d_pallas, taps_of
+
+
+def stencil2d(img: jax.Array, kernel: jax.Array, *, tile_h: int = 128,
+              interpret: bool = True, use_pallas: bool = True) -> jax.Array:
+    """2D same-padding stencil. Pallas path pads H to a tile multiple."""
+    if not use_pallas:
+        return ref.stencil2d(img, kernel)
+    H, W = img.shape
+    taps = taps_of(kernel)
+    halo = len(taps) // 2
+    th = min(tile_h, H) if H % tile_h else tile_h
+    if H % th:
+        pad = th - H % th
+        img_p = jnp.pad(img, ((0, pad), (0, 0)))
+        out = stencil2d_pallas(img_p, taps=taps, tile_h=th,
+                               interpret=interpret)
+        # zero row padding bleeds at most `halo` rows past H; crop restores
+        # same-padding semantics exactly because ref also zero-pads.
+        return out[:H]
+    return stencil2d_pallas(img, taps=taps, tile_h=th, interpret=interpret)

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the 2D stencil (paper §6.4 image kernels, §6.2 Jacobi).
+
+Zero-padded ("same") 2D cross-correlation with a small square kernel —
+exactly what the paper's StencilEngine applies per image partition.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def stencil2d(img: jnp.ndarray, kernel: jnp.ndarray) -> jnp.ndarray:
+    """``img`` (H, W); ``kernel`` (k, k) with odd k.  Returns (H, W)."""
+    k = kernel.shape[0]
+    assert kernel.shape == (k, k) and k % 2 == 1, "square odd kernel required"
+    h = k // 2
+    padded = jnp.pad(img, ((h, h), (h, h)))
+    out = jnp.zeros_like(img, dtype=jnp.promote_types(img.dtype, kernel.dtype))
+    H, W = img.shape
+    for dr in range(k):
+        for dc in range(k):
+            out = out + kernel[dr, dc] * padded[dr:dr + H, dc:dc + W]
+    return out.astype(img.dtype)

@@ -1,0 +1,54 @@
+"""Serving launcher: continuous-batching farm over a decode step.
+
+``python -m repro.launch.serve --arch qwen2-0.5b --reduced --requests 8``
+
+Submits synthetic requests with mixed prompt/generation lengths to the
+FarmScheduler (the GPP farm at request level) and reports throughput +
+slot-occupancy statistics.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--max-new", type=int, default=16)
+    args = ap.parse_args()
+
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import Model
+    from repro.serve import FarmScheduler, Request
+
+    cfg = get_config(args.arch, reduced=args.reduced)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    sched = FarmScheduler(model, params, n_slots=args.slots,
+                          max_len=args.max_len)
+    for i in range(args.requests):
+        sched.submit(Request(
+            rid=i,
+            prompt=[(7 * i + j) % (cfg.vocab - 1) + 1 for j in range(3 + i % 5)],
+            max_new=args.max_new // 2 + (i % args.max_new) // 2 + 1))
+    t0 = time.monotonic()
+    done = sched.run()
+    dt = time.monotonic() - t0
+    toks = sum(len(r.generated) for r in done)
+    print(f"[serve] {args.arch}: {len(done)} requests, {toks} tokens in "
+          f"{dt:.2f}s ({toks/dt:.1f} tok/s) over {sched.steps_run} farm steps "
+          f"(mean occupancy {toks/max(sched.steps_run,1):.2f}/{args.slots})")
+    for r in done[:4]:
+        print(f"  req {r.rid}: prompt {r.prompt} -> {r.generated}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""Model zoo: dense / MoE / SSM / hybrid / enc-dec / VLM backbones."""
+
+from .model import Model  # noqa: F401

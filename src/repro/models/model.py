@@ -1,0 +1,58 @@
+"""Family-dispatching model facade — one API for all 10 architectures."""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import encdec, transformer
+
+__all__ = ["Model"]
+
+
+class Model:
+    """Thin functional facade: ``Model(cfg)`` then pure methods."""
+
+    def __init__(self, cfg):
+        self.cfg = cfg
+        self._m = encdec if cfg.family == "audio" else transformer
+
+    # -- params -------------------------------------------------------------
+    def init(self, key, *, max_dec_len: int = 0):
+        if self.cfg.family == "audio":
+            return encdec.init_params(self.cfg, key,
+                                      max_dec_len=max_dec_len or 4096)
+        return transformer.init_params(self.cfg, key)
+
+    def param_count(self, params) -> int:
+        return transformer.param_count(params)
+
+    # -- training -----------------------------------------------------------
+    def forward(self, params, tokens, **kw):
+        return self._m.forward(self.cfg, params, tokens, **kw)
+
+    def loss_fn(self, params, batch, **kw):
+        return self._m.loss_fn(self.cfg, params, batch, **kw)
+
+    # -- serving ------------------------------------------------------------
+    def init_cache(self, batch: int, max_len: int):
+        return self._m.init_cache(self.cfg, batch, max_len)
+
+    def decode_step(self, params, cache, tokens, **kw):
+        return self._m.decode_step(self.cfg, params, cache, tokens, **kw)
+
+    def reset_slot(self, cache, slot: int):
+        assert self.cfg.family != "audio", "slot reuse: decoder-only families"
+        return transformer.reset_slot(self.cfg, cache, slot)
+
+    def prefill(self, params, tokens, max_len: int, frames=None):
+        if self.cfg.family == "audio":
+            return encdec.prefill(self.cfg, params, tokens, max_len,
+                                  frames=frames)
+        return transformer.prefill(self.cfg, params, tokens, max_len)
+
+    # -- sampling (greedy; serving substrate uses this) ----------------------
+    def greedy_token(self, logits: jax.Array) -> jax.Array:
+        return jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)

@@ -1,0 +1,117 @@
+"""Logical-axis sharding context.
+
+Models annotate activations with *logical* axes ("batch", "seq", "heads",
+"ff", ...); a :class:`ShardCtx` installed by the launcher maps those to mesh
+axes and applies ``with_sharding_constraint``.  With no context installed the
+annotations are no-ops, so the same model code runs single-device, in tests,
+and under any mesh — the GPP property that one process definition serves
+every topology (paper §11.7).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+from typing import Any, Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+__all__ = ["ShardingRules", "ShardCtx", "shard_ctx", "current_ctx", "act"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """logical activation/param axis → mesh axis (or tuple, or None)."""
+
+    batch: Any = ("pod", "data")
+    seq: Any = None          # "model" under sequence parallelism
+    heads: Any = "model"     # attention-head / mamba-head sharding (TP)
+    ff: Any = "model"        # FFN hidden
+    d: Any = None            # embedding/residual dim
+    vocab: Any = "model"     # embedding-table rows / logits cols
+    expert: Any = "model"    # MoE expert axis (EP)
+    kv_seq: Any = None       # KV-cache sequence (flash-decoding over chips)
+    stage: Any = None        # pipeline-parallel stage axis
+
+    def of(self, logical: Optional[str]):
+        if logical is None:
+            return None
+        return getattr(self, logical)
+
+
+@dataclasses.dataclass
+class ShardCtx:
+    mesh: Optional[jax.sharding.Mesh]
+    rules: ShardingRules = ShardingRules()
+
+    def spec(self, *logical: Optional[str]) -> P:
+        return P(*(self.rules.of(ax) for ax in logical))
+
+    def _filter(self, m):
+        """Drop mesh axes the current mesh doesn't have (e.g. no 'pod')."""
+        axes = m if isinstance(m, tuple) else (m,)
+        present = tuple(a for a in axes if a in self.mesh.shape)
+        if not present:
+            return None
+        return present if isinstance(m, tuple) else present[0]
+
+    def _axis_size(self, m) -> int:
+        axes = m if isinstance(m, tuple) else (m,)
+        n = 1
+        for a in axes:
+            n *= self.mesh.shape[a]
+        return n
+
+    def act(self, x, *logical: Optional[str]):
+        """Constrain activation ``x`` whose dims carry ``logical`` axes.
+
+        Mesh axes that do not divide the dim are dropped (e.g. 8 KV heads on
+        a 16-way model axis fall back to replication) so one model definition
+        serves every mesh — the GPP single-process-definition property.
+        """
+        if self.mesh is None or x is None:
+            return x
+        if x.ndim != len(logical):
+            raise ValueError(
+                f"act: rank {x.ndim} vs {len(logical)} logical axes")
+        spec_axes = []
+        used: set = set()  # a mesh axis may shard at most one dim
+        for dim, ax in zip(x.shape, logical):
+            m = self.rules.of(ax)
+            m = self._filter(m) if m is not None else None
+            if m is not None:
+                maxes = m if isinstance(m, tuple) else (m,)
+                if any(a in used for a in maxes):
+                    m = None
+            if m is None or dim % self._axis_size(m) != 0:
+                spec_axes.append(None)
+            else:
+                spec_axes.append(m)
+                used.update(m if isinstance(m, tuple) else (m,))
+        s = NamedSharding(self.mesh, P(*spec_axes))
+        return jax.lax.with_sharding_constraint(x, s)
+
+
+_NULL = ShardCtx(mesh=None)
+_ctx: contextvars.ContextVar[ShardCtx] = contextvars.ContextVar(
+    "repro_shard_ctx", default=_NULL)
+
+
+def current_ctx() -> ShardCtx:
+    return _ctx.get()
+
+
+@contextlib.contextmanager
+def shard_ctx(mesh, rules: ShardingRules = ShardingRules()):
+    tok = _ctx.set(ShardCtx(mesh=mesh, rules=rules))
+    try:
+        yield _ctx.get()
+    finally:
+        _ctx.reset(tok)
+
+
+def act(x, *logical: Optional[str]):
+    """Annotate activation dims with logical axes (no-op without a ctx)."""
+    return current_ctx().act(x, *logical)

@@ -1,0 +1,117 @@
+"""Connector-semantics collectives + gradient compression.
+
+The GPP connector taxonomy maps onto jax.lax collectives inside shard_map
+regions (DESIGN.md table).  These helpers name that mapping explicitly so
+distributed code reads like the paper's networks:
+
+    spread_fan   → (static block sharding — no op needed inside shard_map)
+    cast         → replication
+    merge        → all_gather   (ListSeqOne / AnyFanOne)
+    combine      → psum         (CombineNto1)
+
+Gradient compression (beyond-paper distributed-optimisation levers):
+
+* :func:`psum_bf16` — native bf16 all-reduce: 2× DP gradient traffic cut.
+* :func:`ring_allreduce_int8` — explicit ring reduce-scatter + all-gather
+  where every hop carries blockwise-int8 payloads + f32 scales: ~4× traffic
+  cut vs f32 (2× vs bf16), at the cost of per-hop quantisation error.
+  :func:`quantize_int8` error-feedback residue is returned to the caller for
+  EF-SGD style re-injection.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["merge_gather", "combine_psum", "psum_bf16", "quantize_int8",
+           "dequantize_int8", "ring_allreduce_int8"]
+
+
+def merge_gather(x, axis_name: str, axis: int = 0):
+    """GPP merge reducer (ListSeqOne): ordered all-gather along a mesh axis."""
+    return jax.lax.all_gather(x, axis_name, axis=axis, tiled=True)
+
+
+def combine_psum(x, axis_name: str):
+    """GPP CombineNto1 with an additive combine: psum."""
+    return jax.lax.psum(x, axis_name)
+
+
+def psum_bf16(x: jax.Array, axis_name: str) -> jax.Array:
+    """2×-compressed all-reduce: bf16 payload, f32 result."""
+    return jax.lax.psum(x.astype(jnp.bfloat16), axis_name).astype(x.dtype)
+
+
+def quantize_int8(x: jax.Array, block: int = 256):
+    """Blockwise symmetric int8 quantisation.  Returns (q, scales)."""
+    blocks = x.reshape(-1, block).astype(jnp.float32)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return (q.astype(jnp.float32) * scale).reshape(-1)
+
+
+def ring_allreduce_int8(x: jax.Array, axis_name: str, n_shards: int, *,
+                        block: int = 256,
+                        error: Optional[jax.Array] = None):
+    """Ring all-reduce with int8+scale payloads on every hop.
+
+    Must run inside shard_map with ``axis_name`` of size ``n_shards``.
+    ``x`` is this shard's local gradient (f32, any shape).  Returns
+    (reduced, new_error) where new_error is this shard's initial
+    quantisation residue (feed back into next step's gradient, EF-SGD).
+
+    Traffic per device: 2·(n-1)/n · |x| bytes of int8 (+1/block f32 scales)
+    vs 2·(n-1)/n · 4|x| for an f32 ring — a 4× cut.
+    """
+    shape = x.shape
+    n = x.size
+    padded = n + ((-n) % (n_shards * block))
+    flat = jnp.pad(x.reshape(-1).astype(jnp.float32), (0, padded - n))
+    if error is not None:
+        flat = flat + error
+    chunks = flat.reshape(n_shards, -1)  # chunk c destined to rank (c)
+    # initial quantisation (the only residue the caller must feed back)
+    q0, s0 = quantize_int8(chunks.reshape(-1), block)
+    deq0 = dequantize_int8(q0, s0)
+    new_error = flat - deq0
+    chunks = deq0.reshape(n_shards, -1)
+
+    idx = jax.lax.axis_index(axis_name)
+    perm_fwd = [(i, (i + 1) % n_shards) for i in range(n_shards)]
+
+    # reduce-scatter: after n-1 hops, rank r holds the full sum of chunk r.
+    def rs_step(i, acc):
+        # send the partial for chunk (idx - i) → neighbour accumulates
+        send_chunk_id = (idx - i) % n_shards
+        payload = acc[send_chunk_id]
+        q, s = quantize_int8(payload, block)
+        q_r = jax.lax.ppermute(q, axis_name, perm_fwd)
+        s_r = jax.lax.ppermute(s, axis_name, perm_fwd)
+        recv = dequantize_int8(q_r, s_r).reshape(payload.shape)
+        recv_chunk_id = (idx - i - 1) % n_shards
+        return acc.at[recv_chunk_id].add(recv)
+
+    acc = jax.lax.fori_loop(0, n_shards - 1, rs_step, chunks)
+
+    # all-gather: circulate each completed chunk n-1 hops.
+    def ag_step(i, acc):
+        send_chunk_id = (idx - i + 1) % n_shards
+        payload = acc[send_chunk_id]
+        q, s = quantize_int8(payload, block)
+        q_r = jax.lax.ppermute(q, axis_name, perm_fwd)
+        s_r = jax.lax.ppermute(s, axis_name, perm_fwd)
+        recv = dequantize_int8(q_r, s_r).reshape(payload.shape)
+        recv_chunk_id = (idx - i) % n_shards
+        return acc.at[recv_chunk_id].set(recv)
+
+    acc = jax.lax.fori_loop(0, n_shards - 1, ag_step, acc)
+    out = acc.reshape(-1)[:n].reshape(shape)
+    return out.astype(x.dtype), new_error.astype(jnp.float32)

@@ -1,0 +1,3 @@
+"""Serving substrate: continuous-batching farm scheduler + decode steps."""
+
+from .scheduler import FarmScheduler, Request  # noqa: F401

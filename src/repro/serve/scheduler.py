@@ -1,0 +1,114 @@
+"""Continuous-batching serving scheduler — the GPP farm at request level.
+
+This is where the paper's ``OneFanAny`` any-channel semantics survive
+verbatim on TPU: requests queue at the Emit side; the scheduler assigns each
+to the first *free slot* of the batched decode step (work-stealing ⇒
+straggler mitigation: a long generation never blocks new requests, they
+stream into slots as others finish); finished sequences flow to the Collect.
+
+The decode step itself is one jitted SPMD program over the slot batch with a
+per-row cache index and an ``advance`` mask, so slots at different depths
+coexist in one program — the farm lives at the host boundary exactly as
+DESIGN.md's mapping prescribes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import Model
+
+__all__ = ["Request", "FarmScheduler"]
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: list[int]
+    max_new: int = 16
+    generated: Optional[list[int]] = None  # filled by the scheduler
+
+
+class FarmScheduler:
+    """Slot-based continuous batching over a fixed decode batch."""
+
+    def __init__(self, model: Model, params, *, n_slots: int,
+                 max_len: int, eos_id: int = -1):
+        self.model = model
+        self.params = params
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self.cache = model.init_cache(n_slots, max_len)
+        self.slot_req: list[Optional[Request]] = [None] * n_slots
+        self.slot_left = np.zeros(n_slots, np.int32)
+        self.last_tok = np.zeros(n_slots, np.int32)
+
+        def _decode(params, cache, tokens, advance):
+            logits, new_cache = self.model.decode_step(
+                params, cache, tokens[:, None], advance=advance)
+            nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+            return nxt, new_cache
+
+        self._decode = jax.jit(_decode, donate_argnums=(1,))
+        self._reset = jax.jit(self.model.reset_slot, static_argnums=(1,),
+                              donate_argnums=(0,))
+        self.queue: list[Request] = []
+        self.done: list[Request] = []
+        self.steps_run = 0
+
+    # -- host-side farm ------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        req.generated = []
+        self.queue.append(req)
+
+    def _advance_only(self, s: int, token: int) -> None:
+        """Feed one prompt token into slot s's cache (others frozen)."""
+        toks = jnp.asarray(self.last_tok).at[s].set(token)
+        adv = jnp.zeros((self.n_slots,), bool).at[s].set(True)
+        _, self.cache = self._decode(self.params, self.cache, toks, adv)
+
+    def _fill_slots(self) -> None:
+        for s in range(self.n_slots):
+            if self.slot_req[s] is None and self.queue:
+                req = self.queue.pop(0)  # OneFanAny: first free slot takes it
+                self.slot_req[s] = req
+                self.cache = self._reset(self.cache, s)
+                for t in req.prompt[:-1]:
+                    self._advance_only(s, t)
+                self.last_tok[s] = req.prompt[-1]
+                self.slot_left[s] = req.max_new
+
+    def step(self) -> int:
+        """One farm step: fill free slots, decode all active ones."""
+        self._fill_slots()
+        active = [s for s in range(self.n_slots)
+                  if self.slot_req[s] is not None]
+        if not active:
+            return 0
+        adv = jnp.asarray(
+            np.array([r is not None for r in self.slot_req], bool))
+        nxt, self.cache = self._decode(
+            self.params, self.cache, jnp.asarray(self.last_tok), adv)
+        nxt = np.asarray(nxt)
+        self.steps_run += 1
+        for s in active:
+            tok = int(nxt[s])
+            req = self.slot_req[s]
+            req.generated.append(tok)
+            self.last_tok[s] = tok
+            self.slot_left[s] -= 1
+            if self.slot_left[s] <= 0 or tok == self.eos_id:
+                self.done.append(req)  # AnyFanOne → Collect
+                self.slot_req[s] = None
+        return len(active)
+
+    def run(self) -> list[Request]:
+        while self.queue or any(r is not None for r in self.slot_req):
+            self.step()
+        return self.done

@@ -1,0 +1,100 @@
+"""AdamW + schedules + global-norm clipping, as pure pytree transforms.
+
+No external optimiser dependency; the states are plain pytrees so they
+checkpoint/shard exactly like params (optimizer state inherits the param
+PartitionSpecs — fully sharded optimizer, ZeRO-style, for free under GSPMD).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamW", "cosine_warmup", "linear_warmup", "global_norm",
+           "clip_by_global_norm"]
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(x.astype(jnp.float32) ** 2) for x in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree_util.tree_map(
+        lambda x: (x.astype(jnp.float32) * scale).astype(x.dtype), tree), norm
+
+
+def cosine_warmup(peak_lr: float, warmup: int, total: int,
+                  floor: float = 0.1) -> Callable:
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * jnp.minimum(1.0, step / max(warmup, 1))
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = peak_lr * (floor + (1 - floor) * 0.5
+                         * (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(step < warmup, warm, cos)
+
+    return lr
+
+
+def linear_warmup(peak_lr: float, warmup: int) -> Callable:
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        return peak_lr * jnp.minimum(1.0, step / max(warmup, 1))
+
+    return lr
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: Callable | float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+
+    def _lr(self, step):
+        return self.lr(step) if callable(self.lr) else jnp.asarray(self.lr)
+
+    def init(self, params) -> dict:
+        zeros = lambda p: jax.tree_util.tree_map(  # noqa: E731
+            lambda x: jnp.zeros_like(x, dtype=jnp.float32), p)
+        return {"m": zeros(params), "v": zeros(params),
+                "step": jnp.asarray(0, jnp.int32)}
+
+    def update(self, grads, state, params):
+        """Returns (new_params, new_state, stats)."""
+        step = state["step"] + 1
+        if self.clip_norm is not None:
+            grads, gnorm = clip_by_global_norm(grads, self.clip_norm)
+        else:
+            gnorm = global_norm(grads)
+        b1, b2 = self.b1, self.b2
+        m = jax.tree_util.tree_map(
+            lambda mm, g: b1 * mm + (1 - b1) * g.astype(jnp.float32),
+            state["m"], grads)
+        v = jax.tree_util.tree_map(
+            lambda vv, g: b2 * vv + (1 - b2)
+            * jnp.square(g.astype(jnp.float32)), state["v"], grads)
+        sf = jnp.asarray(step, jnp.float32)
+        bc1 = 1 - b1 ** sf
+        bc2 = 1 - b2 ** sf
+        lr = self._lr(step)
+
+        def upd(p, mm, vv):
+            mhat = mm / bc1
+            vhat = vv / bc2
+            delta = mhat / (jnp.sqrt(vhat) + self.eps)
+            delta = delta + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+
+        new_params = jax.tree_util.tree_map(upd, params, m, v)
+        return new_params, {"m": m, "v": v, "step": step}, {
+            "grad_norm": gnorm, "lr": lr}

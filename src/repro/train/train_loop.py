@@ -1,0 +1,143 @@
+"""Training step + loop.
+
+``make_train_step`` builds the pure step function (grad-accumulation via an
+inner scan, mixed precision per config).  ``as_network`` exposes the same
+step as a GPP network — the paper's fundamental pattern with training stages
+as processes: Emit(data) → OneFanAny(batch axes) → Worker(fwd/bwd+update) →
+AnyFanOne → Collect(metrics) — which is what launch/train.py actually runs:
+the framework's training loop *is* a built pattern, not merely analogous to
+one.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (AnyFanOne, Collect, Emit, Network, OneFanAny, Worker,
+                        build)
+from repro.models import Model
+from .optimizer import AdamW
+
+__all__ = ["TrainState", "make_train_step", "as_network", "train"]
+
+
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt_state: Any
+    step: int = 0
+
+
+def make_train_step(model: Model, opt: AdamW, *,
+                    grad_accum: int = 1) -> Callable:
+    """Returns step(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    ``grad_accum > 1`` splits the global batch into microbatches along the
+    leading axis and accumulates grads in f32 with a lax.scan (memory lever).
+    """
+
+    def loss(params, batch):
+        return model.loss_fn(params, batch)
+
+    def step(params, opt_state, batch):
+        if grad_accum == 1:
+            (l, metrics), grads = jax.value_and_grad(
+                loss, has_aux=True)(params, batch)
+        else:
+            def micro(b):
+                return jax.tree_util.tree_map(
+                    lambda x: x.reshape(grad_accum, -1, *x.shape[1:]), b)
+
+            mb = micro(batch)
+
+            def body(acc, mbatch):
+                (l, m), g = jax.value_and_grad(loss, has_aux=True)(
+                    params, mbatch)
+                acc_g, acc_l = acc
+                acc_g = jax.tree_util.tree_map(
+                    lambda a, x: a + x.astype(jnp.float32), acc_g, g)
+                return (acc_g, acc_l + l), m
+
+            zero_g = jax.tree_util.tree_map(
+                lambda x: jnp.zeros_like(x, jnp.float32), params)
+            (g_sum, l_sum), ms = jax.lax.scan(
+                body, (zero_g, jnp.asarray(0.0, jnp.float32)), mb)
+            grads = jax.tree_util.tree_map(lambda x: x / grad_accum, g_sum)
+            l = l_sum / grad_accum
+            metrics = jax.tree_util.tree_map(lambda x: x[-1], ms)
+        new_params, new_opt, stats = opt.update(grads, opt_state, params)
+        metrics = dict(metrics, loss=l, **stats)
+        return new_params, new_opt, metrics
+
+    return step
+
+
+def as_network(model: Model, opt: AdamW, *, grad_accum: int = 1,
+               batch_axis: Any = ("pod", "data")) -> Network:
+    """The training step as a GPP network (declaration mirrors Listing 3).
+
+    The Worker carries (params, opt_state, batch) packed as the item; the
+    Collect keeps the latest metrics.  launch/train.py builds this with the
+    production mesh so the OneFanAny's axis is the (pod, data) batch axes.
+    """
+    step = make_train_step(model, opt, grad_accum=grad_accum)
+
+    def worker_fn(item):
+        params, opt_state, batch = item
+        p2, o2, metrics = step(params, opt_state, batch)
+        return (p2, o2, metrics)
+
+    net = Network(f"train[{model.cfg.name}]")
+    net.add(
+        Emit(lambda i: None, name="emit"),
+        OneFanAny(axis=batch_axis, name="spread"),
+        Worker(worker_fn, batched=True, name="train_step"),
+        AnyFanOne(name="merge"),
+        Collect(lambda acc, item: item[2], init=None, jit_combine=False,
+                name="collect"),
+    )
+    return net
+
+
+def train(model: Model, source, *, steps: int, opt: Optional[AdamW] = None,
+          mesh=None, grad_accum: int = 1, key=None,
+          checkpointer=None, ckpt_every: int = 0, params=None,
+          opt_state: Any = None, start_step: int = 0,
+          log_every: int = 10, on_step=None) -> dict:
+    """The end-to-end loop used by examples and launch/train.py.
+
+    Returns {"params", "opt_state", "history", "step"}."""
+    opt = opt or AdamW()
+    key = key if key is not None else jax.random.PRNGKey(0)
+    if params is None:
+        params = model.init(key)
+    if opt_state is None:
+        opt_state = opt.init(params)
+    step_fn = jax.jit(make_train_step(model, opt, grad_accum=grad_accum),
+                      donate_argnums=(0, 1))
+    history = []
+    t0 = time.monotonic()
+    for i in range(start_step, start_step + steps):
+        batch = source.create(i)
+        if mesh is not None:
+            from repro.data.pipeline import shard_batch
+            batch = shard_batch(batch, mesh)
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if on_step is not None:
+            on_step(i, params, opt_state, metrics)
+        if ckpt_every and checkpointer is not None \
+                and (i + 1) % ckpt_every == 0:
+            checkpointer.save(i + 1, {"params": params,
+                                      "opt_state": opt_state})
+        if (i - start_step) % log_every == 0 or i == start_step + steps - 1:
+            m = {k: float(v) for k, v in metrics.items()}
+            m["step"] = i
+            m["wall_s"] = time.monotonic() - t0
+            history.append(m)
+    return {"params": params, "opt_state": opt_state, "history": history,
+            "step": start_step + steps}

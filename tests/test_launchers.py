@@ -1,0 +1,41 @@
+"""CLI launcher integration tests (subprocess; reduced configs)."""
+
+import os
+import subprocess
+import sys
+
+_ENV = {**os.environ,
+        "PYTHONPATH": os.path.join(os.path.dirname(__file__), "..", "src")}
+
+
+def _run(args, timeout=560):
+    r = subprocess.run([sys.executable, "-m"] + args, capture_output=True,
+                       text=True, timeout=timeout, env=_ENV,
+                       cwd=os.path.join(os.path.dirname(__file__), ".."))
+    assert r.returncode == 0, r.stderr[-2000:]
+    return r.stdout
+
+
+def test_train_cli():
+    out = _run(["repro.launch.train", "--arch", "qwen2-0.5b", "--reduced",
+                "--steps", "8", "--batch", "4", "--seq", "32"])
+    assert "network train[qwen2-0.5b] verified" in out
+    assert "loss" in out
+
+
+def test_serve_cli():
+    out = _run(["repro.launch.serve", "--arch", "qwen2-0.5b", "--reduced",
+                "--requests", "4", "--slots", "2", "--max-new", "4"])
+    assert "4 requests" in out
+    assert "tok/s" in out
+
+
+def test_dryrun_cli_single_cell():
+    env = dict(_ENV)
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch",
+         "whisper-tiny", "--shape", "decode_32k", "--mesh", "single"],
+        capture_output=True, text=True, timeout=560, env=env,
+        cwd=os.path.join(os.path.dirname(__file__), "..")).stdout
+    assert "whisper-tiny × decode_32k × 16x16" in out
+    assert "flops/dev" in out
