@@ -2,13 +2,33 @@
 
 Prints ``name,us_per_call,derived`` CSV rows (scaffold contract).
 Usage: PYTHONPATH=src python -m benchmarks.run [--only tN] [--skip-roofline]
+       PYTHONPATH=src python -m benchmarks.run --smoke   # small stream bench,
+                                                         # writes BENCH_stream.json
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import traceback
+
+
+def _smoke() -> None:
+    """CI smoke lane: the stream benchmark at reduced size, archived as
+    BENCH_stream.json (the perf trajectory's first data point)."""
+    from . import stream as stream_bench
+
+    rows = stream_bench.run(smoke=True)
+    print("name,us_per_call,derived")
+    blob = []
+    for name, us, derived in rows:
+        print(f"{name},{us:.2f},{derived}")
+        blob.append({"name": name, "us_per_call": us, "derived": derived})
+    with open("BENCH_stream.json", "w") as f:
+        json.dump({"benchmark": "stream", "mode": "smoke", "rows": blob},
+                  f, indent=2)
+    print("wrote BENCH_stream.json", file=sys.stderr)
 
 
 def main() -> None:
@@ -16,12 +36,19 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="substring filter on table fn names (e.g. t4)")
     ap.add_argument("--skip-roofline", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="small stream benchmark only; writes BENCH_stream.json")
     args = ap.parse_args()
+
+    if args.smoke:
+        _smoke()
+        return
 
     from . import tables
     from . import roofline
+    from . import stream as stream_bench
 
-    fns = list(tables.ALL_TABLES)
+    fns = list(tables.ALL_TABLES) + [stream_bench.run]
     if not args.skip_roofline:
         fns.append(roofline.run)
     print("name,us_per_call,derived")

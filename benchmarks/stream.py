@@ -1,0 +1,114 @@
+"""``stream`` benchmark: fused vs logged vs streaming-microbatch wall-clock.
+
+The three execution modes of the *same* declarative network (paper P4 meets
+the streaming runtime):
+
+* ``fused``     — one jitted SPMD program over the whole batch,
+* ``logged``    — per-stage jit with host timing + blocking between stages
+                  (paper §8 observability mode),
+* ``streaming`` — per-stage jit, microbatch chunks, async dispatch, bounded
+                  in-flight depth (``CompiledNetwork.run_streaming``).
+
+Workloads: the Mandelbrot row-band farm (paper §6.6) and the two-engine
+image pipeline (paper §6.4).  The acceptance bar is streaming ≥ logged
+throughput — both pay the per-stage dispatch, but streaming overlaps chunks
+instead of blocking at every stage.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (Collect, DataParallelCollect, Emit, Network,
+                        StencilEngine, build)
+from ._timing import row, time_fn
+
+EDGE3 = jnp.asarray([[-1, -1, -1], [-1, 8, -1], [-1, -1, -1]], jnp.float32)
+
+
+def _mandelbrot_net(bands: int, H: int, W: int, iters: int):
+    """Row-band Mandelbrot farm (escape-time counts summed at the Collect)."""
+    band_h = H // bands
+    delta = 3.0 / W
+
+    def create(i):
+        return jnp.asarray(i * band_h, jnp.int32)
+
+    def render(row0):
+        ys = -1.15 + delta * (row0 + jnp.arange(band_h, dtype=jnp.float32))
+        xs = -2.2 + delta * jnp.arange(W, dtype=jnp.float32)
+        cr = jnp.broadcast_to(xs[None, :], (band_h, W))
+        ci = jnp.broadcast_to(ys[:, None], (band_h, W))
+
+        def body(_, st):
+            zr, zi, cnt = st
+            zr2, zi2 = zr * zr, zi * zi
+            inside = (zr2 + zi2) <= 4.0
+            return (jnp.where(inside, zr2 - zi2 + cr, zr),
+                    jnp.where(inside, 2 * zr * zi + ci, zi),
+                    cnt + inside.astype(jnp.int32))
+
+        z0 = jnp.zeros((band_h, W), jnp.float32)
+        _, _, cnt = jax.lax.fori_loop(
+            0, iters, body, (z0, z0, jnp.zeros((band_h, W), jnp.int32)))
+        return cnt
+
+    net = DataParallelCollect(
+        create=create, function=render,
+        collector=lambda acc, cnt: acc + jnp.sum(cnt),
+        init=jnp.asarray(0, jnp.int32), workers=4, jit_combine=True)
+    return net, bands
+
+
+def _image_net(images: int, size: int):
+    """Emit(images) → StencilEngine(grey) → StencilEngine(edge) → Collect."""
+    import numpy as np
+    rng = np.random.default_rng(0)
+    imgs = jnp.asarray(rng.normal(size=(images, size, size, 3)), jnp.float32)
+
+    def grey(img):
+        return img @ jnp.asarray([0.299, 0.587, 0.114], jnp.float32)
+
+    net = Network("image_stream")
+    net.add(
+        Emit(lambda i: imgs[i], name="emit"),
+        StencilEngine(functionMethod=grey, name="engine1"),
+        StencilEngine(convolutionData=EDGE3, use_pallas=False, name="engine2"),
+        Collect(lambda acc, x: acc + jnp.sum(jnp.abs(x)),
+                init=jnp.asarray(0.0), jit_combine=True, name="collect"),
+    )
+    return net, images
+
+
+def _bench_one(tag: str, net, instances: int, microbatch_size: int) -> list:
+    cn = build(net)
+    batch = cn.make_batch(instances)
+    out = []
+    fused = time_fn(lambda: cn.run(batch=batch))
+    logged = time_fn(lambda: cn.run(batch=batch, logged=True))
+    streamed = time_fn(lambda: cn.run_streaming(
+        batch=batch, microbatch_size=microbatch_size))
+    # correctness gate: the three modes agree exactly
+    a = cn.run(batch=batch)
+    b = cn.run_streaming(batch=batch, microbatch_size=microbatch_size)
+    same = all(bool(jnp.all(a[k] == b[k])) for k in a)
+    out.append(row(f"{tag}_fused", fused, ""))
+    out.append(row(f"{tag}_logged", logged, ""))
+    out.append(row(f"{tag}_streaming", streamed,
+                   f"vs_logged={logged / streamed:.2f}x "
+                   f"identical={same} {cn.stream_stats.summary()}"))
+    return out
+
+
+def run(*, smoke: bool = False) -> list:
+    if smoke:
+        cases = [("stream_mandelbrot", _mandelbrot_net(8, 64, 64, 40), 2),
+                 ("stream_image", _image_net(4, 48), 2)]
+    else:
+        cases = [("stream_mandelbrot", _mandelbrot_net(16, 256, 256, 100), 4),
+                 ("stream_image", _image_net(8, 128), 2)]
+    out = []
+    for tag, (net, instances), mb in cases:
+        out.extend(_bench_one(tag, net, instances, mb))
+    return out

@@ -51,10 +51,16 @@ def main():
     )
     verify(net)
     seq = run_sequential(net, args.images)["collector"]
-    par = build(net).run(instances=args.images)["collector"]
+    cn = build(net)
+    par = cn.run(instances=args.images)["collector"]
     same = all(np.allclose(a, b, atol=1e-3) for a, b in zip(seq, par))
     print(f"sequential == parallel ({args.images} images, {args.kernel}x"
           f"{args.kernel} kernel, pallas={args.pallas}): {same}")
+    # streaming microbatch execution: images flow through the engine chain
+    strm = cn.run_streaming(instances=args.images,
+                            microbatch_size=2)["collector"]
+    same_s = all(np.array_equal(a, b) for a, b in zip(seq, strm))
+    print(f"sequential == streaming: {same_s}  [{cn.stream_stats.summary()}]")
     # edges found where the bright square sits?
     edges = np.abs(par[0]) > 1.0
     print(f"edge pixels detected: {int(edges.sum())} "

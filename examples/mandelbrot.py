@@ -75,6 +75,14 @@ def main():
     seq_img = np.concatenate([seq_bands[k] for k in sorted(seq_bands)], 0)
     print(f"sequential == parallel: {bool((img == seq_img).all())}")
 
+    # streaming microbatch execution: bands flow through the farm in chunks
+    strm_bands = cn.run_streaming(instances=args.bands,
+                                  microbatch_size=max(args.bands // 4, 1)
+                                  )["collect"]
+    strm_img = np.concatenate([strm_bands[k] for k in sorted(strm_bands)], 0)
+    print(f"sequential == streaming: {bool((strm_img == seq_img).all())}  "
+          f"[{cn.stream_stats.summary()}]")
+
     if args.ascii:
         step = max(args.iters // (len(CHARS) - 1), 1)
         for r in range(0, H, 2):

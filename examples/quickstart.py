@@ -66,7 +66,14 @@ def main():
     print(f"[par] pi = {float(pi_par):.5f}  (identical: "
           f"{float(pi_seq) == float(pi_par)})")
 
-    # 4. integrated logging (paper §8) + visualisation (paper §13)
+    # 4. streaming microbatch execution (process-oriented throughput mode)
+    pi_strm = cn.run_streaming(instances=INSTANCES,
+                               microbatch_size=32)["collect"]
+    print(f"[stream] pi = {float(pi_strm):.5f}  (identical: "
+          f"{float(pi_seq) == float(pi_strm)})  "
+          f"[{cn.stream_stats.summary()}]")
+
+    # 5. integrated logging (paper §8) + visualisation (paper §13)
     cn.run(instances=INSTANCES, logged=True)
     from repro.core import netlog
     print(netlog.report(cn))

@@ -46,6 +46,9 @@ from .processes import (
     Worker,
 )
 from . import netlog
+from . import stream
+from .stream import (StreamExecutor, StreamStats, microbatch_plan,
+                     slice_microbatch, stack_microbatches)
 from .verify import VerificationReport, verify
 
 __all__ = [
@@ -65,6 +68,9 @@ __all__ = [
     "TaskParallelOfGroupCollects",
     # engines
     "IterativeEngine", "Stencil", "MultiCoreEngine", "StencilEngine", "rows",
+    # streaming microbatch runtime
+    "stream", "StreamExecutor", "StreamStats", "microbatch_plan",
+    "slice_microbatch", "stack_microbatches",
     # visualisation (paper §13 future work)
     "netlog",
 ]

@@ -1,0 +1,33 @@
+"""Version bridges for jax APIs that moved between 0.4.x and 0.5+.
+
+The repo targets current jax, but CI and air-gapped machines may carry an
+older wheel (e.g. 0.4.37).  Everything here is a thin alias so call sites
+read like modern jax.
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["shard_map", "pcast", "cost_analysis_dict"]
+
+try:  # jax >= 0.5: top-level export
+    shard_map = jax.shard_map
+except AttributeError:  # 0.4.x
+    from jax.experimental.shard_map import shard_map  # type: ignore
+
+
+def pcast(x, axes, to: str = "varying"):
+    """``jax.lax.pcast`` (the 0.7+ varying-axis marker).  Older jax tracks
+    shard_map varying-ness implicitly, so identity is the faithful fallback."""
+    fn = getattr(jax.lax, "pcast", None)
+    return x if fn is None else fn(x, axes, to=to)
+
+
+def cost_analysis_dict(compiled) -> dict:
+    """``Compiled.cost_analysis()`` returns a dict on new jax, a one-element
+    list of dicts on 0.4.x.  Normalise to a (possibly empty) dict."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca or {}

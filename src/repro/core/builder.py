@@ -154,6 +154,8 @@ class CompiledNetwork:
         self._step = None
         self._donate = donate_batch
         self.logs: list[StageLog] = []
+        self.stream_stats = None  # set by run_streaming
+        self._streams: dict = {}  # StreamExecutor cache (stage jits persist)
 
     # -- sharding helpers --------------------------------------------------
     def _constraint(self, x, axis, *, replicate: bool = False):
@@ -172,6 +174,63 @@ class CompiledNetwork:
             return jax.lax.with_sharding_constraint(leaf, s)
 
         return jax.tree_util.tree_map(_one, x)
+
+    # -- shared stage compilation ------------------------------------------
+    def stage_fn(self, name: str) -> Optional[Callable]:
+        """The pure traceable callable for one computational stage.
+
+        This is the single stage-compilation path shared by all three
+        execution modes: fused ``_trace`` inlines it into one program, logged
+        execution wraps it in a timed per-stage jit, and the streaming
+        microbatch executor (:mod:`repro.core.stream`) gives it a per-chunk
+        jit with buffer donation.  Structural stages (Emit, spreaders, MERGE
+        reducers) return None: they are wiring, realised by each mode.
+        """
+        p = self.net.procs[name]
+        if p.kind is Kind.WORKER:
+            if p.batched:
+                return lambda x: p.fn(x, *p.modifier)
+            return jax.vmap(lambda v: p.fn(v, *p.modifier))
+        if p.kind is Kind.ENGINE:
+            return lambda x: jax.lax.map(
+                lambda it: p.engine.apply(it, mesh=self.mesh), x)
+        if p.kind is Kind.REDUCER and p.distribution is Distribution.COMBINE:
+            def _comb(*vals):
+                acc = vals[0]
+                for v in vals[1:]:
+                    acc = p.fn(acc, v)
+                return _fold_batch(p.fn, acc)
+            return _comb
+        if p.kind is Kind.COLLECT and p.jit_combine:
+            return lambda x: _fold_batch(p.fn, x, init=p.init)
+        return None
+
+    def collect_carry_fn(self, name: str) -> Callable:
+        """Streaming variant of the Collect fold: ``(acc, chunk) -> acc``.
+
+        Folds a microbatch into the running accumulator in item order, so a
+        chain of carry folds over chunks is the *same* linear left fold as
+        the fused ``stage_fn`` over the whole batch — bit-identical results.
+        """
+        p = self.net.procs[name]
+        return lambda acc, x: _fold_batch(p.fn, x, init=acc)
+
+    def combine_carry_fn(self, name: str) -> Callable:
+        """Streaming variant of the COMBINE reducer: ``(acc, *chunks) -> acc``.
+
+        Same shape as ``collect_carry_fn``: elementwise across branches, then
+        a linear fold continued from the carried accumulator, preserving the
+        fused mode's exact float association across chunk boundaries.
+        """
+        p = self.net.procs[name]
+
+        def _carry(acc, *vals):
+            x = vals[0]
+            for v in vals[1:]:
+                x = p.fn(x, v)
+            return _fold_batch(p.fn, x, init=acc)
+
+        return _carry
 
     # -- tracing the DAG ---------------------------------------------------
     def _trace(self, batch, *, logged: bool = False):
@@ -208,33 +267,20 @@ class CompiledNetwork:
                             for _ in succs]
                 for j, s in enumerate(succs):
                     wires[(name, s)] = outs[j]
-            elif p.kind is Kind.WORKER:
+            elif p.kind in (Kind.WORKER, Kind.ENGINE):
+                # engines consume the stream one item at a time (lax.map =
+                # sequential scan; engine bodies hold their own iteration
+                # loops / shard_maps)
                 (x,) = _in(name)
                 with jax.named_scope(name):
-                    if p.batched:
-                        out = p.fn(x, *p.modifier)
-                    else:
-                        out = jax.vmap(lambda v: p.fn(v, *p.modifier))(x)
-                for s in succs:
-                    wires[(name, s)] = out
-            elif p.kind is Kind.ENGINE:
-                (x,) = _in(name)
-                with jax.named_scope(name):
-                    # engines consume the stream one item at a time
-                    # (lax.map = sequential scan; engine bodies hold their
-                    # own iteration loops / shard_maps)
-                    out = jax.lax.map(
-                        lambda v: p.engine.apply(v, mesh=self.mesh), x)
+                    out = self.stage_fn(name)(x)
                 for s in succs:
                     wires[(name, s)] = out
             elif p.kind is Kind.REDUCER:
                 xs = _in(name)
                 if p.distribution is Distribution.COMBINE:
                     # fold across branches, then across the batch axis
-                    acc = xs[0]
-                    for other in xs[1:]:
-                        acc = p.fn(acc, other)
-                    out = _fold_batch(p.fn, acc)
+                    out = self.stage_fn(name)(*xs)
                 else:  # MERGE
                     out = xs[0] if len(xs) == 1 else _fan_merge(xs)
                     if p.axis is not None:
@@ -245,8 +291,7 @@ class CompiledNetwork:
                 xs = _in(name)
                 x = xs[0] if len(xs) == 1 else _fan_merge(xs)
                 if p.jit_combine:
-                    folded = _fold_batch(p.fn, x, init=p.init)
-                    results[name] = folded
+                    results[name] = self.stage_fn(name)(x)
                 else:
                     host_streams[name] = x  # fold host-side after the step
         return results, host_streams
@@ -293,6 +338,40 @@ class CompiledNetwork:
             results, host_streams = self.step_fn()(batch)
         return self._finalise(results, host_streams)
 
+    def run_streaming(self, batch=None, *, instances: Optional[int] = None,
+                      microbatch_size: int = 8,
+                      max_in_flight: Optional[int] = None,
+                      lanes: Optional[int] = None):
+        """Execute as a pipeline of microbatches (paper's process-oriented
+        streaming, ``repro.core.stream``): items are split into
+        ``microbatch_size`` chunks, each stage is a per-stage jitted step with
+        buffer donation, chunks are dispatched asynchronously and only the
+        Collect synchronises.  ``max_in_flight`` bounds the number of
+        unretired chunks (defaults to the network's minimum positive channel
+        capacity); ``lanes`` sets the work-stealing lane count for OneFanAny.
+
+        Every Collect (and COMBINE reducer) folds chunks through a carried
+        accumulator in the same linear order as the whole-batch fold, so
+        results are bit-identical to logged mode always, and to fused
+        ``run`` / ``run_sequential`` up to XLA's whole-program reassociation
+        (observable only for COMBINE over non-exact floats; exact on every
+        paper network).  Scheduling telemetry lands in ``self.stream_stats``.
+        """
+        from .stream import StreamExecutor
+        if batch is None:
+            if instances is None:
+                raise NetworkError("run_streaming() needs batch= or instances=")
+            batch = self.make_batch(instances)
+        key = (microbatch_size, max_in_flight, lanes)
+        ex = self._streams.get(key)
+        if ex is None:
+            ex = self._streams[key] = StreamExecutor(
+                self, microbatch_size=microbatch_size,
+                max_in_flight=max_in_flight, lanes=lanes)
+        out = ex.run(batch)
+        self.stream_stats = ex.stats
+        return out
+
     def _finalise(self, results, host_streams):
         out: dict[str, Any] = {}
         for name, p in ((c.name, c) for c in self.net.collects()):
@@ -331,7 +410,8 @@ class CompiledNetwork:
             wall = time.monotonic() - t0
             flops = bytes_ = None
             try:
-                ca = jfn.lower(*args).compile().cost_analysis()
+                from ._jax_compat import cost_analysis_dict
+                ca = cost_analysis_dict(jfn.lower(*args).compile())
                 flops = ca.get("flops")
                 bytes_ = ca.get("bytes accessed")
             except Exception:  # cost analysis is best-effort
@@ -358,32 +438,15 @@ class CompiledNetwork:
                     wires[(name, s)] = self._constraint(
                         outs[j], p.axis,
                         replicate=p.distribution is not Distribution.FAN)
-            elif p.kind is Kind.WORKER:
+            elif p.kind in (Kind.WORKER, Kind.ENGINE):
                 (x,) = _in(name)
-                if p.batched:
-                    out = timed(name, "worker", lambda v: p.fn(v, *p.modifier), x)
-                else:
-                    out = timed(name, "worker",
-                                jax.vmap(lambda v: p.fn(v, *p.modifier)), x)
-                for s in succs:
-                    wires[(name, s)] = out
-            elif p.kind is Kind.ENGINE:
-                (x,) = _in(name)
-                out = timed(
-                    name, "engine",
-                    lambda v: jax.lax.map(
-                        lambda it: p.engine.apply(it, mesh=self.mesh), v), x)
+                out = timed(name, p.kind.value, self.stage_fn(name), x)
                 for s in succs:
                     wires[(name, s)] = out
             elif p.kind is Kind.REDUCER:
                 xs = _in(name)
                 if p.distribution is Distribution.COMBINE:
-                    def _comb(*vals):
-                        acc = vals[0]
-                        for v in vals[1:]:
-                            acc = p.fn(acc, v)
-                        return _fold_batch(p.fn, acc)
-                    out = timed(name, "reducer", _comb, *xs)
+                    out = timed(name, "reducer", self.stage_fn(name), *xs)
                 else:
                     out = xs[0] if len(xs) == 1 else _fan_merge(xs)
                 for s in succs:
@@ -392,9 +455,8 @@ class CompiledNetwork:
                 xs = _in(name)
                 x = xs[0] if len(xs) == 1 else _fan_merge(xs)
                 if p.jit_combine:
-                    results[name] = timed(
-                        name, "collect",
-                        lambda v: _fold_batch(p.fn, v, init=p.init), x)
+                    results[name] = timed(name, "collect",
+                                          self.stage_fn(name), x)
                 else:
                     host_streams[name] = x
         return results, host_streams

@@ -133,11 +133,20 @@ class ProcessDef:
 class ChannelDef:
     """A typed edge.  ``spec`` is an optional jax.ShapeDtypeStruct pytree used
     for early type checking; sharding is derived by the builder from the
-    adjacent connectors."""
+    adjacent connectors.
+
+    ``capacity`` is the CSP buffering depth of the channel: 0 means the
+    classic unbuffered rendezvous (the paper's synchronous channel), ``k > 0``
+    means up to ``k`` items may sit in the channel before the writer blocks.
+    Compiled fused execution ignores it (the whole batch is one value on the
+    wire); the streaming microbatch executor turns the network's minimum
+    positive capacity into its bounded in-flight depth (backpressure).
+    """
 
     src: str
     dst: str
     spec: Any = None
+    capacity: int = 0
 
 
 class NetworkError(ValueError):
@@ -177,12 +186,15 @@ class Network:
             self._tail = p.name
         return self
 
-    def connect(self, src: str, dst: str, spec: Any = None) -> "Network":
+    def connect(self, src: str, dst: str, spec: Any = None, *,
+                capacity: int = 0) -> "Network":
         self._check_mutable()
         for endpoint in (src, dst):
             if endpoint not in self.procs:
                 raise NetworkError(f"connect: unknown process {endpoint!r}")
-        self.channels.append(ChannelDef(src, dst, spec))
+        if capacity < 0:
+            raise NetworkError(f"connect: capacity must be >= 0, got {capacity}")
+        self.channels.append(ChannelDef(src, dst, spec, capacity))
         return self
 
     def branch(self, at: str) -> "Network":
@@ -214,6 +226,14 @@ class Network:
 
     def collects(self) -> list[ProcessDef]:
         return [p for p in self.procs.values() if p.kind is Kind.COLLECT]
+
+    def min_capacity(self) -> Optional[int]:
+        """Smallest positive channel capacity, or None if all channels are
+        unbuffered rendezvous.  The streaming executor uses this as its
+        bounded in-flight depth (the tightest buffer backpressures the
+        whole pipeline, exactly as in a CSP buffered-channel chain)."""
+        caps = [c.capacity for c in self.channels if c.capacity > 0]
+        return min(caps) if caps else None
 
     def toposort(self) -> list[str]:
         indeg = {n: 0 for n in self.procs}

@@ -31,6 +31,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from ._jax_compat import shard_map
 from .dataflow import Kind, ProcessDef
 
 __all__ = ["rows", "IterativeEngine", "Stencil", "MultiCoreEngine",
@@ -82,7 +83,7 @@ class IterativeEngine:
                 return self.calculation(part)
 
             spec_in = jax.tree_util.tree_map(lambda _: P(), state)
-            upd = jax.shard_map(
+            upd = shard_map(
                 shard_calc, mesh=mesh,
                 in_specs=(spec_in,), out_specs=P(axis),
             )(state)
@@ -165,7 +166,7 @@ class Stencil:
             out = self._conv_local(padded)
             return out[halo:-halo] if halo else out
 
-        return jax.shard_map(
+        return shard_map(
             shard_conv, mesh=mesh, in_specs=(P(axis),), out_specs=P(axis),
         )(img)
 

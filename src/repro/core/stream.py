@@ -1,0 +1,475 @@
+"""Streaming microbatch executor — the process-oriented half of the paper.
+
+The fused builder (:mod:`repro.core.builder`) materialises the whole item
+batch and runs the network as one SPMD program; the paper's GPP runtime
+instead *streams* items through Emit → Worker/Engine → Collect concurrently.
+This module recovers that throughput model on top of JAX's async dispatch:
+
+* the item batch is split into ``microbatch_size`` chunks
+  (:func:`microbatch_plan` — the last chunk may be smaller);
+* every computational stage is a per-stage jitted step (the builder's shared
+  ``stage_fn`` compilation path) with buffer donation when the input chunk
+  has no other reader;
+* chunks are dispatched through the stage DAG without blocking — JAX queues
+  the per-stage programs and overlaps host scheduling with device compute;
+  ``jax.block_until_ready`` happens only when a chunk *retires* at Collect;
+* the number of un-retired chunks in flight is bounded (backpressure): the
+  depth defaults to the network's minimum positive CSP channel capacity
+  (:meth:`Network.min_capacity`), so a tight channel throttles the whole
+  pipeline exactly as a buffered CSP chain would;
+* ``OneFanAny`` becomes work-stealing chunk assignment: each chunk goes to
+  the least-loaded lane (with explicit per-worker branches, the whole chunk
+  is routed down that branch), and the schedule is recorded in
+  :class:`StreamStats`.
+
+Correctness is anchored two ways.  Numerically, every Collect and COMBINE
+reducer folds chunks with a carried accumulator in item order — the same
+linear left fold as the whole-batch program, so results are bit-identical
+to logged (per-stage) execution always and to fused ``run`` up to XLA's
+whole-program reassociation (observable only for COMBINE over non-exact
+floats).  Formally, :func:`streaming_abstract_model` builds the
+CSP model of this schedule (chunks as items, lanes as concurrent stage
+chains) and :func:`repro.core.csp.trace_equivalent` checks it against
+:func:`synchronous_abstract_model` — the paper's §6.1.1 ``[T=`` refinement
+story applied to our own runtime.
+
+The microbatch *plan* is also the shared schedule for the mesh pipeline
+(:func:`repro.parallel.pipeline.pipeline_forward`), gradient accumulation
+(:func:`repro.train.train_loop.make_train_step`) and chunked prefill
+(:class:`repro.serve.scheduler.FarmScheduler`) via :func:`stack_microbatches`
+/ :func:`microbatch_plan`.
+"""
+
+from __future__ import annotations
+
+import copy
+import dataclasses
+from collections import deque
+from typing import Any, Optional
+
+import jax
+
+from .builder import CompiledNetwork, _fan_merge, _fan_split
+from .dataflow import Distribution, Kind, Network, NetworkError
+from .processes import (AnyFanOne, Collect, Emit, OneFanAny, Worker)
+
+__all__ = [
+    "microbatch_plan",
+    "slice_microbatch",
+    "stack_microbatches",
+    "StreamStats",
+    "StreamExecutor",
+    "streaming_abstract_model",
+    "synchronous_abstract_model",
+]
+
+_SKIP = object()  # sentinel: no chunk flowed down this branch
+
+
+# ==========================================================================
+# Microbatch planning (shared with pipeline / train / serve)
+# ==========================================================================
+
+def microbatch_plan(n_items: int, microbatch_size: int) -> list[tuple[int, int]]:
+    """``[(lo, hi), ...]`` half-open chunk bounds covering ``[0, n_items)``.
+
+    The last chunk may be smaller than ``microbatch_size``; callers that need
+    uniform chunks (e.g. the GPipe schedule) use :func:`stack_microbatches`.
+    """
+    if microbatch_size <= 0:
+        raise NetworkError(f"microbatch_size must be > 0, got {microbatch_size}")
+    if n_items < 0:
+        raise NetworkError(f"n_items must be >= 0, got {n_items}")
+    return [(lo, min(lo + microbatch_size, n_items))
+            for lo in range(0, n_items, microbatch_size)]
+
+
+def slice_microbatch(batch, lo: int, hi: int):
+    """Slice ``[lo, hi)`` off the leading axis of every leaf."""
+    return jax.tree_util.tree_map(lambda l: l[lo:hi], batch)
+
+
+def stack_microbatches(batch, n_micro: int):
+    """``(B, ...)`` leaves → ``(n_micro, B // n_micro, ...)``.
+
+    The uniform-chunk reshape of the same microbatch schedule, used where the
+    chunk axis must be scanned (pipeline stages, gradient accumulation).
+    """
+
+    def _one(leaf):
+        b = leaf.shape[0]
+        if n_micro <= 0 or b % n_micro:
+            raise NetworkError(
+                f"batch axis {b} not divisible into {n_micro} microbatches")
+        return leaf.reshape(n_micro, b // n_micro, *leaf.shape[1:])
+
+    return jax.tree_util.tree_map(_one, batch)
+
+
+# ==========================================================================
+# The executor
+# ==========================================================================
+
+@dataclasses.dataclass
+class StreamStats:
+    """Telemetry of one streaming run."""
+
+    n_items: int = 0
+    microbatch_size: int = 0
+    n_chunks: int = 0
+    depth: int = 0  # bounded in-flight chunks (backpressure)
+    lanes: int = 1
+    schedule: list = dataclasses.field(default_factory=list)  # (chunk, lane)
+    stalls: int = 0  # times the dispatcher blocked on backpressure
+
+    def summary(self) -> str:
+        return (f"stream: {self.n_chunks} chunks × ≤{self.microbatch_size} "
+                f"items, depth={self.depth}, lanes={self.lanes}, "
+                f"stalls={self.stalls}")
+
+
+class StreamExecutor:
+    """Run a :class:`CompiledNetwork` as a pipeline of microbatches."""
+
+    def __init__(self, compiled: CompiledNetwork, *, microbatch_size: int,
+                 max_in_flight: Optional[int] = None,
+                 lanes: Optional[int] = None):
+        self.cn = compiled
+        self.net = compiled.net
+        self.order = compiled.order
+        self.mb = microbatch_size
+        cap = self.net.min_capacity()
+        self.depth = max_in_flight if max_in_flight is not None else (cap or 2)
+        if self.depth < 1:
+            raise NetworkError(f"max_in_flight must be >= 1, got {self.depth}")
+        # work-stealing lane count: explicit OneFanAny branches define it,
+        # otherwise as many lanes as chunks can be in flight
+        if lanes is not None and lanes < 1:
+            raise NetworkError(f"lanes must be >= 1, got {lanes}")
+        fan_widths = [len(self.net.successors(n)) for n in self.order
+                      if self._is_fan_any(n)]
+        self.lanes = (lanes if lanes is not None
+                      else max(fan_widths + [self.depth]))
+        self._outstanding = [0] * self.lanes
+        self._combine_carry: dict = {}  # per-run COMBINE accumulators
+        self._jits: dict = {}  # persists across runs: stages compile once
+        # CPU has no buffer donation — requesting it only buys a UserWarning
+        # per stage per chunk
+        self._can_donate = jax.default_backend() != "cpu"
+        self.stats = StreamStats(microbatch_size=self.mb, depth=self.depth,
+                                 lanes=self.lanes)
+
+    def _is_fan_any(self, name: str) -> bool:
+        p = self.net.procs[name]
+        return (p.kind is Kind.SPREADER
+                and p.distribution is Distribution.FAN and p.fan_any)
+
+    # -- per-stage jit cache (shared stage_fn compilation path) ------------
+    def _stage_jit(self, name: str, donate: bool):
+        key = (name, donate)
+        if key not in self._jits:
+            fn = self.cn.stage_fn(name)
+            self._jits[key] = jax.jit(
+                fn, donate_argnums=(0,) if donate else ())
+        return self._jits[key]
+
+    def _carry_jit(self, name: str):
+        if ("carry", name) not in self._jits:
+            self._jits[("carry", name)] = jax.jit(
+                self.cn.collect_carry_fn(name))
+        return self._jits[("carry", name)]
+
+    def _combine_carry_jit(self, name: str):
+        if ("comb", name) not in self._jits:
+            self._jits[("comb", name)] = jax.jit(
+                self.cn.combine_carry_fn(name))
+        return self._jits[("comb", name)]
+
+    def _constrain(self, x, axis, *, replicate: bool = False):
+        """Eager analogue of the builder's sharding constraint (device_put —
+        with_sharding_constraint needs a trace context)."""
+        mesh = self.cn.mesh
+        if mesh is None:
+            return x
+        P = jax.sharding.PartitionSpec
+        spec = P() if (replicate or axis is None) else P(axis)
+
+        def _one(leaf):
+            if not hasattr(leaf, "ndim") or leaf.ndim == 0:
+                return leaf
+            return jax.device_put(leaf, jax.sharding.NamedSharding(mesh, spec))
+
+        return jax.tree_util.tree_map(_one, x)
+
+    # -- work stealing ------------------------------------------------------
+    def _steal_lane(self, chunk_idx: int) -> int:
+        """OneFanAny chunk assignment: the least-loaded lane takes the chunk
+        (any-channel semantics at microbatch granularity)."""
+        lane = min(range(self.lanes), key=self._outstanding.__getitem__)
+        self._outstanding[lane] += 1
+        self.stats.schedule.append((chunk_idx, lane))
+        return lane
+
+    def _check_fan_divisibility(self, plan) -> None:
+        """Fail fast (before any dispatch) when a heterogeneous FAN cannot
+        split some chunk evenly — and name the knob the caller must turn."""
+        for name in self.order:
+            p = self.net.procs[name]
+            succs = self.net.successors(name)
+            if (p.kind is Kind.SPREADER
+                    and p.distribution is Distribution.FAN
+                    and len(succs) > 1 and not p.fan_any
+                    and not self._homogeneous_fan(name)):
+                k = len(succs)
+                bad = sorted({hi - lo for lo, hi in plan if (hi - lo) % k})
+                if bad:
+                    raise NetworkError(
+                        f"streaming over heterogeneous FAN {name!r} "
+                        f"({k} branches) needs every microbatch divisible "
+                        f"by {k}; microbatch_size={self.mb} yields chunk "
+                        f"sizes {bad} — pick a microbatch_size (and item "
+                        f"count) divisible by {k}")
+
+    def _branch_signature(self, start: str):
+        """The tag sequence of the functional chain from ``start`` down to
+        the join node, or None when the branch itself branches (give up)."""
+        sig: list = []
+        node = start
+        while True:
+            p = self.net.procs[node]
+            if p.kind not in (Kind.WORKER, Kind.ENGINE):
+                sig.append(("join", node))
+                return tuple(sig)
+            # untagged workers count as unique (conservative: heterogeneous)
+            sig.append(p.tag if p.tag is not None else node)
+            succs = self.net.successors(node)
+            if len(succs) != 1:
+                return None
+            node = succs[0]
+
+    def _homogeneous_fan(self, name: str) -> bool:
+        """True when every branch of a FAN runs the *same* stage-tag chain to
+        the same join — the paper's CSPm Def 7 condition (workers of one
+        stage share one ``f``), so whole chunks may route to any single
+        branch without changing results."""
+        sigs = {self._branch_signature(s) for s in self.net.successors(name)}
+        return None not in sigs and len(sigs) == 1
+
+    # -- one chunk through the DAG ------------------------------------------
+    def _dispatch_chunk(self, ci: int, chunk, final: bool):
+        """Push one microbatch through every stage (async — no blocking).
+
+        Returns (collect_streams, host_streams, lanes_used): the values bound
+        for each Collect (pre-fold), the host-side collect streams, and the
+        work-stealing lanes this chunk occupies.
+        """
+        net = self.net
+        wires: dict[tuple[str, str], Any] = {}
+        collect_streams: dict[str, Any] = {}
+        host_streams: dict[str, Any] = {}
+        lanes_used: list[int] = []
+
+        def _pop_in(name: str) -> list:
+            return [wires.pop((q, name)) for q in net.predecessors(name)]
+
+        for name in self.order:
+            p = net.procs[name]
+            succs = net.successors(name)
+            if p.kind is Kind.EMIT:
+                for s in succs:
+                    wires[(name, s)] = chunk
+            elif p.kind is Kind.SPREADER:
+                (x,) = _pop_in(name)
+                if x is _SKIP:
+                    for s in succs:
+                        wires[(name, s)] = _SKIP
+                elif p.distribution is Distribution.FAN:
+                    if len(succs) == 1:
+                        wires[(name, succs[0])] = self._constrain(x, p.axis)
+                    elif p.fan_any or self._homogeneous_fan(name):
+                        # whole chunk to one branch: work-stealing lane for
+                        # OneFanAny, round-robin for a homogeneous OneFanList
+                        lane = (self._steal_lane(ci) if p.fan_any
+                                else ci % len(succs))
+                        if p.fan_any:
+                            lanes_used.append(lane)
+                        take = lane % len(succs)
+                        for j, s in enumerate(succs):
+                            wires[(name, s)] = (
+                                self._constrain(x, p.axis) if j == take
+                                else _SKIP)
+                    else:  # heterogeneous branches: item-level round-robin —
+                        # every chunk must split evenly or assignment drifts
+                        # from the sequential oracle's
+                        outs = _fan_split(x, len(succs))
+                        for j, s in enumerate(succs):
+                            wires[(name, s)] = self._constrain(outs[j], p.axis)
+                else:  # casts: every successor reads the same (immutable) value
+                    rep = self._constrain(x, None, replicate=True)
+                    for s in succs:
+                        wires[(name, s)] = rep
+            elif p.kind in (Kind.WORKER, Kind.ENGINE):
+                (x,) = _pop_in(name)
+                if x is _SKIP:
+                    out = _SKIP
+                else:
+                    # donate the input buffer iff nothing else still reads
+                    # it — neither a pending wire nor a stream already
+                    # handed to a Collect
+                    donate = self._can_donate and not any(
+                        v is x for v in (*wires.values(),
+                                         *collect_streams.values(),
+                                         *host_streams.values()))
+                    out = self._stage_jit(name, donate)(x)
+                for s in succs:
+                    wires[(name, s)] = out
+            elif p.kind is Kind.REDUCER:
+                xs = [v for v in _pop_in(name) if v is not _SKIP]
+                if p.distribution is Distribution.COMBINE:
+                    # carry the fold across chunks (same float association as
+                    # the fused whole-batch fold); downstream sees the final
+                    # accumulator once, on the last chunk — exactly fused
+                    carry = self._combine_carry.get(name)
+                    if carry is None:
+                        acc = self._stage_jit(name, False)(*xs)
+                    else:
+                        acc = self._combine_carry_jit(name)(carry, *xs)
+                    if final:
+                        self._combine_carry.pop(name, None)
+                        out = acc
+                    else:
+                        self._combine_carry[name] = acc
+                        out = _SKIP
+                else:  # MERGE
+                    out = xs[0] if len(xs) == 1 else _fan_merge(xs)
+                for s in succs:
+                    wires[(name, s)] = out
+            elif p.kind is Kind.COLLECT:
+                xs = [v for v in _pop_in(name) if v is not _SKIP]
+                if not xs:  # upstream COMBINE still accumulating
+                    continue
+                x = xs[0] if len(xs) == 1 else _fan_merge(xs)
+                if p.jit_combine:
+                    collect_streams[name] = x
+                else:
+                    host_streams[name] = x
+        return collect_streams, host_streams, lanes_used
+
+    # -- retirement (the only synchronisation point) -------------------------
+    def _retire(self, entry, host_accs) -> None:
+        ci, lanes_used, host_streams, watermark = entry
+        # Collect is the CSP sink: block on this chunk's folded accumulators
+        # (snapshots — later chunks' folds keep streaming behind them)
+        for acc in watermark.values():
+            jax.block_until_ready(acc)
+        for name, stream in host_streams.items():
+            p = self.net.procs[name]
+            stream = jax.block_until_ready(stream)
+            leaves = jax.tree_util.tree_leaves(stream)
+            n = leaves[0].shape[0] if leaves else 0
+            acc = host_accs[name]
+            for i in range(n):
+                item = jax.tree_util.tree_map(lambda a: a[i], stream)
+                acc = p.fn(acc, item)
+            host_accs[name] = acc
+        for lane in lanes_used:
+            self._outstanding[lane] -= 1
+
+    def run(self, batch):
+        """Stream ``batch`` through the network; returns the Collect dict."""
+        net = self.net
+        leaves = jax.tree_util.tree_leaves(batch)
+        if not leaves:
+            raise NetworkError("run: empty batch")
+        n = leaves[0].shape[0]
+        plan = microbatch_plan(n, self.mb)
+        self._check_fan_divisibility(plan)
+        self.stats = StreamStats(n_items=n, microbatch_size=self.mb,
+                                 n_chunks=len(plan), depth=self.depth,
+                                 lanes=self.lanes)
+        self._outstanding = [0] * self.lanes
+        self._combine_carry = {}
+
+        jit_accs: dict[str, Any] = {}
+        host_accs = {p.name: copy.deepcopy(p.init)
+                     for p in net.collects() if not p.jit_combine}
+        in_flight: deque = deque()
+        for ci, (lo, hi) in enumerate(plan):
+            if len(in_flight) >= self.depth:  # backpressure BEFORE dispatch:
+                self.stats.stalls += 1       # at most `depth` chunks unretired
+                self._retire(in_flight.popleft(), host_accs)
+            chunk = slice_microbatch(batch, lo, hi)
+            streams, host_streams, lanes_used = self._dispatch_chunk(
+                ci, chunk, final=ci == len(plan) - 1)
+            for name, x in streams.items():
+                if name not in jit_accs:  # first chunk: the fused fold w/ init
+                    jit_accs[name] = self._stage_jit(name, False)(x)
+                else:  # later chunks: carry fold — same linear item order
+                    jit_accs[name] = self._carry_jit(name)(jit_accs[name], x)
+            watermark = {name: jit_accs[name] for name in streams}
+            # COMBINE accumulators throttle too (collect may see nothing yet)
+            for cname, acc in self._combine_carry.items():
+                watermark[f"combine:{cname}"] = acc
+            in_flight.append((ci, lanes_used, host_streams, watermark))
+        while in_flight:
+            self._retire(in_flight.popleft(), host_accs)
+
+        out: dict[str, Any] = {}
+        for p in net.collects():
+            if p.jit_combine:
+                val = jax.block_until_ready(jit_accs[p.name])
+            else:
+                val = host_accs[p.name]
+            out[p.name] = p.finalise(val) if p.finalise else val
+        return out
+
+
+# ==========================================================================
+# CSP abstract models of the two schedules (paper §6.1.1 turned on ourselves)
+# ==========================================================================
+
+def _functional_tags(net: Network) -> list[str]:
+    """The symbolic stage chain every item traverses, in topological order."""
+    return [net.procs[n].tag or n for n in net.toposort()
+            if net.procs[n].kind in (Kind.WORKER, Kind.ENGINE)]
+
+
+def synchronous_abstract_model(net: Network, name: str = "sync") -> Network:
+    """CSP model of the fused / sequential schedule: one chain of stages —
+    every chunk passes stage k before any chunk enters stage k+1 needn't
+    hold, but there is a single lane, so chunks stay strictly ordered."""
+    tags = _functional_tags(net)
+    m = Network(f"{net.name}/{name}")
+    m.add(Emit(lambda i: i, name="emit"))
+    for k, tag in enumerate(tags):
+        m.add(Worker(lambda x: x, name=f"s{k}", tag=tag))
+    m.add(Collect(lambda a, x: a, name="collect"))
+    return m
+
+
+def streaming_abstract_model(net: Network, lanes: int = 2,
+                             name: str = "stream") -> Network:
+    """CSP model of the streaming schedule: chunks are items, OneFanAny
+    assigns each to any free lane (work stealing), each lane is the full
+    stage chain, AnyFanOne merges lanes into the Collect.
+
+    ``trace_equivalent(streaming_abstract_model(net), \
+synchronous_abstract_model(net))`` is the refinement obligation the executor
+    must meet: same guaranteed termination, same collected outcome on every
+    interleaving."""
+    tags = _functional_tags(net)
+    m = Network(f"{net.name}/{name}[{lanes}]")
+    m.add(Emit(lambda i: i, name="emit"),
+          OneFanAny(destinations=lanes, name="ofa"))
+    m.procs["afo"] = AnyFanOne(sources=lanes, name="afo")
+    for lane in range(lanes):
+        prev = "ofa"
+        for k, tag in enumerate(tags):
+            wn = f"l{lane}s{k}"
+            m.procs[wn] = Worker(lambda x: x, name=wn, tag=tag)
+            m.connect(prev, wn)
+            prev = wn
+        m.connect(prev, "afo")
+    m._tail = "afo"
+    m.add(Collect(lambda a, x: a, name="collect"))
+    return m

@@ -281,7 +281,8 @@ def _cost_probe(cfg, shape, mesh, rules, grad_accum: int = 1) -> dict:
         c = _with_layers(dataclasses.replace(cfg, scan_layers=False), L)
         compiled, _ = _compile_variant(c, shape, mesh, rules,
                                        grad_accum=grad_accum)
-        ca = compiled.cost_analysis() or {}
+        from repro.core._jax_compat import cost_analysis_dict
+        ca = cost_analysis_dict(compiled)
         coll, kinds = _collective_bytes(compiled.as_text())
         metrics.append({"flops": float(ca.get("flops", 0.0)),
                         "bytes": float(ca.get("bytes accessed", 0.0)),

@@ -21,15 +21,19 @@ __all__ = ["make_production_mesh", "make_mesh", "serve_rules", "train_rules"]
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_mesh(shape, axes):
-    """Arbitrary mesh (tests, examples, elastic re-mesh)."""
-    return jax.make_mesh(
-        tuple(shape), tuple(axes),
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    """Arbitrary mesh (tests, examples, elastic re-mesh).
+
+    ``axis_types`` only exists from jax 0.5 on; older jax defaults every
+    axis to Auto anyway, so omit it there.
+    """
+    kw = {}
+    if hasattr(jax.sharding, "AxisType"):
+        kw["axis_types"] = (jax.sharding.AxisType.Auto,) * len(axes)
+    return jax.make_mesh(tuple(shape), tuple(axes), **kw)
 
 
 def train_rules(seq_shard: bool = False, fsdp: bool = False,

@@ -20,6 +20,9 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.core._jax_compat import pcast, shard_map
+from repro.core.stream import stack_microbatches
+
 __all__ = ["pipeline_forward", "split_stages"]
 
 
@@ -45,9 +48,8 @@ def pipeline_forward(block_fn: Callable, stage_params, x, *, mesh,
     Returns (B, S, D), numerically identical to applying all layers in order.
     """
     B = x.shape[0]
-    assert B % n_micro == 0, (B, n_micro)
-    mb = B // n_micro
-    x_mb = x.reshape(n_micro, mb, *x.shape[1:])
+    # the streaming runtime's microbatch schedule, reshaped for the mesh
+    x_mb = stack_microbatches(x, n_micro)
 
     def staged(params_local, x_all):
         # params_local: (1, L/S, ...) this stage's layers; x_all replicated
@@ -74,16 +76,16 @@ def pipeline_forward(block_fn: Callable, stage_params, x, *, mesh,
             return recv_next, out
 
         # carries are stage-varying (ppermute/axis_index outputs): mark them
-        out0 = jax.lax.pcast(jnp.zeros_like(x_all), (stage_axis,),
+        out0 = pcast(jnp.zeros_like(x_all), (stage_axis,),
                              to="varying")
-        recv0 = jax.lax.pcast(jnp.zeros_like(x_all[0]), (stage_axis,),
+        recv0 = pcast(jnp.zeros_like(x_all[0]), (stage_axis,),
                               to="varying")
         _, out = jax.lax.fori_loop(0, n_micro + n_stages - 1, step,
                                    (recv0, out0))
         return out[None]  # (1, n_micro, mb, S, D) per stage
 
     spec_p = jax.tree_util.tree_map(lambda _: P(stage_axis), stage_params)
-    out_all = jax.shard_map(
+    out_all = shard_map(
         staged, mesh=mesh,
         in_specs=(spec_p, P()),
         out_specs=P(stage_axis),

@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.stream import microbatch_plan
 from repro.models import Model
 
 __all__ = ["Request", "FarmScheduler"]
@@ -38,12 +39,13 @@ class FarmScheduler:
     """Slot-based continuous batching over a fixed decode batch."""
 
     def __init__(self, model: Model, params, *, n_slots: int,
-                 max_len: int, eos_id: int = -1):
+                 max_len: int, eos_id: int = -1, prefill_chunk: int = 8):
         self.model = model
         self.params = params
         self.n_slots = n_slots
         self.max_len = max_len
         self.eos_id = eos_id
+        self.prefill_chunk = prefill_chunk
         self.cache = model.init_cache(n_slots, max_len)
         self.slot_req: list[Optional[Request]] = [None] * n_slots
         self.slot_left = np.zeros(n_slots, np.int32)
@@ -56,6 +58,25 @@ class FarmScheduler:
             return nxt, new_cache
 
         self._decode = jax.jit(_decode, donate_argnums=(1,))
+
+        def _prefill(params, cache, toks, active, slot):
+            """Feed a fixed-size chunk of prompt tokens into ``slot``'s cache
+            (others frozen).  ``active`` masks the padding of the last chunk,
+            so every prompt length reuses this one compiled scan — the
+            streaming runtime's microbatch schedule applied to prefill."""
+
+            def body(cache, xs):
+                tok, act = xs
+                rows = jnp.zeros((n_slots,), jnp.int32).at[slot].set(tok)
+                adv = jnp.zeros((n_slots,), bool).at[slot].set(act)
+                _, cache = self.model.decode_step(
+                    params, cache, rows[:, None], advance=adv)
+                return cache, None
+
+            cache, _ = jax.lax.scan(body, cache, (toks, active))
+            return cache
+
+        self._prefill = jax.jit(_prefill, donate_argnums=(1,))
         self._reset = jax.jit(self.model.reset_slot, static_argnums=(1,),
                               donate_argnums=(0,))
         self.queue: list[Request] = []
@@ -67,20 +88,23 @@ class FarmScheduler:
         req.generated = []
         self.queue.append(req)
 
-    def _advance_only(self, s: int, token: int) -> None:
-        """Feed one prompt token into slot s's cache (others frozen)."""
-        toks = jnp.asarray(self.last_tok).at[s].set(token)
-        adv = jnp.zeros((self.n_slots,), bool).at[s].set(True)
-        _, self.cache = self._decode(self.params, self.cache, toks, adv)
-
     def _fill_slots(self) -> None:
         for s in range(self.n_slots):
             if self.slot_req[s] is None and self.queue:
                 req = self.queue.pop(0)  # OneFanAny: first free slot takes it
                 self.slot_req[s] = req
                 self.cache = self._reset(self.cache, s)
-                for t in req.prompt[:-1]:
-                    self._advance_only(s, t)
+                # chunked prefill: prompt context flows through the streaming
+                # microbatch plan, one async dispatch per chunk (not per token)
+                ctx = req.prompt[:-1]
+                for lo, hi in microbatch_plan(len(ctx), self.prefill_chunk):
+                    toks = np.zeros(self.prefill_chunk, np.int32)
+                    act = np.zeros(self.prefill_chunk, bool)
+                    toks[:hi - lo] = ctx[lo:hi]
+                    act[:hi - lo] = True
+                    self.cache = self._prefill(
+                        self.params, self.cache, jnp.asarray(toks),
+                        jnp.asarray(act), jnp.asarray(s, jnp.int32))
                 self.last_tok[s] = req.prompt[-1]
                 self.slot_left[s] = req.max_new
 

@@ -20,6 +20,7 @@ import jax.numpy as jnp
 
 from repro.core import (AnyFanOne, Collect, Emit, Network, OneFanAny, Worker,
                         build)
+from repro.core.stream import stack_microbatches
 from repro.models import Model
 from .optimizer import AdamW
 
@@ -49,11 +50,9 @@ def make_train_step(model: Model, opt: AdamW, *,
             (l, metrics), grads = jax.value_and_grad(
                 loss, has_aux=True)(params, batch)
         else:
-            def micro(b):
-                return jax.tree_util.tree_map(
-                    lambda x: x.reshape(grad_accum, -1, *x.shape[1:]), b)
-
-            mb = micro(batch)
+            # the streaming runtime's microbatch schedule: grad accumulation
+            # is the same splitter, scanned instead of dispatched
+            mb = stack_microbatches(batch, grad_accum)
 
             def body(acc, mbatch):
                 (l, m), g = jax.value_and_grad(loss, has_aux=True)(

@@ -1,0 +1,85 @@
+"""Offline fallback for ``hypothesis`` (property-based testing).
+
+CI and air-gapped machines may not have ``hypothesis`` installed and must
+still collect and pass the suite.  When the real library is importable we
+re-export it untouched; otherwise ``@given`` degrades to running the test
+body over a small deterministic grid of boundary examples (min, max, and a
+midpoint per strategy) and ``@settings`` becomes a no-op.
+
+Usage in tests (replaces ``from hypothesis import ...``)::
+
+    from _hypothesis_compat import given, settings, st
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import itertools
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    _MAX_COMBOS = 12  # keep the fallback grid roughly hypothesis-example sized
+
+    class _Strategy:
+        """A strategy reduced to its boundary examples."""
+
+        def __init__(self, examples):
+            self.examples = list(dict.fromkeys(examples))
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value=0, max_value=10):
+            mid = (min_value + max_value) // 2
+            return _Strategy([min_value, mid, max_value])
+
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0, **_kw):
+            return _Strategy([min_value, (min_value + max_value) / 2.0,
+                              max_value])
+
+        @staticmethod
+        def booleans():
+            return _Strategy([False, True])
+
+        @staticmethod
+        def sampled_from(options):
+            return _Strategy(list(options))
+
+    st = _Strategies()
+
+    def given(**param_strategies):
+        names = list(param_strategies)
+        grids = [param_strategies[n].examples for n in names]
+        combos = list(itertools.product(*grids))
+        if len(combos) > _MAX_COMBOS:
+            stride = (len(combos) + _MAX_COMBOS - 1) // _MAX_COMBOS
+            combos = combos[::stride]
+
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kw):
+                for combo in combos:
+                    fn(*args, **dict(zip(names, combo)), **kw)
+
+            # hide the strategy-supplied params from pytest's fixture
+            # resolution (hypothesis does the same)
+            sig = inspect.signature(fn)
+            wrapper.__signature__ = sig.replace(parameters=[
+                p for pname, p in sig.parameters.items() if pname not in names])
+            del wrapper.__wrapped__
+            return wrapper
+
+        return deco
+
+    def settings(**_kw):
+        def deco(fn):
+            return fn
+
+        return deco

@@ -9,6 +9,8 @@ import textwrap
 
 import pytest
 
+pytestmark = pytest.mark.slow  # excluded from the fast CI lane
+
 _SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
 
@@ -29,8 +31,8 @@ def test_pipeline_parallel_exact():
     out = _run("""
     import jax, jax.numpy as jnp
     from repro.parallel.pipeline import pipeline_forward, split_stages
-    mesh = jax.make_mesh((4,), ("stage",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((4,), ("stage",))
     L, D = 8, 16
     Ws = jax.random.normal(jax.random.PRNGKey(0), (L, D, D)) * 0.2
     def block_fn(lp, h):
@@ -50,8 +52,8 @@ def test_int8_ring_allreduce_and_error_feedback():
     import jax, jax.numpy as jnp
     from jax.sharding import PartitionSpec as P
     from repro.parallel.collectives import ring_allreduce_int8
-    mesh = jax.make_mesh((8,), ("dp",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((8,), ("dp",))
     g = jax.random.normal(jax.random.PRNGKey(2), (8, 1000)) * 0.01
     def red0(gl):
         r, e = ring_allreduce_int8(gl[0], "dp", 8)
@@ -59,11 +61,12 @@ def test_int8_ring_allreduce_and_error_feedback():
     def red(gl, el):
         r, e = ring_allreduce_int8(gl[0], "dp", 8, error=el[0])
         return r[None], e[None]
-    red0j = jax.jit(jax.shard_map(red0, mesh=mesh, in_specs=(P("dp"),),
-                                  out_specs=(P("dp"), P("dp"))))
-    redj = jax.jit(jax.shard_map(red, mesh=mesh,
-                                 in_specs=(P("dp"), P("dp")),
-                                 out_specs=(P("dp"), P("dp"))))
+    from repro.core._jax_compat import shard_map
+    red0j = jax.jit(shard_map(red0, mesh=mesh, in_specs=(P("dp"),),
+                              out_specs=(P("dp"), P("dp"))))
+    redj = jax.jit(shard_map(red, mesh=mesh,
+                             in_specs=(P("dp"), P("dp")),
+                             out_specs=(P("dp"), P("dp"))))
     exact = jnp.sum(g, axis=0)
     r1, err = red0j(g)
     rel1 = float(jnp.max(jnp.abs(r1[0] - exact)) / jnp.max(jnp.abs(exact)))
@@ -84,8 +87,8 @@ def test_compiled_farm_uses_devices():
     out = _run("""
     import jax, jax.numpy as jnp
     from repro.core import DataParallelCollect, build
-    mesh = jax.make_mesh((8,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((8,), ("data",))
     net = DataParallelCollect(
         create=lambda i: jnp.asarray(float(i)),
         function=lambda x: x * x,
@@ -115,8 +118,8 @@ def test_reduced_model_dryrun_small_mesh():
     from repro.train.optimizer import AdamW
     from repro.train.train_loop import make_train_step
     from repro.launch.dryrun import _collective_bytes
-    mesh = jax.make_mesh((2, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((2, 2), ("data", "model"))
     cfg = dataclasses.replace(get_config("qwen2-0.5b", reduced=True),
                               compute_dtype="float32")
     model = Model(cfg)

@@ -4,6 +4,10 @@ import os
 import subprocess
 import sys
 
+import pytest
+
+pytestmark = pytest.mark.slow  # excluded from the fast CI lane
+
 _ENV = {**os.environ,
         "PYTHONPATH": os.path.join(os.path.dirname(__file__), "..", "src")}
 

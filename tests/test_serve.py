@@ -8,6 +8,8 @@ from repro.configs import get_config
 from repro.models import Model
 from repro.serve import FarmScheduler, Request
 
+pytestmark = pytest.mark.slow  # excluded from the fast CI lane
+
 
 def _ref_gen(model, params, prompt, n, max_len=64):
     c = model.init_cache(1, max_len)

@@ -1,0 +1,331 @@
+"""Streaming microbatch executor: equivalence with the sequential oracle,
+uneven chunking, backpressure from channel capacity, work-stealing schedule,
+and the CSP refinement of the streaming schedule (paper §6.1.1 on ourselves)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (Collect, DataParallelCollect, Emit,
+                        GroupOfPipelineCollects, Network, NetworkError,
+                        OnePipelineCollect, TaskParallelOfGroupCollects,
+                        Worker, build, csp, run_sequential)
+from repro.core.stream import (microbatch_plan, slice_microbatch,
+                               stack_microbatches, streaming_abstract_model,
+                               synchronous_abstract_model)
+
+
+def _sq(x):
+    return x * x
+
+
+def _inc(x):
+    return x + 1.0
+
+
+def _add(a, x):
+    return a + x
+
+
+def _mk_items(n):
+    return lambda i: jnp.asarray(float(i))
+
+
+class TestMicrobatchPlan:
+    def test_exact_cover(self):
+        assert microbatch_plan(10, 4) == [(0, 4), (4, 8), (8, 10)]
+        assert microbatch_plan(8, 4) == [(0, 4), (4, 8)]
+        assert microbatch_plan(3, 8) == [(0, 3)]
+        assert microbatch_plan(0, 4) == []
+
+    def test_invalid(self):
+        with pytest.raises(NetworkError):
+            microbatch_plan(8, 0)
+        with pytest.raises(NetworkError):
+            microbatch_plan(-1, 4)
+
+    def test_slice_roundtrip(self):
+        x = {"a": jnp.arange(10.0), "b": jnp.arange(20.0).reshape(10, 2)}
+        chunks = [slice_microbatch(x, lo, hi)
+                  for lo, hi in microbatch_plan(10, 3)]
+        back = jax.tree_util.tree_map(
+            lambda *ls: jnp.concatenate(ls), *chunks)
+        np.testing.assert_array_equal(np.asarray(back["a"]),
+                                      np.asarray(x["a"]))
+        np.testing.assert_array_equal(np.asarray(back["b"]),
+                                      np.asarray(x["b"]))
+
+    def test_stack_microbatches(self):
+        x = jnp.arange(12.0).reshape(12, 1)
+        mb = stack_microbatches(x, 3)
+        assert mb.shape == (3, 4, 1)
+        with pytest.raises(NetworkError, match="not divisible"):
+            stack_microbatches(x, 5)
+
+
+class TestStreamingEquivalence:
+    """run_streaming ≡ run_sequential ≡ run, bit-identical."""
+
+    @pytest.mark.parametrize("mb", [1, 3, 4, 8, 16])
+    def test_farm(self, mb):
+        net = DataParallelCollect(create=_mk_items(10), function=_sq,
+                                  collector=_add, init=jnp.asarray(0.0),
+                                  workers=3, jit_combine=True)
+        cn = build(net)
+        seq = run_sequential(net, 10)["collect"]
+        fused = cn.run(instances=10)["collect"]
+        strm = cn.run_streaming(instances=10, microbatch_size=mb)["collect"]
+        assert float(seq) == float(fused) == float(strm)
+        assert cn.stream_stats.n_chunks == len(microbatch_plan(10, mb))
+
+    @pytest.mark.parametrize("mb", [2, 3, 7])
+    def test_pipeline_uneven_chunks(self, mb):
+        """Microbatch sizes that do not divide the item count."""
+        net = OnePipelineCollect(create=_mk_items(7), stage_ops=[_sq, _inc],
+                                 collector=_add, init=jnp.asarray(0.0),
+                                 jit_combine=True)
+        cn = build(net)
+        seq = run_sequential(net, 7)["collect"]
+        strm = cn.run_streaming(instances=7, microbatch_size=mb)["collect"]
+        assert float(seq) == float(strm)
+
+    @pytest.mark.parametrize("pattern", ["gop", "pog"])
+    def test_composites(self, pattern):
+        kw = dict(create=_mk_items(12), stage_ops=[_sq, _inc, _inc],
+                  collector=_add, init=jnp.asarray(0.0), jit_combine=True)
+        if pattern == "gop":
+            net = GroupOfPipelineCollects(groups=3, **kw)
+        else:
+            net = TaskParallelOfGroupCollects(workers=3, **kw)
+        cn = build(net)
+        seq = run_sequential(net, 12)["collect"]
+        strm = cn.run_streaming(instances=12, microbatch_size=5)["collect"]
+        assert float(seq) == float(strm)
+
+    def test_explicit_farm_work_stealing(self):
+        """Explicit per-worker branches: whole chunks route to one lane and
+        the result is still the oracle's."""
+        net = DataParallelCollect(create=_mk_items(9), function=_sq,
+                                  collector=_add, init=jnp.asarray(0.0),
+                                  workers=3, jit_combine=True, explicit=True)
+        cn = build(net)
+        seq = run_sequential(net, 9)["collect"]
+        strm = cn.run_streaming(instances=9, microbatch_size=2)["collect"]
+        assert float(seq) == float(strm)
+        sched = cn.stream_stats.schedule
+        assert len(sched) == 5  # one lane assignment per chunk
+        assert {lane for _, lane in sched} <= {0, 1, 2}
+
+    def test_explicit_gop_ragged_chunks(self):
+        """Explicit OneFanList with homogeneous branches streams whole chunks
+        round-robin — any microbatch size works, even non-divisible ones."""
+        net = GroupOfPipelineCollects(
+            create=_mk_items(12), stage_ops=[_sq, _inc], collector=_add,
+            init=jnp.asarray(0.0), jit_combine=True, groups=3, explicit=True)
+        cn = build(net)
+        fused = cn.run(instances=12)["collect"]
+        strm = cn.run_streaming(instances=12, microbatch_size=5)["collect"]
+        assert float(fused) == float(strm)
+        assert float(strm) == sum(i * i + 1 for i in range(12))
+
+    def test_combine_reducer_bit_identical(self):
+        """COMBINE folds carry across chunks: same float association as the
+        whole-batch fold (random float32s make reassociation visible).
+        Streaming ≡ logged bitwise; fused may differ only by XLA's own
+        whole-program reassociation, so it gets an approx check."""
+        from repro.core import CombineNto1, OneSeqCastList
+        rng = np.random.default_rng(7)
+        vals = jnp.asarray(rng.normal(size=32) * 100.0, jnp.float32)
+        net = Network("comb")
+        net.add(Emit(lambda i: vals[i], name="emit"),
+                OneSeqCastList(name="cast"))
+        for w in range(2):
+            net.procs[f"w{w}"] = Worker(_sq if w == 0 else _inc,
+                                        name=f"w{w}", tag=f"f{w}")
+            net.connect("cast", f"w{w}")
+        net.procs["comb"] = CombineNto1(lambda a, b: a + b, name="comb")
+        net.connect("w0", "comb")
+        net.connect("w1", "comb")
+        net._tail = "comb"
+        net.add(Collect(_add, init=jnp.asarray(0.0), jit_combine=True,
+                        name="collect"))
+        cn = build(net)
+        fused = cn.run(instances=32)["collect"]
+        logged = cn.run(instances=32, logged=True)["collect"]
+        strm = cn.run_streaming(instances=32, microbatch_size=5)["collect"]
+        assert np.asarray(logged).tobytes() == np.asarray(strm).tobytes()
+        np.testing.assert_allclose(np.asarray(fused), np.asarray(strm),
+                                   rtol=1e-6)
+
+    def test_heterogeneous_fan_ragged_chunks_fail_fast(self):
+        """Branches with distinct tags can't take whole chunks; an indivisible
+        microbatch is refused up front, naming microbatch_size."""
+        from repro.core import ListSeqOne, OneFanList
+        net = Network("hetero")
+        net.add(Emit(_mk_items(12), name="emit"),
+                OneFanList(name="ofl"))
+        for w, fn in enumerate([_sq, _inc, lambda x: x * 3.0]):
+            net.procs[f"w{w}"] = Worker(fn, name=f"w{w}", tag=f"f{w}")
+            net.connect("ofl", f"w{w}")
+        net.procs["lso"] = ListSeqOne(name="lso")
+        for w in range(3):
+            net.connect(f"w{w}", "lso")
+        net._tail = "lso"
+        net.add(Collect(_add, init=jnp.asarray(0.0), jit_combine=True,
+                        name="collect"))
+        cn = build(net)
+        with pytest.raises(NetworkError, match="microbatch_size=5"):
+            cn.run_streaming(instances=12, microbatch_size=5)
+        # divisible microbatch streams fine and matches the oracle
+        seq = run_sequential(net, 12)["collect"]
+        strm = cn.run_streaming(instances=12, microbatch_size=6)["collect"]
+        assert float(seq) == float(strm)
+
+    def test_deep_heterogeneous_fan_uses_item_round_robin(self):
+        """Branches whose FIRST stages share a tag but whose deeper stages
+        differ are heterogeneous: chunks split at item level, matching the
+        sequential oracle."""
+        from repro.core import ListSeqOne, OneFanList
+        net = Network("deep-hetero")
+        net.add(Emit(_mk_items(8), name="emit"), OneFanList(name="ofl"))
+        chains = [[("a", lambda x: x), ("b0", lambda x: x + 1.0)],
+                  [("a", lambda x: x), ("b1", lambda x: x * 100.0)]]
+        net.procs["lso"] = ListSeqOne(name="lso")
+        for b, chain in enumerate(chains):
+            prev = "ofl"
+            for s, (tag, fn) in enumerate(chain):
+                wn = f"b{b}s{s}"
+                net.procs[wn] = Worker(fn, name=wn, tag=tag)
+                net.connect(prev, wn)
+                prev = wn
+            net.connect(prev, "lso")
+        net._tail = "lso"
+        net.add(Collect(_add, init=jnp.asarray(0.0), jit_combine=True,
+                        name="collect"))
+        cn = build(net)
+        seq = run_sequential(net, 8)["collect"]
+        strm = cn.run_streaming(instances=8, microbatch_size=2)["collect"]
+        assert float(seq) == float(strm)
+
+    def test_invalid_lanes_rejected(self):
+        net = DataParallelCollect(create=_mk_items(4), function=_sq,
+                                  collector=_add, init=jnp.asarray(0.0),
+                                  workers=2, jit_combine=True)
+        cn = build(net)
+        for lanes in (0, -1):
+            with pytest.raises(NetworkError, match="lanes"):
+                cn.run_streaming(instances=4, microbatch_size=2, lanes=lanes)
+
+    def test_host_side_collector(self):
+        net = DataParallelCollect(
+            create=_mk_items(5), function=_sq,
+            collector=lambda acc, x: {**acc, len(acc): float(x)},
+            init={}, workers=2, jit_combine=False)
+        out = build(net).run_streaming(instances=5, microbatch_size=2)
+        assert out["collect"] == {i: float(i * i) for i in range(5)}
+
+    def test_finalise_applies(self):
+        net = DataParallelCollect(create=_mk_items(6), function=_sq,
+                                  collector=_add, init=jnp.asarray(0.0),
+                                  finalise=lambda acc: acc * 10.0,
+                                  workers=2, jit_combine=True)
+        cn = build(net)
+        assert float(cn.run_streaming(instances=6, microbatch_size=4)
+                     ["collect"]) == 10.0 * sum(i * i for i in range(6))
+
+    def test_executor_reuse_is_cached(self):
+        net = OnePipelineCollect(create=_mk_items(6), stage_ops=[_sq, _inc],
+                                 collector=_add, init=jnp.asarray(0.0),
+                                 jit_combine=True)
+        cn = build(net)
+        a = cn.run_streaming(instances=6, microbatch_size=2)["collect"]
+        b = cn.run_streaming(instances=6, microbatch_size=2)["collect"]
+        assert float(a) == float(b)
+        assert len(cn._streams) == 1  # same executor (and stage jits) reused
+
+
+class TestBackpressure:
+    def test_depth_from_channel_capacity(self):
+        """A buffered channel's capacity bounds the in-flight chunk count."""
+        net = Network("capped")
+        net.add(Emit(_mk_items(8), name="emit"))
+        net.add(Worker(_sq, name="w"))
+        net.procs["collect"] = Collect(_add, init=jnp.asarray(0.0),
+                                       jit_combine=True, name="collect")
+        net.connect("w", "collect", capacity=1)
+        assert net.min_capacity() == 1
+        cn = build(net)
+        seq = run_sequential(net, 8)["collect"]
+        strm = cn.run_streaming(instances=8, microbatch_size=2)["collect"]
+        assert float(seq) == float(strm)
+        assert cn.stream_stats.depth == 1
+        assert cn.stream_stats.stalls == 3  # 4 chunks through a depth-1 pipe
+
+    def test_depth_bounds_unretired_chunks(self):
+        """Backpressure retires BEFORE dispatch: never more than `depth`
+        chunks un-retired (capacity-k channel semantics, not k+1)."""
+        from repro.core.stream import StreamExecutor
+        net = OnePipelineCollect(create=_mk_items(8), stage_ops=[_sq, _inc],
+                                 collector=_add, init=jnp.asarray(0.0),
+                                 jit_combine=True)
+        cn = build(net)
+        ex = StreamExecutor(cn, microbatch_size=2, max_in_flight=1)
+        seen = []
+        orig = ex._dispatch_chunk
+
+        def spy(ci, chunk, final):
+            seen.append(ci)
+            return orig(ci, chunk, final)
+
+        ex._dispatch_chunk = spy
+        orig_retire = ex._retire
+        retired = []
+        ex._retire = lambda e, h: (retired.append(e[0]), orig_retire(e, h))[1]
+        ex.run(cn.make_batch(8))
+        # chunk ci is only dispatched after chunk ci-1 retired (depth 1)
+        for ci in seen[1:]:
+            assert ci - 1 in retired[:ci]
+
+    def test_default_depth_and_override(self):
+        net = OnePipelineCollect(create=_mk_items(8), stage_ops=[_sq, _inc],
+                                 collector=_add, init=jnp.asarray(0.0),
+                                 jit_combine=True)
+        cn = build(net)
+        cn.run_streaming(instances=8, microbatch_size=2)
+        assert cn.stream_stats.depth == 2  # rendezvous channels → default
+        cn.run_streaming(instances=8, microbatch_size=2, max_in_flight=4)
+        assert cn.stream_stats.depth == 4
+        assert cn.stream_stats.stalls == 0  # 4 chunks fit entirely in flight
+
+
+class TestRefinement:
+    """The streaming schedule trace-refines the synchronous one (the paper's
+    ``[T=`` check, §6.1.1, applied to our own runtime)."""
+
+    @pytest.mark.parametrize("lanes", [1, 2, 3])
+    def test_pipeline_schedule_refines(self, lanes):
+        net = OnePipelineCollect(create=_mk_items(4), stage_ops=[_sq, _inc],
+                                 collector=_add, init=jnp.asarray(0.0),
+                                 jit_combine=True)
+        sync = synchronous_abstract_model(net)
+        strm = streaming_abstract_model(net, lanes=lanes)
+        assert csp.trace_equivalent(strm, sync, instances=3)
+
+    def test_farm_schedule_refines(self):
+        net = DataParallelCollect(create=_mk_items(4), function=_sq,
+                                  collector=_add, init=jnp.asarray(0.0),
+                                  workers=3, jit_combine=True)
+        assert csp.trace_equivalent(streaming_abstract_model(net, lanes=2),
+                                    synchronous_abstract_model(net),
+                                    instances=3)
+
+    def test_streaming_model_is_safe(self):
+        """Deadlock-free, divergence-free, terminating — CSPm Definition 6
+        for the streaming schedule itself."""
+        net = OnePipelineCollect(create=_mk_items(4), stage_ops=[_sq, _inc],
+                                 collector=_add, init=jnp.asarray(0.0),
+                                 jit_combine=True)
+        r = csp.check(streaming_abstract_model(net, lanes=2), instances=3)
+        assert r.deadlock_free and r.divergence_free
+        assert r.all_paths_terminate and r.deterministic

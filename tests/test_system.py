@@ -16,6 +16,8 @@ from repro.core import (AnyFanOne, Collect, CombineNto1, DataParallelCollect,
                         run_sequential, verify)
 from repro.core import csp
 
+pytestmark = pytest.mark.slow  # excluded from the fast CI lane
+
 
 # --------------------------------------------------------------------------
 # Monte Carlo π (paper §3) — the motivating example, end to end

@@ -17,6 +17,8 @@ from repro.train import (AdamW, Checkpointer, FaultInjector,
                          train)
 from repro.train.optimizer import clip_by_global_norm, global_norm
 
+pytestmark = pytest.mark.slow  # excluded from the fast CI lane
+
 
 class TestOptimizer:
     def test_quadratic_convergence(self):
