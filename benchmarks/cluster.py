@@ -1,0 +1,113 @@
+"""``cluster`` benchmark: single-host streaming vs multi-host cluster runs.
+
+The paper's capstone claim is that the same network runs unchanged on one
+machine and on a cluster; this benchmark measures what that portability
+costs per transport on the Mandelbrot row-band farm:
+
+* ``single``    — PR 1's streaming executor, one host (the baseline),
+* ``inprocess`` — 2-host partition, thread hosts, queue-backed channels,
+* ``pipe``      — 2-host partition, *real OS processes* (spawned
+                  interpreters; the wall time includes their startup —
+                  this is the genuine cross-host cost on CPU),
+* ``jaxmesh``   — 2-host partition over mesh submeshes, channel puts folded
+                  into the consumer stage jits.
+
+Every mode is gated on bit-identical results vs the sequential oracle.
+Cluster walls include per-run partition build + per-host stage compilation
+(each ``run_cluster`` call stands up a fresh deployment), so the
+``vs_single`` ratios bound the worst-case deployment cost, not steady-state
+throughput.
+
+    PYTHONPATH=src python -m benchmarks.cluster --smoke   # BENCH_cluster.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+# the launcher's module-level Mandelbrot factory is already picklable (as
+# the pipe transport requires) — one definition serves launcher + benchmark
+from repro.launch.cluster import make_mandelbrot as make_farm
+
+
+def _wall(fn, repeats: int = 2) -> float:
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run(*, smoke: bool = False, hosts: int = 2) -> list:
+    from repro.cluster import check_refinement, partition, run_cluster
+    from repro.core import build, run_sequential
+
+    if smoke:
+        fargs = (8, 64, 64, 40)
+        mb = 2
+    else:
+        fargs = (16, 256, 256, 100)
+        mb = 4
+    instances = fargs[0]
+    factory = (make_farm, fargs)
+    net = factory[0](*fargs)
+    plan = partition(net, hosts=hosts)
+    refines = check_refinement(net, plan)
+    seq = run_sequential(net, instances)["collect"]
+
+    rows = []
+    cn = build(net)
+    single = _wall(lambda: cn.run_streaming(instances=instances,
+                                            microbatch_size=mb))
+    same = bool(cn.run_streaming(instances=instances,
+                                 microbatch_size=mb)["collect"] == seq)
+    rows.append(("cluster_single", single * 1e6,
+                 f"identical={same} refines={refines}"))
+
+    for transport in ("inprocess", "pipe", "jaxmesh"):
+        last = []  # capture inside the timed closure: no extra deployment
+
+        def one(t=transport, last=last):
+            last[:] = [run_cluster(net, instances=instances, plan=plan,
+                                   transport=t, microbatch_size=mb,
+                                   factory=factory)]
+        wall = _wall(one, repeats=1 if transport == "pipe" else 2)
+        (out,) = last
+        same = bool(out["collect"] == seq)
+        stalls = sum(int(r.stats_summary.split("stalls=")[1].split(",")[0])
+                     for r in out.reports if "stalls=" in r.stats_summary)
+        rows.append((f"cluster_{transport}", wall * 1e6,
+                     f"identical={same} hosts={hosts} "
+                     f"vs_single={wall / single:.2f}x stalls={stalls}"))
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--hosts", type=int, default=2)
+    args = ap.parse_args()
+    rows = run(smoke=args.smoke, hosts=args.hosts)
+    print("name,us_per_call,derived")
+    blob = []
+    for name, us, derived in rows:
+        print(f"{name},{us:.2f},{derived}")
+        blob.append({"name": name, "us_per_call": us, "derived": derived})
+    if any("identical=False" in r["derived"] or "refines=False" in r["derived"]
+           for r in blob):
+        print("cluster benchmark: oracle divergence or refinement failure",
+              file=sys.stderr)
+        sys.exit(1)
+    with open("BENCH_cluster.json", "w") as f:
+        json.dump({"benchmark": "cluster",
+                   "mode": "smoke" if args.smoke else "full",
+                   "hosts": args.hosts, "rows": blob}, f, indent=2)
+    print("wrote BENCH_cluster.json", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

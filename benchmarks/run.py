@@ -44,11 +44,12 @@ def main() -> None:
         _smoke()
         return
 
+    from . import cluster as cluster_bench
     from . import tables
     from . import roofline
     from . import stream as stream_bench
 
-    fns = list(tables.ALL_TABLES) + [stream_bench.run]
+    fns = list(tables.ALL_TABLES) + [stream_bench.run, cluster_bench.run]
     if not args.skip_roofline:
         fns.append(roofline.run)
     print("name,us_per_call,derived")

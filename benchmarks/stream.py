@@ -98,6 +98,8 @@ def _bench_one(tag: str, net, instances: int, microbatch_size: int) -> list:
     out.append(row(f"{tag}_streaming", streamed,
                    f"vs_logged={logged / streamed:.2f}x "
                    f"identical={same} {cn.stream_stats.summary()}"))
+    # donation telemetry (ROADMAP): which stage jits actually reused buffers
+    out.append(row(f"{tag}_donation", 0.0, cn.stream_stats.donation_summary()))
     return out
 
 

@@ -2,6 +2,13 @@
 Pallas escape-time kernel as the Worker function.
 
     PYTHONPATH=src python examples/mandelbrot.py [--width 280] [--pallas]
+    PYTHONPATH=src python examples/mandelbrot.py --hosts 2   # cluster mode
+
+``--hosts N`` reruns the paper's capstone: the *same* declarative network is
+partitioned over N hosts (real OS processes by default — the
+MultiProcessPipe transport) and must produce results bit-identical to the
+sequential oracle, with the CSP checker confirming the partitioned network
+trace-refines the unpartitioned one.
 """
 
 import argparse
@@ -14,37 +21,24 @@ from repro.core import DataParallelCollect, build, run_sequential
 CHARS = " .:-=+*#%@"
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--width", type=int, default=192)
-    ap.add_argument("--height", type=int, default=96)
-    ap.add_argument("--bands", type=int, default=8)
-    ap.add_argument("--iters", type=int, default=60)
-    ap.add_argument("--pallas", action="store_true",
-                    help="use the Pallas kernel (interpret mode — slower "
-                         "on CPU, exact on TPU)")
-    ap.add_argument("--ascii", action="store_true", default=True)
-    args = ap.parse_args()
+def make_net(width: int, height: int, bands: int, iters: int):
+    """Module-level factory: the cluster's pipe transport spawns fresh
+    interpreters that rebuild the network from this picklable recipe."""
+    import jax
 
-    H, W = args.height, args.width
-    band_h = H // args.bands
-    delta = 3.0 / W
+    band_h = height // bands
+    delta = 3.0 / width
 
     def create(i):
         """band i: its top row index."""
         return jnp.asarray(i * band_h, jnp.int32)
 
     def render_band(row0):
-        if args.pallas:
-            # per-band kernel call happens under vmap → use the ref math
-            from repro.kernels.mandelbrot import ref as mb
-        else:
-            from repro.kernels.mandelbrot import ref as mb
         ys = -1.15 + delta * (row0 + jnp.arange(band_h, dtype=jnp.float32))
-        xs = -2.2 + delta * jnp.arange(W, dtype=jnp.float32)
-        cr = jnp.broadcast_to(xs[None, :], (band_h, W))
-        ci = jnp.broadcast_to(ys[:, None], (band_h, W))
-        import jax
+        xs = -2.2 + delta * jnp.arange(width, dtype=jnp.float32)
+        cr = jnp.broadcast_to(xs[None, :], (band_h, width))
+        ci = jnp.broadcast_to(ys[:, None], (band_h, width))
+
         def body(_, st):
             zr, zi, cnt = st
             zr2, zi2 = zr * zr, zi * zi
@@ -52,9 +46,10 @@ def main():
             return (jnp.where(inside, zr2 - zi2 + cr, zr),
                     jnp.where(inside, 2 * zr * zi + ci, zi),
                     cnt + inside.astype(jnp.int32))
-        z0 = jnp.zeros((band_h, W), jnp.float32)
+
+        z0 = jnp.zeros((band_h, width), jnp.float32)
         _, _, cnt = jax.lax.fori_loop(
-            0, args.iters, body, (z0, z0, jnp.zeros((band_h, W), jnp.int32)))
+            0, iters, body, (z0, z0, jnp.zeros((band_h, width), jnp.int32)))
         return (row0, cnt)
 
     def collector(acc, item):
@@ -62,26 +57,74 @@ def main():
         acc[int(row0)] = np.asarray(cnt)
         return acc
 
-    net = DataParallelCollect(
+    return DataParallelCollect(
         create=create, function=render_band, collector=collector, init={},
-        workers=args.bands, name="mandelbrot")
+        workers=bands, name="mandelbrot")
 
-    cn = build(net)
-    bands = cn.run(instances=args.bands)["collect"]
-    img = np.concatenate([bands[k] for k in sorted(bands)], axis=0)
 
-    # sequential oracle identical?
+def _assemble(bands: dict) -> np.ndarray:
+    return np.concatenate([bands[k] for k in sorted(bands)], axis=0)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--width", type=int, default=192)
+    ap.add_argument("--height", type=int, default=96)
+    ap.add_argument("--bands", type=int, default=8)
+    ap.add_argument("--iters", type=int, default=60)
+    ap.add_argument("--hosts", type=int, default=0,
+                    help="partition the farm over N hosts "
+                         "(cluster runtime; 0 = single host)")
+    ap.add_argument("--transport", default="pipe",
+                    choices=["inprocess", "pipe", "jaxmesh"],
+                    help="cluster channel transport (with --hosts)")
+    ap.add_argument("--pallas", action="store_true",
+                    help="use the Pallas kernel (interpret mode — slower "
+                         "on CPU, exact on TPU)")
+    ap.add_argument("--ascii", action="store_true", default=True)
+    args = ap.parse_args()
+
+    H, W = args.height, args.width
+    factory = (make_net, (W, H, args.bands, args.iters))
+    net = make_net(W, H, args.bands, args.iters)
+
+    # sequential oracle — every mode below must match it bit-for-bit
     seq_bands = run_sequential(net, args.bands)["collect"]
-    seq_img = np.concatenate([seq_bands[k] for k in sorted(seq_bands)], 0)
-    print(f"sequential == parallel: {bool((img == seq_img).all())}")
+    seq_img = _assemble(seq_bands)
 
-    # streaming microbatch execution: bands flow through the farm in chunks
-    strm_bands = cn.run_streaming(instances=args.bands,
-                                  microbatch_size=max(args.bands // 4, 1)
-                                  )["collect"]
-    strm_img = np.concatenate([strm_bands[k] for k in sorted(strm_bands)], 0)
-    print(f"sequential == streaming: {bool((strm_img == seq_img).all())}  "
-          f"[{cn.stream_stats.summary()}]")
+    if args.hosts:
+        from repro.cluster import check_refinement, partition, run_cluster
+        from repro.core import netlog
+        plan = partition(net, hosts=args.hosts)
+        print(plan.describe())
+        refines = check_refinement(net, plan)
+        print(f"partitioned [T= unpartitioned (CSP, both directions): "
+              f"{refines}")
+        if not refines:
+            raise SystemExit(1)
+        out = run_cluster(net, instances=args.bands, plan=plan,
+                          transport=args.transport,
+                          microbatch_size=max(args.bands // 4, 1),
+                          factory=factory)
+        img = _assemble(out["collect"])
+        print(f"sequential == cluster({args.transport}, {args.hosts} hosts): "
+              f"{bool((img == seq_img).all())}")
+        print(netlog.cluster_report(plan, out.reports))
+        if not (img == seq_img).all():
+            raise SystemExit(1)
+    else:
+        cn = build(net)
+        bands = cn.run(instances=args.bands)["collect"]
+        img = _assemble(bands)
+        print(f"sequential == parallel: {bool((img == seq_img).all())}")
+
+        # streaming microbatch execution: bands flow through in chunks
+        strm_bands = cn.run_streaming(instances=args.bands,
+                                      microbatch_size=max(args.bands // 4, 1)
+                                      )["collect"]
+        strm_img = _assemble(strm_bands)
+        print(f"sequential == streaming: {bool((strm_img == seq_img).all())}  "
+              f"[{cn.stream_stats.summary()}]")
 
     if args.ascii:
         step = max(args.iters // (len(CHARS) - 1), 1)
@@ -89,11 +132,15 @@ def main():
             print("".join(CHARS[min(img[r, c] // step, len(CHARS) - 1)]
                           for c in range(W)))
 
-    # Pallas kernel cross-check on the full image (interpret mode)
-    from repro.kernels.mandelbrot import ops as mb_ops
-    full = mb_ops.mandelbrot(H, W, x0=-2.2, y0=-1.15, pixel_delta=delta,
-                             max_iterations=args.iters, interpret=True)
-    print(f"pallas kernel == farm image: {bool((np.asarray(full) == img).all())}")
+    if not args.hosts:
+        # Pallas kernel cross-check on the full image (interpret mode)
+        from repro.kernels.mandelbrot import ops as mb_ops
+        delta = 3.0 / W
+        full = mb_ops.mandelbrot(H, W, x0=-2.2, y0=-1.15, pixel_delta=delta,
+                                 max_iterations=args.iters,
+                                 interpret=True)
+        print(f"pallas kernel == farm image: "
+              f"{bool((np.asarray(full) == img).all())}")
 
 
 if __name__ == "__main__":

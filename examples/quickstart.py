@@ -5,6 +5,11 @@ the library provides the parallel architecture, formal verification, the
 sequential oracle, and integrated logging.
 
     PYTHONPATH=src python examples/quickstart.py
+
+The same declarative network also deploys across hosts unchanged (the
+paper's cluster capstone): see ``examples/mandelbrot.py --hosts 2`` and
+``python -m repro.launch.cluster`` for the cluster runtime with pluggable
+channel transports.
 """
 
 import jax

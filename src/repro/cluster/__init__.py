@@ -1,0 +1,27 @@
+"""Cluster runtime — multi-host process networks (paper §7, Cluster Builder).
+
+The paper's capstone runs the same Mandelbrot farm unchanged on a multicore
+processor and a workstation cluster.  This package is that step for our
+networks: :func:`partition` splits a verified Network across hosts at
+channel boundaries (with a CSP proof that the partitioned network
+trace-refines the unpartitioned one), :mod:`transport` realises the cut
+channels as bounded FIFO pipes (threads, real OS processes, or JAX mesh
+transfers), and :func:`run_cluster` drives one PR-1 streaming executor per
+host partition with backpressure flowing across the transports.
+"""
+
+from .partition import (PartitionPlan, abstract_partitioned_model,
+                        auto_assignment, check_refinement, partition)
+from .runtime import (ClusterError, ClusterResult, ExecConfig, HostReport,
+                      PartitionExecutor, run_cluster)
+from .transport import (ChannelTransport, InProcess, JaxMesh,
+                        MultiProcessPipe, TransportError, make_transport)
+
+__all__ = [
+    "PartitionPlan", "partition", "auto_assignment",
+    "abstract_partitioned_model", "check_refinement",
+    "ChannelTransport", "InProcess", "MultiProcessPipe", "JaxMesh",
+    "TransportError", "make_transport",
+    "PartitionExecutor", "run_cluster", "ClusterResult", "ClusterError",
+    "HostReport", "ExecConfig",
+]

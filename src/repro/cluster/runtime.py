@@ -1,0 +1,417 @@
+"""Cluster runtime: one streaming executor per host partition.
+
+``run_cluster`` deploys a :class:`~repro.cluster.partition.PartitionPlan`:
+every host runs PR 1's streaming microbatch executor over its own
+subnetwork (:class:`PartitionExecutor` — a :class:`repro.core.stream
+.StreamExecutor` whose boundary Emit shims pull chunks from a
+:class:`~repro.cluster.transport.ChannelTransport` and whose boundary
+Collect shims push chunks into it).  Backpressure composes: inside a host
+the executor bounds in-flight chunks by channel capacity; across hosts the
+transport's bounded FIFO blocks the producer — the tightest channel anywhere
+throttles the whole cluster, exactly as in a buffered CSP chain.
+
+Hosts are threads (``inprocess``/``jaxmesh`` transports) or real spawned OS
+processes (``pipe``); the latter needs a picklable ``factory`` so each
+fresh interpreter can rebuild the network (closures do not pickle).
+
+Failures are captured, never lost: a host that throws reports a full
+traceback in its :class:`HostReport`, pushes EOS down its cut channels so
+consumer hosts fail fast instead of hanging, and ``run_cluster`` raises
+:class:`ClusterError` whose message is the §8-style cluster report
+(:func:`repro.core.netlog.cluster_report`) — the paper's error-capture
+mechanism, now cross-host.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import traceback
+from typing import Any, Callable, Optional
+
+import numpy as np
+
+from repro.core.builder import build, make_emit_batch
+from repro.core.dataflow import Kind, Network, NetworkError
+from repro.core.stream import (EmitChunks, StreamExecutor, _SKIP,
+                               microbatch_plan, slice_microbatch)
+
+from .partition import (PartitionPlan, egress_shim, ingress_shim, is_shim,
+                        partition)
+from .transport import (EOS, SKIP, ChannelTransport, JaxMesh,
+                        MultiProcessPipe, TransportError, make_transport)
+
+__all__ = [
+    "ExecConfig",
+    "HostReport",
+    "ClusterError",
+    "ClusterResult",
+    "PartitionExecutor",
+    "run_cluster",
+]
+
+
+@dataclasses.dataclass
+class ExecConfig:
+    """Per-host streaming-executor knobs (picklable: crosses into spawned
+    host processes)."""
+
+    microbatch_size: int = 8
+    max_in_flight: Optional[int] = None
+    lanes: Optional[int] = None
+
+
+@dataclasses.dataclass
+class HostReport:
+    """What one host did (or failed to do) during a cluster run."""
+
+    host: int
+    procs: list
+    ok: bool = False
+    stats_summary: str = ""
+    donation_summary: str = ""
+    error: Optional[str] = None  # full traceback when not ok
+
+
+class ClusterResult(dict):
+    """Collect results plus per-host telemetry (``.reports``)."""
+
+    reports: list
+
+
+class ClusterError(NetworkError):
+    """A host partition failed; ``reports`` holds every host's outcome."""
+
+    def __init__(self, message: str, reports: list):
+        super().__init__(message)
+        self.reports = reports
+
+
+class PartitionExecutor(StreamExecutor):
+    """StreamExecutor over one host's subnetwork: ingress Emit shims recv
+    from the transport, egress Collect shims send into it."""
+
+    def __init__(self, compiled, *, plan: PartitionPlan, host: int,
+                 endpoint: ChannelTransport, microbatch_size: int,
+                 max_in_flight: Optional[int] = None,
+                 lanes: Optional[int] = None):
+        super().__init__(compiled, microbatch_size=microbatch_size,
+                         max_in_flight=max_in_flight, lanes=lanes)
+        self.host = host
+        self.ep = endpoint
+        self.ingress = [(ingress_shim(c.src, c.dst), (c.src, c.dst))
+                        for c in plan.ingress_of(host)]
+        self.egress = [(egress_shim(c.src, c.dst), (c.src, c.dst))
+                       for c in plan.egress_of(host)]
+        # JaxMesh fold (ROADMAP): an ingress chunk bound for a jitted stage
+        # gets its placement inside that stage jit, not an eager device_put
+        if self.cn.mesh is not None:
+            import jax
+            P = jax.sharding.PartitionSpec
+            for shim, _ in self.ingress:
+                (succ,) = self.net.successors(shim)
+                if self.net.procs[succ].kind in (Kind.WORKER, Kind.ENGINE):
+                    self._in_spec.setdefault(succ, P())
+            # the per-host submesh has only a "host" axis: fan axes named
+            # against the deployment mesh (e.g. axis="data") don't exist
+            # here, so their specs degrade to replication on the submesh
+            known = set(self.cn.mesh.axis_names)
+
+            def _axes(spec):
+                for e in spec:
+                    yield from (e if isinstance(e, (tuple, list)) else (e,))
+
+            for stage, spec in list(self._in_spec.items()):
+                if any(ax is not None and ax not in known
+                       for ax in _axes(spec)):
+                    self._in_spec[stage] = P()
+
+    def _constrain(self, x, axis, *, replicate: bool = False):
+        # same degradation for eagerly-constrained wires (reducer inputs):
+        # unknown deployment-mesh axes replicate on the host submesh
+        if axis is not None and self.cn.mesh is not None:
+            known = set(self.cn.mesh.axis_names)
+            axes = axis if isinstance(axis, (tuple, list)) else (axis,)
+            if any(a not in known for a in axes):
+                axis = None
+        return super()._constrain(x, axis, replicate=replicate)
+
+    # -- hook overrides ------------------------------------------------------
+    def _chunk_inputs(self, ci: int, lo: int, hi: int, batch):
+        chunk = EmitChunks()
+        for e in self.net.emits():
+            if not is_shim(e.name):
+                chunk[e.name] = slice_microbatch(batch, lo, hi)
+        for shim, chan in self.ingress:
+            v = self.ep.recv(chan, ci)
+            if isinstance(v, str):
+                if v == SKIP:
+                    v = _SKIP
+                elif v == EOS:
+                    raise TransportError(
+                        f"channel {chan}: producer host terminated before "
+                        f"chunk {ci}")
+            chunk[shim] = v
+        return chunk
+
+    def _forward_egress(self, ci: int, host_streams: dict) -> None:
+        for shim, chan in self.egress:
+            v = host_streams.pop(shim, _SKIP)
+            self.ep.send(chan, ci, SKIP if v is _SKIP else v)
+
+    def _local_collects(self) -> list:
+        return [p for p in self.net.collects() if not is_shim(p.name)]
+
+    def run_partition(self, bounds: list, batch=None) -> dict:
+        """Stream ``len(bounds)`` chunks through this partition."""
+        return self._run_plan(bounds, batch)
+
+
+# ==========================================================================
+# Per-host execution (shared by thread and process hosts)
+# ==========================================================================
+
+def _emit_batch(net: Network, instances: int):
+    """Batch the host's *real* Emit (ignores boundary shims) — delegates to
+    the builder's batching so cluster item order matches the fused path."""
+    emits = [e for e in net.emits() if not is_shim(e.name)]
+    if not emits:
+        return None
+    if len(emits) != 1:
+        raise NetworkError(f"{net.name}: expected one real Emit, "
+                           f"got {[e.name for e in emits]}")
+    return make_emit_batch(net, instances, emit=emits[0])
+
+
+def _run_host(plan: PartitionPlan, host: int, endpoint: ChannelTransport,
+              bounds: list, instances: int, cfg: ExecConfig, mesh=None):
+    sub = plan.subnetwork(host)
+    cn = build(sub, mesh=mesh)
+    ex = PartitionExecutor(cn, plan=plan, host=host, endpoint=endpoint,
+                           microbatch_size=cfg.microbatch_size,
+                           max_in_flight=cfg.max_in_flight, lanes=cfg.lanes)
+    batch = _emit_batch(sub, instances)
+    out = ex.run_partition(bounds, batch)
+    for _, chan in ex.egress:  # orderly end-of-stream (consumers know the
+        endpoint.send(chan, len(bounds), EOS)  # chunk count; EOS is belt-and-braces)
+    return out, ex.stats
+
+
+def _signal_failure(plan: PartitionPlan, host: int,
+                    endpoint: ChannelTransport) -> None:
+    """Fail fast cluster-wide: EOS to consumers, drain producers."""
+    for c in plan.egress_of(host):
+        try:
+            endpoint.send((c.src, c.dst), -1, EOS)
+        except Exception:
+            pass
+    for c in plan.ingress_of(host):  # unblock upstream senders
+        for _ in range(64):
+            try:
+                got = endpoint.recv((c.src, c.dst), -1)
+            except Exception:
+                break
+            if isinstance(got, str) and got == EOS:
+                break
+
+
+def _encode_result(out):
+    import jax
+    try:
+        return jax.tree_util.tree_map(np.asarray, out)
+    except Exception:
+        return out
+
+
+def _host_entry(factory: Callable, fargs: tuple, assignment: dict,
+                host: int, bounds: list, instances: int,
+                endpoint, result_q, cfg: ExecConfig) -> None:
+    """Spawned-process host main: rebuild the network, run the partition."""
+    plan = None
+    try:
+        net = factory(*fargs)
+        plan = partition(net, assignment=assignment)
+        out, stats = _run_host(plan, host, endpoint, bounds, instances, cfg)
+        result_q.put(("ok", host, _encode_result(out),
+                      (stats.summary(), stats.donation_summary())))
+    except Exception:
+        if plan is not None:
+            _signal_failure(plan, host, endpoint)
+        result_q.put(("err", host, traceback.format_exc(), None))
+
+
+# ==========================================================================
+# The driver
+# ==========================================================================
+
+def run_cluster(net: Optional[Network] = None, *, instances: int,
+                hosts: Optional[int] = None,
+                plan: Optional[PartitionPlan] = None,
+                transport="inprocess",
+                microbatch_size: int = 8,
+                max_in_flight: Optional[int] = None,
+                lanes: Optional[int] = None,
+                factory: Optional[tuple] = None,
+                timeout_s: float = 300.0) -> ClusterResult:
+    """Partition ``net`` over hosts and stream ``instances`` items through.
+
+    ``transport`` is a name (``"inprocess"`` / ``"pipe"`` / ``"jaxmesh"``)
+    or a ready :class:`ChannelTransport`.  The ``pipe`` transport spawns one
+    OS process per host and therefore needs ``factory=(callable, args)`` —
+    a picklable recipe each child uses to rebuild the network.
+
+    Returns a :class:`ClusterResult`: the merged Collect dict (identical to
+    ``run_sequential``), with per-host :class:`HostReport` telemetry in
+    ``.reports``.  Raises :class:`ClusterError` (message = the cross-host
+    netlog report) when any host fails.
+    """
+    if net is None:
+        if factory is None:
+            raise NetworkError("run_cluster: need net= or factory=")
+        net = factory[0](*factory[1])
+    if plan is None:
+        if hosts is None:
+            raise NetworkError("run_cluster: need hosts= or plan=")
+        plan = partition(net, hosts=hosts)
+    t = make_transport(transport) if isinstance(transport, str) else transport
+    cfg = ExecConfig(microbatch_size, max_in_flight, lanes)
+    bounds = microbatch_plan(instances, microbatch_size)
+    cut_chans = [(c.src, c.dst) for c in plan.cut]
+    caps = {(c.src, c.dst): c.capacity for c in plan.cut}
+    t.setup(cut_chans, caps)
+
+    live = plan.hosts()
+    reports = {h: HostReport(host=h, procs=plan.procs_of(h)) for h in live}
+
+    if isinstance(t, MultiProcessPipe):
+        if factory is None:
+            raise NetworkError(
+                "run_cluster: the pipe transport spawns fresh interpreters "
+                "and needs factory=(picklable_callable, args) to rebuild "
+                "the network in each host process")
+        results = _drive_processes(plan, t, live, bounds, instances, cfg,
+                                   factory, reports, timeout_s)
+    else:
+        results = _drive_threads(plan, t, live, bounds, instances, cfg,
+                                 reports, timeout_s)
+    t.close()
+
+    report_list = [reports[h] for h in live]
+    if not all(r.ok for r in report_list):
+        from repro.core import netlog
+        raise ClusterError(netlog.cluster_report(plan, report_list),
+                           report_list)
+    merged = ClusterResult()
+    for h in live:
+        merged.update(results[h])
+    merged.reports = report_list
+    return merged
+
+
+def _drive_threads(plan, t, live, bounds, instances, cfg, reports,
+                   timeout_s):
+    """inprocess / jaxmesh: one daemon thread per host partition."""
+    meshes = {h: None for h in live}
+    if isinstance(t, JaxMesh):
+        import jax
+        split = t.device_split(len(live))
+        # live host ids need not be contiguous (empty hosts drop out of the
+        # plan) — index submeshes by position in the live list
+        host_index = {h: i for i, h in enumerate(live)}
+        meshes = {h: jax.sharding.Mesh(np.asarray([split[host_index[h]]]),
+                                       ("host",))
+                  for h in live}
+        folded = []
+        for c in plan.cut:
+            if plan.net.procs[c.dst].kind in (Kind.WORKER, Kind.ENGINE):
+                folded.append((c.src, c.dst))
+        t.bind([(c.src, c.dst) for c in plan.cut],
+               {(c.src, c.dst): host_index[plan.assignment[c.dst]]
+                for c in plan.cut},
+               len(live), folded=folded)
+
+    results: dict = {}
+    failed = threading.Event()
+
+    def _one(h):
+        try:
+            out, stats = _run_host(plan, h, t.endpoint(h), bounds,
+                                   instances, cfg, mesh=meshes[h])
+            results[h] = out
+            reports[h].ok = True
+            reports[h].stats_summary = stats.summary()
+            reports[h].donation_summary = stats.donation_summary()
+        except Exception:
+            reports[h].error = traceback.format_exc()
+            failed.set()
+            _signal_failure(plan, h, t.endpoint(h))
+
+    threads = [threading.Thread(target=_one, args=(h,), daemon=True,
+                                name=f"gpp-host-{h}") for h in live]
+    import time
+    deadline = time.monotonic() + timeout_s  # one wall clock for all hosts
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join(timeout=5.0 if failed.is_set()
+                else max(0.0, deadline - time.monotonic()))
+    hung = [th.name for th in threads if th.is_alive()]
+    if hung and not failed.is_set():
+        for h in live:
+            if reports[h].error is None and not reports[h].ok:
+                reports[h].error = f"timed out after {timeout_s}s"
+    return results
+
+
+def _drive_processes(plan, t, live, bounds, instances, cfg, factory,
+                     reports, timeout_s):
+    """pipe: one spawned OS process per host partition."""
+    ctx = t.ctx
+    result_q = ctx.Queue()
+    procs = []
+    for h in live:
+        p = ctx.Process(
+            target=_host_entry,
+            args=(factory[0], tuple(factory[1]), plan.assignment, h,
+                  bounds, instances, t.endpoint(h), result_q, cfg),
+            name=f"gpp-host-{h}", daemon=True)
+        p.start()
+        procs.append(p)
+    results: dict = {}
+    import queue as _q
+    import time
+    proc_of = dict(zip(live, procs))
+    deadline = time.monotonic() + timeout_s  # one wall clock for all hosts
+    pending = set(live)
+    dead_strikes: dict = {}
+    while pending and time.monotonic() < deadline:
+        try:
+            status, h, payload, stats = result_q.get(timeout=1.0)
+        except _q.Empty:
+            # fail fast on a host that died without reporting (segfault,
+            # OOM kill) — two empty polls of grace so a result posted just
+            # before exit still drains through the queue feeder
+            for h in sorted(pending):
+                if not proc_of[h].is_alive():
+                    dead_strikes[h] = dead_strikes.get(h, 0) + 1
+                    if dead_strikes[h] >= 2:
+                        reports[h].error = (
+                            f"host process died (exitcode "
+                            f"{proc_of[h].exitcode}) without reporting")
+                        pending.discard(h)
+            continue
+        if status == "ok":
+            results[h] = payload
+            reports[h].ok = True
+            reports[h].stats_summary, reports[h].donation_summary = stats
+        else:
+            reports[h].error = payload
+        pending.discard(h)
+    for p in procs:
+        p.join(timeout=10.0)
+        if p.is_alive():
+            p.terminate()
+    for h in live:
+        if not reports[h].ok and reports[h].error is None:
+            reports[h].error = f"no result within {timeout_s}s"
+    return results

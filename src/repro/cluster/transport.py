@@ -1,0 +1,274 @@
+"""Pluggable channel transports: how a cut channel moves chunks between hosts.
+
+A :class:`ChannelTransport` realises the cut channels of a
+:class:`repro.cluster.partition.PartitionPlan` as bounded FIFO pipes.  The
+bound is the channel's CSP ``capacity`` (``ChannelDef.capacity``; rendezvous
+channels get ``DEFAULT_CAPACITY``), and ``send`` *blocks* when the pipe is
+full — PR 1's in-executor backpressure extended across the host boundary:
+a slow consumer host throttles its producer host through the transport
+itself, exactly as a buffered CSP channel chain would.
+
+Three implementations:
+
+* :class:`InProcess` — ``queue.Queue``-backed loopback; hosts are threads in
+  this interpreter.  Always available; the reference semantics.
+* :class:`MultiProcessPipe` — ``multiprocessing`` queues between *real OS
+  processes* (spawn start method: each host is a fresh interpreter with its
+  own JAX runtime), so CI exercises genuine host boundaries on CPU.  Values
+  cross as numpy pytrees (:func:`encode` / :func:`decode`).
+* :class:`JaxMesh` — hosts are submeshes of one JAX mesh; a send places the
+  chunk onto the consumer host's submesh (``device_put`` → ICI/DCN transfer
+  on real hardware), and when the consumer's first stage is jitted the
+  placement is *folded into that stage jit* as a ``with_sharding_constraint``
+  (the ROADMAP's "fold per-chunk device_put sharding into the stage jits"),
+  so transfer and compute compile into one program.
+
+All transports carry a per-chunk SKIP marker so upstream COMBINE reducers
+(which emit nothing until their final chunk) stay chunk-aligned across the
+cut, and an EOS marker as a defensive stream terminator.
+"""
+
+from __future__ import annotations
+
+import queue
+
+import numpy as np
+
+from repro.core.dataflow import NetworkError
+
+__all__ = [
+    "DEFAULT_CAPACITY",
+    "SKIP",
+    "EOS",
+    "TransportError",
+    "ChannelTransport",
+    "InProcess",
+    "MultiProcessPipe",
+    "JaxMesh",
+    "make_transport",
+    "encode",
+    "decode",
+]
+
+DEFAULT_CAPACITY = 2  # rendezvous channels buffer like the stream executor
+SKIP = "__gpp_skip__"  # chunk produced nothing (COMBINE still accumulating)
+EOS = "__gpp_eos__"    # defensive end-of-stream marker
+
+_RECV_TIMEOUT_S = 120.0  # a hung peer surfaces as a TransportError, not a hang
+
+
+class TransportError(NetworkError):
+    """A cut channel failed (peer died, timeout, protocol violation)."""
+
+
+def encode(value):
+    """Pytree of arrays -> picklable numpy pytree (identity for markers)."""
+    if isinstance(value, str):
+        return value
+    import jax
+    return jax.tree_util.tree_map(np.asarray, value)
+
+
+def decode(value):
+    """Inverse of :func:`encode`; numpy feeds jax ops directly."""
+    return value
+
+
+class ChannelTransport:
+    """One bounded FIFO per cut channel; chunk-granular send/recv.
+
+    ``chan`` keys are ``(src, dst)`` process-name pairs from the plan's cut
+    list.  ``send`` blocks on a full pipe (backpressure); ``recv`` blocks on
+    an empty one and raises :class:`TransportError` after a timeout.
+    """
+
+    name = "abstract"
+
+    def setup(self, cut_channels, capacities: dict) -> None:
+        raise NotImplementedError
+
+    def endpoint(self, host: int):
+        """The (possibly serialisable) handle a host runner uses."""
+        return self
+
+    def send(self, chan, ci: int, value) -> None:
+        raise NotImplementedError
+
+    def recv(self, chan, ci: int):
+        raise NotImplementedError
+
+    def close(self) -> None:
+        pass
+
+
+class _QueueTransport(ChannelTransport):
+    """Shared logic for queue-per-channel transports."""
+
+    def __init__(self):
+        self._queues: dict = {}
+
+    def _capacity(self, capacities, chan) -> int:
+        cap = capacities.get(chan, 0)
+        return cap if cap > 0 else DEFAULT_CAPACITY
+
+    def send(self, chan, ci: int, value) -> None:
+        try:
+            self._queues[chan].put((ci, self._pack(value)),
+                                   timeout=_RECV_TIMEOUT_S)
+        except queue.Full:
+            raise TransportError(
+                f"{self.name}: channel {chan} full for {_RECV_TIMEOUT_S}s "
+                "(consumer host stalled?)") from None
+
+    def recv(self, chan, ci: int):
+        try:
+            got_ci, value = self._queues[chan].get(
+                timeout=_RECV_TIMEOUT_S if ci >= 0 else 1.0)
+        except queue.Empty:
+            raise TransportError(
+                f"{self.name}: channel {chan} empty for {_RECV_TIMEOUT_S}s "
+                "(producer host died?)") from None
+        if isinstance(value, str) and value == EOS:
+            return EOS  # stream terminator outranks the order check (a peer
+            # failing mid-stream sends EOS out of band; the caller reports it)
+        if ci >= 0 and got_ci != ci:  # ci < 0: draining, any chunk accepted
+            raise TransportError(
+                f"{self.name}: channel {chan} out of order: expected chunk "
+                f"{ci}, got {got_ci}")
+        return self._unpack(value)
+
+    def _pack(self, value):
+        return value
+
+    def _unpack(self, value):
+        return value
+
+
+class InProcess(_QueueTransport):
+    """Loopback transport: hosts are threads, channels are ``queue.Queue``s
+    bounded by the CSP capacity.  The always-available reference."""
+
+    name = "inprocess"
+
+    def setup(self, cut_channels, capacities) -> None:
+        for chan in cut_channels:
+            self._queues[chan] = queue.Queue(
+                maxsize=self._capacity(capacities, chan))
+
+
+class MultiProcessPipe(_QueueTransport):
+    """Real host boundaries: one OS process per host (``spawn`` — a fresh
+    interpreter and JAX runtime each), channels are bounded
+    ``multiprocessing`` queues, values cross as pickled numpy pytrees."""
+
+    name = "pipe"
+
+    def __init__(self, ctx=None):
+        super().__init__()
+        if ctx is None:
+            import multiprocessing
+            # spawn: never fork a live JAX runtime (XLA thread pools do not
+            # survive fork); children rebuild the network from a factory
+            ctx = multiprocessing.get_context("spawn")
+        self.ctx = ctx
+
+    def setup(self, cut_channels, capacities) -> None:
+        for chan in cut_channels:
+            self._queues[chan] = self.ctx.Queue(
+                maxsize=self._capacity(capacities, chan))
+
+    def endpoint(self, host: int):
+        # mp.Queues are inheritable through Process args; ship only the dict
+        return _PipeEndpoint(self._queues)
+
+    def _pack(self, value):
+        return encode(value)
+
+    def _unpack(self, value):
+        return decode(value)
+
+    def close(self) -> None:
+        for q in self._queues.values():
+            q.close()
+            q.join_thread()
+
+
+class _PipeEndpoint(_QueueTransport):
+    """Child-process handle of a MultiProcessPipe (picklable via Process
+    args inheritance)."""
+
+    name = "pipe"
+
+    def __init__(self, queues):
+        super().__init__()
+        self._queues = queues
+
+    def _pack(self, value):
+        return encode(value)
+
+    def _unpack(self, value):
+        return decode(value)
+
+
+class JaxMesh(InProcess):
+    """Cross-host channels over one JAX mesh: host *h* owns submesh *h*
+    (``device_split``), and a send materialises the chunk on the consumer's
+    submesh.  When the consumer's first stage is a jitted Worker/Engine, the
+    placement is instead folded into that stage jit (the runtime seeds the
+    executor's ``_in_spec``), so the cross-host reshard and the stage body
+    are one compiled program — mesh collectives, not eager copies."""
+
+    name = "jaxmesh"
+
+    def __init__(self, mesh=None, devices=None):
+        super().__init__()
+        import jax
+        self._jax = jax
+        if devices is None:
+            devices = list(mesh.devices.flat) if mesh is not None \
+                else jax.devices()
+        self.devices = devices
+        self._dst_sharding: dict = {}
+        self._folded: set = set()  # chans whose consumer stage folds the put
+
+    def device_split(self, n_hosts: int) -> list:
+        """Round-robin split of the device list into per-host submeshes
+        (degenerates gracefully when hosts outnumber devices)."""
+        return [self.devices[h % len(self.devices)] for h in range(n_hosts)]
+
+    def bind(self, cut_channels, dst_hosts: dict, n_hosts: int,
+             folded=()) -> None:
+        """Record each channel's consumer submesh; ``folded`` channels skip
+        the eager put (their stage jit holds the sharding constraint)."""
+        split = self.device_split(n_hosts)
+        for chan in cut_channels:
+            self._dst_sharding[chan] = \
+                self._jax.sharding.SingleDeviceSharding(
+                    split[dst_hosts[chan]])
+        self._folded = set(folded)
+
+    def _put(self, chan, value):
+        sharding = self._dst_sharding.get(chan)
+        if sharding is None or chan in self._folded:
+            return value
+
+        def _one(leaf):
+            if hasattr(leaf, "ndim"):
+                return self._jax.device_put(leaf, sharding)
+            return leaf
+
+        return self._jax.tree_util.tree_map(_one, value)
+
+    def send(self, chan, ci: int, value) -> None:
+        if not isinstance(value, str):
+            value = self._put(chan, value)
+        super().send(chan, ci, value)
+
+
+def make_transport(kind: str, **kw) -> ChannelTransport:
+    kinds = {"inprocess": InProcess, "pipe": MultiProcessPipe,
+             "jaxmesh": JaxMesh}
+    if kind not in kinds:
+        raise NetworkError(
+            f"unknown transport {kind!r}; pick one of {sorted(kinds)}")
+    return kinds[kind](**kw)

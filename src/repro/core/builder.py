@@ -32,7 +32,8 @@ import jax.numpy as jnp
 from .dataflow import Distribution, Kind, Network, NetworkError, ProcessDef
 from .verify import verify
 
-__all__ = ["run_sequential", "build", "CompiledNetwork", "StageLog"]
+__all__ = ["run_sequential", "build", "CompiledNetwork", "StageLog",
+           "make_emit_batch"]
 
 
 # ==========================================================================
@@ -311,19 +312,7 @@ class CompiledNetwork:
 
     def make_batch(self, instances: int):
         """Build the batched Emit output on the host (stacking create(i))."""
-        emits = self.net.emits()
-        if len(emits) != 1:
-            raise NetworkError("make_batch requires exactly one Emit")
-        e = emits[0]
-        if e.modifier:
-            local = e.modifier[0]()
-            items = []
-            for i in range(instances):
-                item, local = e.fn(i, local)
-                items.append(item)
-        else:
-            items = [e.fn(i) for i in range(instances)]
-        return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *items)
+        return make_emit_batch(self.net, instances)
 
     def run(self, batch=None, *, instances: Optional[int] = None,
             logged: bool = False):
@@ -474,6 +463,32 @@ class CompiledNetwork:
 
 
 # -- batch/stream manipulation helpers -------------------------------------
+
+def make_emit_batch(net: Network, instances: int, *, emit=None):
+    """Materialise the single Emit's output as a stacked batch pytree.
+
+    Module-level so callers that never build a ``CompiledNetwork`` for the
+    whole graph (the cluster runtime batches on the Emit-owning host only)
+    share the exact item order of the fused path.  ``emit`` overrides the
+    Emit to batch when the net holds more than one (cluster partitions also
+    carry boundary-ingress Emit shims).
+    """
+    if emit is None:
+        emits = net.emits()
+        if len(emits) != 1:
+            raise NetworkError("make_batch requires exactly one Emit")
+        emit = emits[0]
+    e = emit
+    if e.modifier:
+        local = e.modifier[0]()
+        items = []
+        for i in range(instances):
+            item, local = e.fn(i, local)
+            items.append(item)
+    else:
+        items = [e.fn(i) for i in range(instances)]
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *items)
+
 
 def _fan_split(x, k: int):
     """Round-robin split of the leading axis into k streams (OneFanList)."""

@@ -172,6 +172,7 @@ class Network:
         self.name = name
         self.procs: dict[str, ProcessDef] = {}
         self.channels: list[ChannelDef] = []
+        self.placement: dict[str, int] = {}  # explicit host pins (cluster)
         self._tail: Optional[str] = None
         self._frozen = False
 
@@ -195,6 +196,23 @@ class Network:
         if capacity < 0:
             raise NetworkError(f"connect: capacity must be >= 0, got {capacity}")
         self.channels.append(ChannelDef(src, dst, spec, capacity))
+        return self
+
+    def place(self, process: str, *, host: int) -> "Network":
+        """Pin ``process`` to ``host`` for cluster deployment.
+
+        Placement is advisory metadata consumed by
+        :func:`repro.cluster.partition.partition`: pinned processes keep their
+        host, the rest are balanced automatically.  A network with no
+        placements partitions fully automatically; a placement that would
+        make the host graph cyclic (or cut an un-cuttable channel) is
+        rejected by the planner, not here.
+        """
+        if process not in self.procs:
+            raise NetworkError(f"place: unknown process {process!r}")
+        if host < 0:
+            raise NetworkError(f"place: host must be >= 0, got {host}")
+        self.placement[process] = host
         return self
 
     def branch(self, at: str) -> "Network":

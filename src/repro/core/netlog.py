@@ -14,7 +14,7 @@ from typing import Sequence
 from .builder import CompiledNetwork, StageLog
 from .dataflow import Network
 
-__all__ = ["timeline", "topology", "report"]
+__all__ = ["timeline", "topology", "report", "cluster_report"]
 
 _BAR = "█"
 
@@ -57,3 +57,27 @@ def topology(net: Network) -> str:
 def report(cn: CompiledNetwork) -> str:
     """Full §8-style report: topology + timeline of the last logged run."""
     return topology(cn.net) + "\n\n" + timeline(cn.logs)
+
+
+def cluster_report(plan, reports) -> str:
+    """Cross-host §8 report: per-host partition, streaming telemetry, and
+    captured failures (the paper's error-capture mechanism at cluster scale).
+
+    ``plan`` is a :class:`repro.cluster.partition.PartitionPlan`; ``reports``
+    a list of :class:`repro.cluster.runtime.HostReport`.  Pure formatting —
+    no cluster imports, so the core stays dependency-free."""
+    lines = [f"== cluster: {plan.net.name} over {len(reports)} host(s) =="]
+    for c in plan.cut:
+        lines.append(f"  channel {c.src} -> {c.dst}: host "
+                     f"{plan.assignment[c.src]} -> {plan.assignment[c.dst]} "
+                     f"(capacity={c.capacity or 'default'})")
+    for r in sorted(reports, key=lambda r: r.host):
+        state = "ok" if r.ok else "FAILED"
+        lines.append(f"-- host {r.host} [{state}]: {', '.join(r.procs)}")
+        if r.stats_summary:
+            lines.append(f"   {r.stats_summary}")
+        if r.donation_summary:
+            lines.append(f"   {r.donation_summary}")
+        if r.error:
+            lines.extend(f"   ! {ln}" for ln in r.error.strip().splitlines())
+    return "\n".join(lines)

@@ -57,6 +57,7 @@ __all__ = [
     "microbatch_plan",
     "slice_microbatch",
     "stack_microbatches",
+    "EmitChunks",
     "StreamStats",
     "StreamExecutor",
     "streaming_abstract_model",
@@ -64,6 +65,12 @@ __all__ = [
 ]
 
 _SKIP = object()  # sentinel: no chunk flowed down this branch
+
+
+class EmitChunks(dict):
+    """Chunk values keyed by Emit process name (cluster partitions feed
+    several boundary-ingress Emits per chunk).  A dedicated type: a plain
+    dict is a legal *pytree batch* and must reach every Emit whole."""
 
 
 # ==========================================================================
@@ -121,11 +128,25 @@ class StreamStats:
     lanes: int = 1
     schedule: list = dataclasses.field(default_factory=list)  # (chunk, lane)
     stalls: int = 0  # times the dispatcher blocked on backpressure
+    # per-stage buffer-donation outcomes: {stage: [chunks_requested,
+    # chunks_honoured]} — honoured means the input buffer was actually
+    # consumed (is_deleted) by the stage jit, i.e. the memory was reused
+    donation: dict = dataclasses.field(default_factory=dict)
+    donation_enabled: bool = False  # False on backends without donation (CPU)
+
+    def donation_summary(self) -> str:
+        if not self.donation_enabled:
+            return "donation: disabled (backend has no buffer donation)"
+        per = " ".join(f"{s}={h}/{r}" for s, (r, h) in
+                       sorted(self.donation.items()))
+        return f"donation: {per or '(no functional stages)'}"
 
     def summary(self) -> str:
+        req = sum(r for r, _ in self.donation.values())
+        hon = sum(h for _, h in self.donation.values())
         return (f"stream: {self.n_chunks} chunks × ≤{self.microbatch_size} "
                 f"items, depth={self.depth}, lanes={self.lanes}, "
-                f"stalls={self.stalls}")
+                f"stalls={self.stalls}, donated={hon}/{req}")
 
 
 class StreamExecutor:
@@ -156,8 +177,26 @@ class StreamExecutor:
         # CPU has no buffer donation — requesting it only buys a UserWarning
         # per stage per chunk
         self._can_donate = jax.default_backend() != "cpu"
+        # mesh execution: fold each stage's input sharding constraint INTO its
+        # jit (with_sharding_constraint inside the traced program) instead of
+        # an eager per-chunk device_put between stages — the constraint and
+        # the compute compile to one program, so XLA overlaps the reshard with
+        # the stage body.  Maps stage name -> PartitionSpec of its input.
+        self._in_spec: dict = {}
+        if self.cn.mesh is not None:
+            P = jax.sharding.PartitionSpec
+            for c in self.net.channels:
+                src, dst = self.net.procs[c.src], self.net.procs[c.dst]
+                if (dst.kind in (Kind.WORKER, Kind.ENGINE)
+                        and src.kind is Kind.SPREADER):
+                    if src.distribution is Distribution.FAN:
+                        spec = P(src.axis) if src.axis is not None else P()
+                    else:  # casts replicate
+                        spec = P()
+                    self._in_spec[c.dst] = spec
         self.stats = StreamStats(microbatch_size=self.mb, depth=self.depth,
-                                 lanes=self.lanes)
+                                 lanes=self.lanes,
+                                 donation_enabled=self._can_donate)
 
     def _is_fan_any(self, name: str) -> bool:
         p = self.net.procs[name]
@@ -169,6 +208,16 @@ class StreamExecutor:
         key = (name, donate)
         if key not in self._jits:
             fn = self.cn.stage_fn(name)
+            spec = self._in_spec.get(name)
+            if spec is not None:  # sharding constraint folded into the jit
+                sharding = jax.sharding.NamedSharding(self.cn.mesh, spec)
+
+                def fn(x, _inner=fn, _s=sharding):
+                    x = jax.tree_util.tree_map(
+                        lambda l: jax.lax.with_sharding_constraint(l, _s)
+                        if hasattr(l, "ndim") and l.ndim > 0 else l, x)
+                    return _inner(x)
+
             self._jits[key] = jax.jit(
                 fn, donate_argnums=(0,) if donate else ())
         return self._jits[key]
@@ -185,9 +234,17 @@ class StreamExecutor:
                 self.cn.combine_carry_fn(name))
         return self._jits[("comb", name)]
 
+    def _wire(self, x, axis, dst: str, *, replicate: bool = False):
+        """Constrain a value flowing to ``dst``: a no-op when ``dst``'s stage
+        jit folds the constraint itself (``_in_spec``), else the eager put."""
+        if dst in self._in_spec:
+            return x
+        return self._constrain(x, axis, replicate=replicate)
+
     def _constrain(self, x, axis, *, replicate: bool = False):
         """Eager analogue of the builder's sharding constraint (device_put —
-        with_sharding_constraint needs a trace context)."""
+        with_sharding_constraint needs a trace context).  Used only for wires
+        whose reader has no stage jit to fold the constraint into."""
         mesh = self.cn.mesh
         if mesh is None:
             return x
@@ -259,6 +316,10 @@ class StreamExecutor:
     def _dispatch_chunk(self, ci: int, chunk, final: bool):
         """Push one microbatch through every stage (async — no blocking).
 
+        ``chunk`` is the Emit's microbatch; a partitioned network (cluster
+        runtime) passes an :class:`EmitChunks` map instead, so
+        boundary-ingress Emits each carry their own transported chunk.
+
         Returns (collect_streams, host_streams, lanes_used): the values bound
         for each Collect (pre-fold), the host-side collect streams, and the
         work-stealing lanes this chunk occupies.
@@ -276,8 +337,9 @@ class StreamExecutor:
             p = net.procs[name]
             succs = net.successors(name)
             if p.kind is Kind.EMIT:
+                out = chunk[name] if isinstance(chunk, EmitChunks) else chunk
                 for s in succs:
-                    wires[(name, s)] = chunk
+                    wires[(name, s)] = out
             elif p.kind is Kind.SPREADER:
                 (x,) = _pop_in(name)
                 if x is _SKIP:
@@ -285,7 +347,8 @@ class StreamExecutor:
                         wires[(name, s)] = _SKIP
                 elif p.distribution is Distribution.FAN:
                     if len(succs) == 1:
-                        wires[(name, succs[0])] = self._constrain(x, p.axis)
+                        wires[(name, succs[0])] = self._wire(
+                            x, p.axis, succs[0])
                     elif p.fan_any or self._homogeneous_fan(name):
                         # whole chunk to one branch: work-stealing lane for
                         # OneFanAny, round-robin for a homogeneous OneFanList
@@ -296,18 +359,25 @@ class StreamExecutor:
                         take = lane % len(succs)
                         for j, s in enumerate(succs):
                             wires[(name, s)] = (
-                                self._constrain(x, p.axis) if j == take
+                                self._wire(x, p.axis, s) if j == take
                                 else _SKIP)
                     else:  # heterogeneous branches: item-level round-robin —
                         # every chunk must split evenly or assignment drifts
                         # from the sequential oracle's
                         outs = _fan_split(x, len(succs))
                         for j, s in enumerate(succs):
-                            wires[(name, s)] = self._constrain(outs[j], p.axis)
-                else:  # casts: every successor reads the same (immutable) value
-                    rep = self._constrain(x, None, replicate=True)
+                            wires[(name, s)] = self._wire(outs[j], p.axis, s)
+                else:  # casts: every successor reads the same (immutable)
+                    # value — one replicated copy shared by all non-folded
+                    # readers (folded stages place it inside their own jit)
+                    rep = None
                     for s in succs:
-                        wires[(name, s)] = rep
+                        if s in self._in_spec:
+                            wires[(name, s)] = x
+                        else:
+                            if rep is None:
+                                rep = self._constrain(x, None, replicate=True)
+                            wires[(name, s)] = rep
             elif p.kind in (Kind.WORKER, Kind.ENGINE):
                 (x,) = _pop_in(name)
                 if x is _SKIP:
@@ -321,6 +391,15 @@ class StreamExecutor:
                                          *collect_streams.values(),
                                          *host_streams.values()))
                     out = self._stage_jit(name, donate)(x)
+                    if donate:
+                        rec = self.stats.donation.setdefault(name, [0, 0])
+                        rec[0] += 1
+                        leaves = [l for l in jax.tree_util.tree_leaves(x)
+                                  if hasattr(l, "is_deleted")]
+                        if leaves and all(l.is_deleted() for l in leaves):
+                            rec[1] += 1
+                    else:
+                        self.stats.donation.setdefault(name, [0, 0])
                 for s in succs:
                     wires[(name, s)] = out
             elif p.kind is Kind.REDUCER:
@@ -340,8 +419,11 @@ class StreamExecutor:
                     else:
                         self._combine_carry[name] = acc
                         out = _SKIP
-                else:  # MERGE
-                    out = xs[0] if len(xs) == 1 else _fan_merge(xs)
+                else:  # MERGE (all-skip when e.g. every lane sat out a chunk)
+                    if not xs:
+                        out = _SKIP
+                    else:
+                        out = xs[0] if len(xs) == 1 else _fan_merge(xs)
                 for s in succs:
                     wires[(name, s)] = out
             elif p.kind is Kind.COLLECT:
@@ -377,30 +459,48 @@ class StreamExecutor:
 
     def run(self, batch):
         """Stream ``batch`` through the network; returns the Collect dict."""
-        net = self.net
         leaves = jax.tree_util.tree_leaves(batch)
         if not leaves:
             raise NetworkError("run: empty batch")
         n = leaves[0].shape[0]
-        plan = microbatch_plan(n, self.mb)
+        return self._run_plan(microbatch_plan(n, self.mb), batch)
+
+    # -- hooks the cluster PartitionExecutor overrides -----------------------
+    def _chunk_inputs(self, ci: int, lo: int, hi: int, batch):
+        """The value(s) the Emit(s) produce for chunk ``ci``."""
+        return slice_microbatch(batch, lo, hi)
+
+    def _forward_egress(self, ci: int, host_streams: dict) -> None:
+        """Ship boundary-collect values (cluster cut channels); base: none."""
+
+    def _local_collects(self) -> list:
+        """The Collects whose folds this executor owns (cluster partitions
+        exclude boundary shims)."""
+        return list(self.net.collects())
+
+    def _run_plan(self, plan, batch):
+        net = self.net
         self._check_fan_divisibility(plan)
+        n = plan[-1][1] if plan else 0
         self.stats = StreamStats(n_items=n, microbatch_size=self.mb,
                                  n_chunks=len(plan), depth=self.depth,
-                                 lanes=self.lanes)
+                                 lanes=self.lanes,
+                                 donation_enabled=self._can_donate)
         self._outstanding = [0] * self.lanes
         self._combine_carry = {}
 
         jit_accs: dict[str, Any] = {}
         host_accs = {p.name: copy.deepcopy(p.init)
-                     for p in net.collects() if not p.jit_combine}
+                     for p in self._local_collects() if not p.jit_combine}
         in_flight: deque = deque()
         for ci, (lo, hi) in enumerate(plan):
             if len(in_flight) >= self.depth:  # backpressure BEFORE dispatch:
                 self.stats.stalls += 1       # at most `depth` chunks unretired
                 self._retire(in_flight.popleft(), host_accs)
-            chunk = slice_microbatch(batch, lo, hi)
+            chunk = self._chunk_inputs(ci, lo, hi, batch)
             streams, host_streams, lanes_used = self._dispatch_chunk(
                 ci, chunk, final=ci == len(plan) - 1)
+            self._forward_egress(ci, host_streams)
             for name, x in streams.items():
                 if name not in jit_accs:  # first chunk: the fused fold w/ init
                     jit_accs[name] = self._stage_jit(name, False)(x)
@@ -415,7 +515,7 @@ class StreamExecutor:
             self._retire(in_flight.popleft(), host_accs)
 
         out: dict[str, Any] = {}
-        for p in net.collects():
+        for p in self._local_collects():
             if p.jit_combine:
                 val = jax.block_until_ready(jit_accs[p.name])
             else:

@@ -1,0 +1,98 @@
+"""Cluster launcher: one GPP network, many hosts (paper §7).
+
+    python -m repro.launch.cluster --hosts 2 --transport pipe --instances 16
+
+Partitions the demo workload (a Mandelbrot row-band farm or a two-stage
+pipeline) over ``--hosts`` simulated hosts, proves via the CSP checker that
+the partitioned network trace-refines the unpartitioned one, streams the
+work through one executor per host, verifies the result bit-identical to the
+sequential oracle, and prints the cross-host netlog report.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+
+# module-level factories: the pipe transport spawns fresh interpreters that
+# rebuild the network from a picklable (callable, args) recipe
+
+def make_mandelbrot(bands: int, height: int, width: int, iters: int):
+    import jax.numpy as jnp
+    from repro.core import DataParallelCollect
+    from repro.kernels.mandelbrot import ref
+
+    band_h = height // bands
+    delta = 3.0 / width
+
+    def create(i):
+        return jnp.asarray(i * band_h, jnp.int32)
+
+    def render(row0):
+        # the shared escape-time oracle, offset to this band's top row
+        return ref.mandelbrot(band_h, width, x0=-2.2,
+                              y0=-1.15 + delta * row0, pixel_delta=delta,
+                              max_iterations=iters)
+
+    return DataParallelCollect(
+        create=create, function=render,
+        collector=lambda acc, cnt: acc + jnp.sum(cnt),
+        init=jnp.asarray(0, jnp.int32), workers=bands, jit_combine=True,
+        name="mandelbrot")
+
+
+def make_pipeline(scale: float):
+    import jax.numpy as jnp
+    from repro.core import OnePipelineCollect
+    return OnePipelineCollect(
+        create=lambda i: jnp.asarray(float(i)),
+        stage_ops=[lambda x: x * x, lambda x: x * scale + 1.0],
+        collector=lambda a, x: a + x, init=jnp.asarray(0.0),
+        jit_combine=True, name="pipeline")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--hosts", type=int, default=2)
+    ap.add_argument("--transport", default="pipe",
+                    choices=["inprocess", "pipe", "jaxmesh"])
+    ap.add_argument("--workload", default="mandelbrot",
+                    choices=["mandelbrot", "pipeline"])
+    ap.add_argument("--instances", type=int, default=8)
+    ap.add_argument("--microbatch", type=int, default=2)
+    ap.add_argument("--bands", type=int, default=8)
+    ap.add_argument("--size", type=int, default=64)
+    ap.add_argument("--iters", type=int, default=40)
+    args = ap.parse_args()
+
+    from repro.cluster import check_refinement, partition, run_cluster
+    from repro.core import netlog, run_sequential
+
+    if args.workload == "mandelbrot":
+        factory = (make_mandelbrot,
+                   (args.bands, args.size, args.size, args.iters))
+        instances = args.bands
+    else:
+        factory = (make_pipeline, (2.0,))
+        instances = args.instances
+    net = factory[0](*factory[1])
+    plan = partition(net, hosts=args.hosts)
+    print(plan.describe())
+    print(f"[cluster] CSP refinement (partitioned [T= unpartitioned, both "
+          f"directions): {check_refinement(net, plan)}")
+
+    out = run_cluster(net, instances=instances, plan=plan,
+                      transport=args.transport,
+                      microbatch_size=args.microbatch, factory=factory)
+    seq = run_sequential(net, instances)
+    same = all(bool((out[k] == seq[k]).all() if hasattr(seq[k], "all")
+                    else out[k] == seq[k]) for k in seq)
+    print(f"[cluster] {args.transport} over {args.hosts} hosts == "
+          f"sequential oracle: {same}")
+    print(netlog.cluster_report(plan, out.reports))
+    if not same:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

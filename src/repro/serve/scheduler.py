@@ -85,6 +85,11 @@ class FarmScheduler:
 
     # -- host-side farm ------------------------------------------------------
     def submit(self, req: Request) -> None:
+        # reject before a slot is claimed: an empty prompt discovered inside
+        # _fill_slots would leave the slot half-initialised (cache reset,
+        # no last token) and hang the farm
+        if not req.prompt:
+            raise ValueError(f"request {req.rid}: empty prompt")
         req.generated = []
         self.queue.append(req)
 
@@ -95,7 +100,10 @@ class FarmScheduler:
                 self.slot_req[s] = req
                 self.cache = self._reset(self.cache, s)
                 # chunked prefill: prompt context flows through the streaming
-                # microbatch plan, one async dispatch per chunk (not per token)
+                # microbatch plan, one async dispatch per chunk (not per
+                # token).  A single-token prompt has no context: the plan is
+                # empty, no prefill dispatches, and the slot goes straight to
+                # decoding from the (reset) cache and that one token.
                 ctx = req.prompt[:-1]
                 for lo, hi in microbatch_plan(len(ctx), self.prefill_chunk):
                     toks = np.zeros(self.prefill_chunk, np.int32)

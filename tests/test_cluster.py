@@ -1,0 +1,338 @@
+"""Cluster runtime: partitioning, transports, cross-host refinement.
+
+The paper's capstone property — the same network runs unchanged on one
+machine and on a cluster — plus the §6.1.1 refinement story lifted to
+deployment: the partitioned network trace-refines the unpartitioned one
+(checked both directions), and every transport reproduces the sequential
+oracle bit-for-bit.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cluster import (ClusterError, InProcess, JaxMesh,
+                           MultiProcessPipe, PartitionExecutor,
+                           abstract_partitioned_model, auto_assignment,
+                           check_refinement, make_transport, partition,
+                           run_cluster)
+from repro.core import (Collect, CombineNto1, DataParallelCollect, Emit,
+                        GroupOfPipelineCollects, Network, NetworkError,
+                        OnePipelineCollect, OneSeqCastList, Worker, build,
+                        csp, netlog, run_sequential)
+from repro.core.dataflow import Kind
+
+
+def _sq(x):
+    return x * x
+
+
+def _inc(x):
+    return x + 1.0
+
+
+def _add(a, x):
+    return a + x
+
+
+def _mk_items(n):
+    return lambda i: jnp.asarray(float(i))
+
+
+def _farm(n=10, workers=3, **kw):
+    return DataParallelCollect(create=_mk_items(n), function=_sq,
+                               collector=_add, init=jnp.asarray(0.0),
+                               workers=workers, jit_combine=True, **kw)
+
+
+def _pipeline(n=7):
+    return OnePipelineCollect(create=_mk_items(n), stage_ops=[_sq, _inc],
+                              collector=_add, init=jnp.asarray(0.0),
+                              jit_combine=True)
+
+
+# module-level factory: the pipe transport's spawned hosts rebuild from this
+def _farm_factory(n, workers):
+    return DataParallelCollect(
+        create=lambda i: jnp.asarray(float(i)),
+        function=lambda x: x * x,
+        collector=lambda a, x: a + x, init=jnp.asarray(0.0),
+        workers=workers, jit_combine=True)
+
+
+class TestPartitionPlanning:
+    def test_auto_balanced_cut_farm(self):
+        net = _farm()
+        plan = partition(net, hosts=2)
+        assert plan.hosts() == [0, 1]
+        assert len(plan.cut) == 1
+        (c,) = plan.cut
+        assert len(net.successors(c.src)) == 1  # never cuts a fan
+        # both partitions are legal GPP networks
+        for h in plan.hosts():
+            plan.subnetwork(h)
+
+    def test_explicit_farm_branches_stay_with_spreader(self):
+        net = _farm(9, 3, explicit=True)
+        a = auto_assignment(net, 2)
+        # every OneFanAny branch shares the spreader's host
+        assert len({a[w] for w in net.successors("ofa")} | {a["ofa"]}) == 1
+
+    def test_place_pins_override_auto(self):
+        net = _pipeline()
+        net.place("stage0", host=0).place("stage1", host=1)
+        plan = partition(net, hosts=2)
+        assert plan.assignment["stage0"] == 0
+        assert plan.assignment["stage1"] == 1
+
+    def test_place_validates(self):
+        net = _pipeline()
+        with pytest.raises(NetworkError, match="unknown process"):
+            net.place("nope", host=0)
+        with pytest.raises(NetworkError, match="host must be"):
+            net.place("stage0", host=-1)
+
+    def test_cyclic_host_graph_rejected(self):
+        net = _pipeline()
+        # emit..stage0 downstream of stage1 by host → host cycle 0<->1
+        bad = {"emit": 1, "stage0": 1, "stage1": 0, "collect": 1}
+        with pytest.raises(NetworkError, match="cyclic"):
+            partition(net, assignment=bad)
+
+    def test_fan_cut_rejected(self):
+        net = _farm(9, 3, explicit=True)
+        a = auto_assignment(net, 1)
+        # split one branch off its spreader (downstream stays monotone so
+        # the fan rule, not the cycle rule, must fire)
+        for name in ("worker1", "afo", "collect"):
+            a[name] = 1
+        with pytest.raises(NetworkError, match="fans out"):
+            partition(net, assignment=a)
+
+    def test_missing_process_rejected(self):
+        net = _pipeline()
+        with pytest.raises(NetworkError, match="no host for"):
+            partition(net, assignment={"emit": 0})
+
+    def test_single_host_plan_has_no_cut(self):
+        plan = partition(_farm(), hosts=1)
+        assert plan.cut == [] and plan.hosts() == [0]
+
+
+class TestCutRefinement:
+    """core/csp.py across a partition cut: the partitioned model and the
+    original refine each other — the paper's ``[T=`` in BOTH directions."""
+
+    def test_farm_cut_refines_both_directions(self):
+        net = _farm()
+        plan = partition(net, hosts=2)
+        part = abstract_partitioned_model(net, plan)
+        assert csp.trace_equivalent(part, net, instances=3)  # part [T= net
+        assert csp.trace_equivalent(net, part, instances=3)  # net [T= part
+
+    def test_pipeline_cut_refines_both_directions(self):
+        net = _pipeline()
+        plan = partition(net, hosts=2)
+        part = abstract_partitioned_model(net, plan)
+        assert csp.trace_equivalent(part, net, instances=3)
+        assert csp.trace_equivalent(net, part, instances=3)
+
+    def test_check_refinement_wraps_both(self):
+        net = _pipeline()
+        assert check_refinement(net, partition(net, hosts=2))
+
+    def test_relay_model_is_safe(self):
+        """CSPm Definition 6 for the partitioned model itself."""
+        net = _farm()
+        part = abstract_partitioned_model(net, partition(net, hosts=2))
+        r = csp.check(part, instances=3)
+        assert r.deadlock_free and r.divergence_free
+        assert r.all_paths_terminate and r.deterministic
+
+    def test_three_way_cut_refines(self):
+        net = _pipeline()
+        plan = partition(net, hosts=3)
+        assert len(plan.cut) >= 2
+        assert check_refinement(net, plan)
+
+
+class TestInProcessCluster:
+    """Thread hosts, queue channels: results ≡ sequential oracle."""
+
+    @pytest.mark.parametrize("hosts,mb", [(2, 3), (2, 4), (3, 2)])
+    def test_farm_bit_identical(self, hosts, mb):
+        net = _farm()
+        seq = run_sequential(net, 10)["collect"]
+        out = run_cluster(net, instances=10, hosts=hosts,
+                          microbatch_size=mb)
+        assert float(out["collect"]) == float(seq)
+        assert all(r.ok for r in out.reports)
+
+    def test_pipeline_uneven_chunks(self):
+        net = _pipeline()
+        seq = run_sequential(net, 7)["collect"]
+        out = run_cluster(net, instances=7, hosts=2, microbatch_size=3)
+        assert float(out["collect"]) == float(seq)
+
+    def test_gop_composite(self):
+        net = GroupOfPipelineCollects(
+            create=_mk_items(12), stage_ops=[_sq, _inc, _inc],
+            collector=_add, init=jnp.asarray(0.0), jit_combine=True,
+            groups=3)
+        seq = run_sequential(net, 12)["collect"]
+        out = run_cluster(net, instances=12, hosts=2, microbatch_size=4)
+        assert float(out["collect"]) == float(seq)
+
+    def test_host_side_dict_collector(self):
+        net = DataParallelCollect(
+            create=_mk_items(5), function=_sq,
+            collector=lambda acc, x: {**acc, len(acc): float(x)},
+            init={}, workers=2, jit_combine=False)
+        out = run_cluster(net, instances=5, hosts=2, microbatch_size=2)
+        assert out["collect"] == {i: float(i * i) for i in range(5)}
+
+    def test_combine_reducer_across_cut(self):
+        """COMBINE emits nothing until its final chunk: SKIP markers keep
+        the cut channel chunk-aligned."""
+        vals = jnp.asarray(np.arange(12, dtype=np.float32))
+        net = Network("comb")
+        net.add(Emit(lambda i: vals[i], name="emit"),
+                OneSeqCastList(name="cast"))
+        for w in range(2):
+            net.procs[f"w{w}"] = Worker(_sq if w == 0 else _inc,
+                                        name=f"w{w}", tag=f"f{w}")
+            net.connect("cast", f"w{w}")
+        net.procs["comb"] = CombineNto1(lambda a, b: a + b, name="comb")
+        net.connect("w0", "comb")
+        net.connect("w1", "comb")
+        net._tail = "comb"
+        net.add(Collect(_add, init=jnp.asarray(0.0), jit_combine=True,
+                        name="collect"))
+        # cut between the combine and the collect: every chunk but the last
+        # ships a SKIP marker
+        assignment = {n: 0 for n in net.procs}
+        assignment["collect"] = 1
+        plan = partition(net, assignment=assignment)
+        assert [(c.src, c.dst) for c in plan.cut] == [("comb", "collect")]
+        cn = build(net)
+        fused_like = cn.run_streaming(instances=12, microbatch_size=5)
+        out = run_cluster(net, instances=12, plan=plan, microbatch_size=5)
+        assert float(out["collect"]) == float(fused_like["collect"])
+
+    def test_capacity_bounds_transport_queue(self):
+        """ChannelDef.capacity flows across the transport: the cut channel's
+        FIFO is exactly that deep (cross-host backpressure)."""
+        net = Network("capped")
+        net.add(Emit(_mk_items(8), name="emit"), Worker(_sq, name="w"))
+        net.procs["collect"] = Collect(_add, init=jnp.asarray(0.0),
+                                       jit_combine=True, name="collect")
+        net.connect("w", "collect", capacity=1)
+        plan = partition(net, assignment={"emit": 0, "w": 0, "collect": 1})
+        t = InProcess()
+        out = run_cluster(net, instances=8, plan=plan, transport=t,
+                          microbatch_size=2)
+        assert float(out["collect"]) == float(sum(i ** 2 for i in range(8)))
+        assert t._queues[("w", "collect")].maxsize == 1
+
+    def test_results_carry_reports(self):
+        out = run_cluster(_farm(), instances=10, hosts=2, microbatch_size=5)
+        assert {r.host for r in out.reports} == {0, 1}
+        assert all("stream:" in r.stats_summary for r in out.reports)
+        assert all("donation" in r.donation_summary for r in out.reports)
+
+
+class TestFailureCapture:
+    def test_worker_failure_surfaces_cross_host(self):
+        def boom(x):
+            raise RuntimeError("worker exploded")
+
+        net = DataParallelCollect(create=_mk_items(4), function=boom,
+                                  collector=_add, init=jnp.asarray(0.0),
+                                  workers=2, jit_combine=True)
+        with pytest.raises(ClusterError) as ei:
+            run_cluster(net, instances=4, hosts=2, microbatch_size=2,
+                        timeout_s=60)
+        err = ei.value
+        # the netlog cluster report carries the failing host's traceback
+        assert "worker exploded" in str(err)
+        assert "FAILED" in str(err)
+        failed = [r for r in err.reports if not r.ok]
+        assert failed and any("worker exploded" in (r.error or "")
+                              for r in failed)
+
+    def test_cluster_report_renders_ok_hosts(self):
+        net = _farm()
+        plan = partition(net, hosts=2)
+        out = run_cluster(net, instances=10, plan=plan, microbatch_size=5)
+        rep = netlog.cluster_report(plan, out.reports)
+        assert "host 0 [ok]" in rep and "host 1 [ok]" in rep
+        assert "channel" in rep
+
+
+class TestMultiProcessPipe:
+    """Real OS-process hosts (spawned interpreters): the CI-grade boundary."""
+
+    def test_farm_bit_identical_over_real_processes(self):
+        net = _farm_factory(10, 3)
+        seq = run_sequential(net, 10)["collect"]
+        out = run_cluster(net, instances=10, hosts=2, transport="pipe",
+                          microbatch_size=3,
+                          factory=(_farm_factory, (10, 3)))
+        assert float(out["collect"]) == float(seq)
+        assert all(r.ok for r in out.reports)
+
+    def test_pipe_requires_factory(self):
+        with pytest.raises(NetworkError, match="factory"):
+            run_cluster(_farm(), instances=4, hosts=2, transport="pipe",
+                        microbatch_size=2)
+
+    def test_encode_roundtrip(self):
+        from repro.cluster.transport import decode, encode
+        tree = (jnp.asarray([1.0, 2.0]), {"a": jnp.arange(3)})
+        enc = encode(tree)
+        assert all(isinstance(l, np.ndarray)
+                   for l in jax.tree_util.tree_leaves(enc))
+        dec = decode(enc)
+        np.testing.assert_array_equal(dec[0], np.asarray([1.0, 2.0]))
+
+
+class TestJaxMesh:
+    def test_farm_bit_identical_over_mesh(self):
+        net = _farm()
+        seq = run_sequential(net, 10)["collect"]
+        out = run_cluster(net, instances=10, hosts=2, transport="jaxmesh",
+                          microbatch_size=3)
+        assert float(out["collect"]) == float(seq)
+
+    def test_ingress_constraint_folds_into_stage_jit(self):
+        """The ROADMAP fold: a cut channel whose consumer is a jitted stage
+        places the chunk inside that stage jit (_in_spec), not eagerly."""
+        net = _pipeline()
+        plan = partition(net, hosts=2)
+        (c,) = [c for c in plan.cut]
+        consumer_host = plan.assignment[c.dst]
+        sub = plan.subnetwork(consumer_host)
+        mesh = jax.sharding.Mesh(np.asarray([jax.devices()[0]]), ("host",))
+        cn = build(sub, mesh=mesh)
+        ex = PartitionExecutor(
+            cn, plan=plan, host=consumer_host,
+            endpoint=InProcess(), microbatch_size=2)
+        assert net.procs[c.dst].kind is Kind.WORKER
+        assert c.dst in ex._in_spec
+
+    def test_named_fan_axis_degrades_to_submesh_replication(self):
+        """A deployment-mesh fan axis (axis="data") does not exist on the
+        per-host submeshes; its constraint degrades to replication instead
+        of crashing the host (regression)."""
+        net = DataParallelCollect(create=_mk_items(8), function=_sq,
+                                  collector=_add, init=jnp.asarray(0.0),
+                                  workers=2, axis="data", jit_combine=True)
+        seq = run_sequential(net, 8)["collect"]
+        out = run_cluster(net, instances=8, hosts=2, transport="jaxmesh",
+                          microbatch_size=2)
+        assert float(out["collect"]) == float(seq)
+
+    def test_unknown_transport_rejected(self):
+        with pytest.raises(NetworkError, match="unknown transport"):
+            make_transport("carrier-pigeon")

@@ -57,3 +57,42 @@ def test_any_channel_work_stealing(key):
         occupancy.append(sched.step())
     assert max(occupancy) == 2  # both slots active while work remains
     assert len(sched.done) == 4
+
+
+def test_zero_context_prompt_decodes(key):
+    """A single-token prompt has no prefill context: the microbatch plan is
+    empty, _prefill never dispatches, and the slot still decodes exactly as
+    independent generation (regression for the zero-context path)."""
+    from repro.core.stream import microbatch_plan
+
+    cfg = get_config("qwen2-0.5b", reduced=True)
+    model = Model(cfg)
+    params = model.init(key)
+    sched = FarmScheduler(model, params, n_slots=2, max_len=64)
+    assert microbatch_plan(0, sched.prefill_chunk) == []  # plan yields nothing
+
+    prefill_calls = []
+    real_prefill = sched._prefill
+    sched._prefill = lambda *a, **k: (prefill_calls.append(1),
+                                      real_prefill(*a, **k))[1]
+    sched.submit(Request(rid=0, prompt=[17], max_new=4))
+    done = sched.run()
+    assert prefill_calls == []  # zero-context: no prefill dispatch at all
+    assert len(done) == 1
+    assert done[0].generated == _ref_gen(model, params, [17], 4)
+
+
+def test_empty_prompt_rejected_before_slot_claim(key):
+    """An empty prompt is refused at submit time — never mid-_fill_slots,
+    where it would leave a half-initialised slot."""
+    cfg = get_config("qwen2-0.5b", reduced=True)
+    model = Model(cfg)
+    params = model.init(key)
+    sched = FarmScheduler(model, params, n_slots=1, max_len=64)
+    with pytest.raises(ValueError, match="empty prompt"):
+        sched.submit(Request(rid=0, prompt=[], max_new=2))
+    assert sched.queue == []  # nothing enqueued, farm state untouched
+    # the farm still serves a normal request afterwards
+    sched.submit(Request(rid=1, prompt=[5, 7], max_new=2))
+    done = sched.run()
+    assert len(done) == 1 and len(done[0].generated) == 2

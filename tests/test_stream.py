@@ -217,6 +217,23 @@ class TestStreamingEquivalence:
             with pytest.raises(NetworkError, match="lanes"):
                 cn.run_streaming(instances=4, microbatch_size=2, lanes=lanes)
 
+    def test_dict_pytree_items(self):
+        """Items that ARE dict pytrees stream whole to every stage (a plain
+        dict batch must never be mistaken for the cluster's per-Emit
+        EmitChunks map — regression)."""
+        net = DataParallelCollect(
+            create=lambda i: {"a": jnp.asarray(float(i)),
+                              "emit": jnp.asarray(float(2 * i))},
+            function=lambda d: {"a": d["a"] * d["emit"],
+                                "emit": d["emit"]},
+            collector=lambda acc, d: acc + d["a"],
+            init=jnp.asarray(0.0), workers=2, jit_combine=True)
+        cn = build(net)
+        seq = run_sequential(net, 6)["collect"]
+        strm = cn.run_streaming(instances=6, microbatch_size=2)["collect"]
+        assert float(seq) == float(strm) == float(sum(2.0 * i * i
+                                                      for i in range(6)))
+
     def test_host_side_collector(self):
         net = DataParallelCollect(
             create=_mk_items(5), function=_sq,
@@ -329,3 +346,56 @@ class TestRefinement:
         r = csp.check(streaming_abstract_model(net, lanes=2), instances=3)
         assert r.deadlock_free and r.divergence_free
         assert r.all_paths_terminate and r.deterministic
+
+
+class TestDonationTelemetry:
+    """ROADMAP satellite: per-stage buffer-donation outcomes are recorded in
+    stream_stats (and printed by benchmarks/stream.py)."""
+
+    def test_stages_recorded(self):
+        net = OnePipelineCollect(create=_mk_items(8), stage_ops=[_sq, _inc],
+                                 collector=_add, init=jnp.asarray(0.0),
+                                 jit_combine=True)
+        cn = build(net)
+        cn.run_streaming(instances=8, microbatch_size=2)
+        stats = cn.stream_stats
+        # every functional stage appears, with requested >= honoured >= 0
+        assert set(stats.donation) == {"stage0", "stage1"}
+        for req, hon in stats.donation.values():
+            assert req >= hon >= 0
+        if jax.default_backend() == "cpu":
+            # CPU: the executor never requests donation — telemetry says so
+            assert not stats.donation_enabled
+            assert all(req == 0 for req, _ in stats.donation.values())
+            assert "disabled" in stats.donation_summary()
+        else:
+            assert stats.donation_enabled
+
+    def test_summary_counts_in_stream_summary(self):
+        net = OnePipelineCollect(create=_mk_items(6), stage_ops=[_sq, _inc],
+                                 collector=_add, init=jnp.asarray(0.0),
+                                 jit_combine=True)
+        cn = build(net)
+        cn.run_streaming(instances=6, microbatch_size=3)
+        assert "donated=" in cn.stream_stats.summary()
+
+
+class TestMeshFoldedConstraints:
+    """ROADMAP satellite: per-chunk sharding constraints are folded into the
+    stage jits (with_sharding_constraint inside the per-stage program)
+    instead of eager device_put between stages."""
+
+    def test_in_spec_populated_and_results_identical(self):
+        from repro.core.stream import StreamExecutor
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((1,), ("data",))
+        net = DataParallelCollect(create=_mk_items(8), function=_sq,
+                                  collector=_add, init=jnp.asarray(0.0),
+                                  workers=2, axis="data", jit_combine=True)
+        cn = build(net, mesh=mesh)
+        ex = StreamExecutor(cn, microbatch_size=2)
+        # the farm worker's input constraint lives in its stage jit now
+        assert "group" in ex._in_spec
+        strm = ex.run(cn.make_batch(8))["collect"]
+        seq = run_sequential(net, 8)["collect"]
+        assert float(strm) == float(seq)
