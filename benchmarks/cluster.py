@@ -9,14 +9,20 @@ costs per transport on the Mandelbrot row-band farm:
 * ``pipe``      — 2-host partition, *real OS processes* (spawned
                   interpreters; the wall time includes their startup —
                   this is the genuine cross-host cost on CPU),
+* ``shm``       — 2-host partition, real OS processes with zero-copy
+                  shared-memory ring channels,
 * ``jaxmesh``   — 2-host partition over mesh submeshes, channel puts folded
                   into the consumer stage jits.
 
+Each transport gets two rows.  The cold row (``cluster_<t>``) is one
+``run_cluster`` call: partition build + host spawn + per-host stage
+compilation + one batch — the worst-case deployment cost.  The steady row
+(``cluster_<t>_steady``) holds ONE :class:`ClusterDeployment` open, pays
+that bill once, then times warm ``deployment.run`` calls — the §7
+steady-state story; its ``derived`` string reports the cold/warm split and
+the deployed cut-channel capacities so the stall counts are explainable.
+
 Every mode is gated on bit-identical results vs the sequential oracle.
-Cluster walls include per-run partition build + per-host stage compilation
-(each ``run_cluster`` call stands up a fresh deployment), so the
-``vs_single`` ratios bound the worst-case deployment cost, not steady-state
-throughput.
 
     PYTHONPATH=src python -m benchmarks.cluster --smoke   # BENCH_cluster.json
 """
@@ -32,6 +38,8 @@ import time
 # the pipe transport requires) — one definition serves launcher + benchmark
 from repro.launch.cluster import make_mandelbrot as make_farm
 
+TRANSPORTS = ("inprocess", "pipe", "shm", "jaxmesh")
+
 
 def _wall(fn, repeats: int = 2) -> float:
     best = float("inf")
@@ -42,10 +50,25 @@ def _wall(fn, repeats: int = 2) -> float:
     return best
 
 
-def run(*, smoke: bool = False, hosts: int = 2) -> list:
-    from repro.cluster import check_refinement, partition, run_cluster
+def _stalls(out) -> int:
+    return sum(int(r.stats_summary.split("stalls=")[1].split(",")[0])
+               for r in out.reports if "stalls=" in r.stats_summary)
+
+
+def _caps(out) -> str:
+    caps: dict = {}
+    for r in out.reports:
+        caps.update(r.capacities)
+    return ",".join(f"{k}={v}" for k, v in sorted(caps.items())) or "none"
+
+
+def run(*, smoke: bool = False, hosts: int = 2,
+        warm_batches: int = 3) -> list:
+    from repro.cluster import (ClusterDeployment, check_refinement,
+                               partition, run_cluster)
     from repro.core import build, run_sequential
 
+    warm_batches = max(warm_batches, 1)  # the steady row needs >= 1 warm run
     if smoke:
         fargs = (8, 64, 64, 40)
         mb = 2
@@ -68,21 +91,45 @@ def run(*, smoke: bool = False, hosts: int = 2) -> list:
     rows.append(("cluster_single", single * 1e6,
                  f"identical={same} refines={refines}"))
 
-    for transport in ("inprocess", "pipe", "jaxmesh"):
+    for transport in TRANSPORTS:
+        # -- cold: one-shot run_cluster (fresh deployment every call) ------
         last = []  # capture inside the timed closure: no extra deployment
 
         def one(t=transport, last=last):
             last[:] = [run_cluster(net, instances=instances, plan=plan,
                                    transport=t, microbatch_size=mb,
                                    factory=factory)]
-        wall = _wall(one, repeats=1 if transport == "pipe" else 2)
+        process_hosts = transport in ("pipe", "shm")
+        wall = _wall(one, repeats=1 if process_hosts else 2)
         (out,) = last
         same = bool(out["collect"] == seq)
-        stalls = sum(int(r.stats_summary.split("stalls=")[1].split(",")[0])
-                     for r in out.reports if "stalls=" in r.stats_summary)
         rows.append((f"cluster_{transport}", wall * 1e6,
                      f"identical={same} hosts={hosts} "
-                     f"vs_single={wall / single:.2f}x stalls={stalls}"))
+                     f"vs_single={wall / single:.2f}x stalls={_stalls(out)} "
+                     f"caps={_caps(out)}"))
+
+        # -- steady: ONE deployment, cold call + warm calls ----------------
+        with ClusterDeployment(net, plan=plan, transport=transport,
+                               microbatch_size=mb,
+                               factory=factory) as dep:
+            t0 = time.perf_counter()
+            out = dep.run(instances=instances)
+            cold = time.perf_counter() - t0
+            same = bool(out["collect"] == seq)
+            warm = float("inf")
+            for _ in range(warm_batches):
+                t0 = time.perf_counter()
+                wout = dep.run(instances=instances)
+                warm = min(warm, time.perf_counter() - t0)
+                same = same and bool(wout["collect"] == seq)
+            builds = sum(r.jit_builds for r in wout.reports)
+        rows.append((f"cluster_{transport}_steady", warm * 1e6,
+                     f"identical={same} hosts={hosts} "
+                     f"vs_single={warm / single:.2f}x "
+                     f"cold_us={cold * 1e6:.0f} warm_us={warm * 1e6:.0f} "
+                     f"cold_vs_warm={cold / warm:.1f}x "
+                     f"warm_jit_builds={builds} stalls={_stalls(wout)} "
+                     f"caps={_caps(wout)}"))
     return rows
 
 
@@ -90,8 +137,10 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--hosts", type=int, default=2)
+    ap.add_argument("--warm-batches", type=int, default=3)
     args = ap.parse_args()
-    rows = run(smoke=args.smoke, hosts=args.hosts)
+    rows = run(smoke=args.smoke, hosts=args.hosts,
+               warm_batches=args.warm_batches)
     print("name,us_per_call,derived")
     blob = []
     for name, us, derived in rows:

@@ -1,6 +1,9 @@
 """Regenerate the §Perf tables from the recorded artifacts
 (results/dryrun + results/perf) — the EXPERIMENTS.md tables are derived,
-never hand-maintained.
+never hand-maintained.  Also renders the runtime benchmark artifacts
+(BENCH_stream.json + BENCH_cluster.json) as one table, so the cluster
+cold-vs-warm trajectory sits next to the streaming rows it is measured
+against.
 
     PYTHONPATH=src python -m benchmarks.perf_report
 """
@@ -14,6 +17,7 @@ import os
 from .roofline import HBM_BW, LINK_BW, PEAK_FLOPS, RESULTS_DIR
 
 PERF_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "perf")
+REPO_DIR = os.path.join(os.path.dirname(__file__), "..")
 
 CELLS = {
     "yi_train": ("yi-34b", "train_4k"),
@@ -84,5 +88,40 @@ def markdown() -> str:
     return "\n".join(lines)
 
 
+def bench_rows() -> list[dict]:
+    """Stream + cluster benchmark rows, one flat list (missing artifacts
+    skip silently — CI produces them; a fresh checkout may not have)."""
+    out = []
+    for fname in ("BENCH_stream.json", "BENCH_cluster.json"):
+        path = os.path.join(REPO_DIR, fname)
+        if not os.path.exists(path):
+            continue
+        blob = json.load(open(path))
+        for r in blob.get("rows", []):
+            out.append({"suite": blob.get("benchmark", fname),
+                        "mode": blob.get("mode", "?"), **r})
+    return out
+
+
+def bench_markdown() -> str:
+    """One table over both suites: the streaming baseline, the cold cluster
+    deployments, and the warm ``_steady`` rows whose ``derived`` strings
+    carry the cold/warm split."""
+    rows = bench_rows()
+    if not rows:
+        return "(no BENCH_*.json artifacts found — run the benchmarks first)"
+    lines = ["### runtime benchmarks (stream + cluster)", "",
+             "| suite | row | µs/call | derived |", "|---|---|---|---|"]
+    for r in rows:
+        lines.append(f"| {r['suite']} ({r['mode']}) | {r['name']} | "
+                     f"{r['us_per_call']:.1f} | {r['derived']} |")
+    return "\n".join(lines)
+
+
 if __name__ == "__main__":
-    print(markdown())
+    try:
+        print(markdown())
+    except FileNotFoundError as e:  # dryrun artifacts absent on CI runners
+        print(f"(skipping §Perf roofline tables: {e})")
+    print()
+    print(bench_markdown())

@@ -5,23 +5,30 @@ processor and a workstation cluster.  This package is that step for our
 networks: :func:`partition` splits a verified Network across hosts at
 channel boundaries (with a CSP proof that the partitioned network
 trace-refines the unpartitioned one), :mod:`transport` realises the cut
-channels as bounded FIFO pipes (threads, real OS processes, or JAX mesh
-transfers), and :func:`run_cluster` drives one PR-1 streaming executor per
-host partition with backpressure flowing across the transports.
+channels as bounded FIFO pipes (threads, real OS processes — pickled or
+zero-copy shared-memory rings — or JAX mesh transfers), and
+:class:`ClusterDeployment` stands the whole thing up ONCE (hosts spawned,
+stage jits compiled, transports sized to the executors' appetite) and then
+streams batch after batch through the warm hosts at near single-host
+speed; :func:`run_cluster` is the one-shot convenience on top.
 """
 
+from .deploy import ClusterDeployment
 from .partition import (PartitionPlan, abstract_partitioned_model,
                         auto_assignment, check_refinement, partition)
 from .runtime import (ClusterError, ClusterResult, ExecConfig, HostReport,
-                      PartitionExecutor, run_cluster)
+                      PartitionExecutor, derive_cut_capacities,
+                      make_host_executor, run_cluster)
 from .transport import (ChannelTransport, InProcess, JaxMesh,
-                        MultiProcessPipe, TransportError, make_transport)
+                        MultiProcessPipe, SharedMemoryRing, TransportError,
+                        make_transport)
 
 __all__ = [
     "PartitionPlan", "partition", "auto_assignment",
     "abstract_partitioned_model", "check_refinement",
-    "ChannelTransport", "InProcess", "MultiProcessPipe", "JaxMesh",
-    "TransportError", "make_transport",
+    "ChannelTransport", "InProcess", "MultiProcessPipe", "SharedMemoryRing",
+    "JaxMesh", "TransportError", "make_transport",
     "PartitionExecutor", "run_cluster", "ClusterResult", "ClusterError",
-    "HostReport", "ExecConfig",
+    "HostReport", "ExecConfig", "ClusterDeployment",
+    "derive_cut_capacities", "make_host_executor",
 ]

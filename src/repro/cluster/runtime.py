@@ -1,7 +1,6 @@
 """Cluster runtime: one streaming executor per host partition.
 
-``run_cluster`` deploys a :class:`~repro.cluster.partition.PartitionPlan`:
-every host runs PR 1's streaming microbatch executor over its own
+Every host runs PR 1's streaming microbatch executor over its own
 subnetwork (:class:`PartitionExecutor` — a :class:`repro.core.stream
 .StreamExecutor` whose boundary Emit shims pull chunks from a
 :class:`~repro.cluster.transport.ChannelTransport` and whose boundary
@@ -11,12 +10,20 @@ transport's bounded FIFO blocks the producer — the tightest channel anywhere
 throttles the whole cluster, exactly as in a buffered CSP chain.
 
 Hosts are threads (``inprocess``/``jaxmesh`` transports) or real spawned OS
-processes (``pipe``); the latter needs a picklable ``factory`` so each
-fresh interpreter can rebuild the network (closures do not pickle).
+processes (``pipe``/``shm``); the latter need a picklable ``factory`` so
+each fresh interpreter can rebuild the network (closures do not pickle).
+
+Deployment lifetime lives in :mod:`repro.cluster.deploy`: a
+:class:`~repro.cluster.deploy.ClusterDeployment` partitions, compiles and
+spawns ONCE and then streams many batches through the warm hosts;
+:func:`run_cluster` here is the one-shot convenience (deploy, run one
+batch, tear down).  This module keeps the pieces both paths share: the
+executor, per-host emit batching, cut-capacity derivation, failure
+signalling and result encoding.
 
 Failures are captured, never lost: a host that throws reports a full
 traceback in its :class:`HostReport`, pushes EOS down its cut channels so
-consumer hosts fail fast instead of hanging, and ``run_cluster`` raises
+consumer hosts fail fast instead of hanging, and the driver raises
 :class:`ClusterError` whose message is the §8-style cluster report
 (:func:`repro.core.netlog.cluster_report`) — the paper's error-capture
 mechanism, now cross-host.
@@ -25,21 +32,17 @@ mechanism, now cross-host.
 from __future__ import annotations
 
 import dataclasses
-import threading
-import traceback
-from typing import Any, Callable, Optional
+from typing import Optional
 
 import numpy as np
 
 from repro.core.builder import build, make_emit_batch
 from repro.core.dataflow import Kind, Network, NetworkError
 from repro.core.stream import (EmitChunks, StreamExecutor, _SKIP,
-                               microbatch_plan, slice_microbatch)
+                               slice_microbatch)
 
-from .partition import (PartitionPlan, egress_shim, ingress_shim, is_shim,
-                        partition)
-from .transport import (EOS, SKIP, ChannelTransport, JaxMesh,
-                        MultiProcessPipe, TransportError, make_transport)
+from .partition import PartitionPlan, egress_shim, ingress_shim, is_shim
+from .transport import (EOS, SKIP, ChannelTransport, TransportError)
 
 __all__ = [
     "ExecConfig",
@@ -47,6 +50,8 @@ __all__ = [
     "ClusterError",
     "ClusterResult",
     "PartitionExecutor",
+    "derive_cut_capacities",
+    "make_host_executor",
     "run_cluster",
 ]
 
@@ -59,6 +64,7 @@ class ExecConfig:
     microbatch_size: int = 8
     max_in_flight: Optional[int] = None
     lanes: Optional[int] = None
+    fuse: bool = True  # intra-partition chain fusion (core/stream.py)
 
 
 @dataclasses.dataclass
@@ -71,6 +77,13 @@ class HostReport:
     stats_summary: str = ""
     donation_summary: str = ""
     error: Optional[str] = None  # full traceback when not ok
+    # chosen cut-channel FIFO depths touching this host ("src->dst" -> cap):
+    # explicit ChannelDef.capacity, or the derived default (the consumer
+    # executor's depth/lane appetite) — lets a bench explain its stalls
+    capacities: dict = dataclasses.field(default_factory=dict)
+    # stage-jit traces recorded during THIS batch — fresh builds AND
+    # shape-driven retraces both count, so 0 means genuinely warm
+    jit_builds: int = 0
 
 
 class ClusterResult(dict):
@@ -94,9 +107,9 @@ class PartitionExecutor(StreamExecutor):
     def __init__(self, compiled, *, plan: PartitionPlan, host: int,
                  endpoint: ChannelTransport, microbatch_size: int,
                  max_in_flight: Optional[int] = None,
-                 lanes: Optional[int] = None):
+                 lanes: Optional[int] = None, fuse: bool = True):
         super().__init__(compiled, microbatch_size=microbatch_size,
-                         max_in_flight=max_in_flight, lanes=lanes)
+                         max_in_flight=max_in_flight, lanes=lanes, fuse=fuse)
         self.host = host
         self.ep = endpoint
         self.ingress = [(ingress_shim(c.src, c.dst), (c.src, c.dst))
@@ -183,18 +196,50 @@ def _emit_batch(net: Network, instances: int):
     return make_emit_batch(net, instances, emit=emits[0])
 
 
-def _run_host(plan: PartitionPlan, host: int, endpoint: ChannelTransport,
-              bounds: list, instances: int, cfg: ExecConfig, mesh=None):
+def make_host_executor(plan: PartitionPlan, host: int,
+                       endpoint: ChannelTransport, cfg: ExecConfig,
+                       mesh=None) -> PartitionExecutor:
+    """Build one host's partition executor (subnetwork compiled, stage jits
+    lazy).  A :class:`~repro.cluster.deploy.ClusterDeployment` keeps the
+    returned executor alive across batches, so the jits compile exactly
+    once."""
     sub = plan.subnetwork(host)
     cn = build(sub, mesh=mesh)
-    ex = PartitionExecutor(cn, plan=plan, host=host, endpoint=endpoint,
-                           microbatch_size=cfg.microbatch_size,
-                           max_in_flight=cfg.max_in_flight, lanes=cfg.lanes)
-    batch = _emit_batch(sub, instances)
-    out = ex.run_partition(bounds, batch)
-    for _, chan in ex.egress:  # orderly end-of-stream (consumers know the
-        endpoint.send(chan, len(bounds), EOS)  # chunk count; EOS is belt-and-braces)
-    return out, ex.stats
+    return PartitionExecutor(cn, plan=plan, host=host, endpoint=endpoint,
+                             microbatch_size=cfg.microbatch_size,
+                             max_in_flight=cfg.max_in_flight, lanes=cfg.lanes,
+                             fuse=cfg.fuse)
+
+
+def derive_cut_capacities(plan: PartitionPlan, cfg: ExecConfig) -> dict:
+    """FIFO depth of each cut channel: explicit ``ChannelDef.capacity``, or a
+    default derived from the consumer executor's actual appetite.
+
+    The old fixed default (:data:`~repro.cluster.transport.DEFAULT_CAPACITY`)
+    could under-buffer a consumer that streams ``depth`` chunks in flight
+    over ``lanes`` work-stealing lanes; sizing the transport to
+    ``max(DEFAULT_CAPACITY, depth, lanes)`` keeps the cut channel from being
+    the accidental bottleneck while staying a bounded CSP buffer.  The chosen
+    values are recorded per host in :attr:`HostReport.capacities` so a
+    benchmark's ``derived`` string can explain observed stalls.
+    """
+    from repro.core.stream import plan_depth_lanes
+
+    from .transport import DEFAULT_CAPACITY
+    sizing: dict = {}
+    caps: dict = {}
+    for c in plan.cut:
+        chan = (c.src, c.dst)
+        if c.capacity > 0:
+            caps[chan] = c.capacity
+            continue
+        h = plan.assignment[c.dst]
+        if h not in sizing:
+            sizing[h] = plan_depth_lanes(plan.subnetwork(h),
+                                         cfg.max_in_flight, cfg.lanes)
+        depth, lanes = sizing[h]
+        caps[chan] = max(DEFAULT_CAPACITY, depth, lanes)
+    return caps
 
 
 def _signal_failure(plan: PartitionPlan, host: int,
@@ -223,25 +268,8 @@ def _encode_result(out):
         return out
 
 
-def _host_entry(factory: Callable, fargs: tuple, assignment: dict,
-                host: int, bounds: list, instances: int,
-                endpoint, result_q, cfg: ExecConfig) -> None:
-    """Spawned-process host main: rebuild the network, run the partition."""
-    plan = None
-    try:
-        net = factory(*fargs)
-        plan = partition(net, assignment=assignment)
-        out, stats = _run_host(plan, host, endpoint, bounds, instances, cfg)
-        result_q.put(("ok", host, _encode_result(out),
-                      (stats.summary(), stats.donation_summary())))
-    except Exception:
-        if plan is not None:
-            _signal_failure(plan, host, endpoint)
-        result_q.put(("err", host, traceback.format_exc(), None))
-
-
 # ==========================================================================
-# The driver
+# The one-shot driver (a deployment used exactly once)
 # ==========================================================================
 
 def run_cluster(net: Optional[Network] = None, *, instances: int,
@@ -255,163 +283,30 @@ def run_cluster(net: Optional[Network] = None, *, instances: int,
                 timeout_s: float = 300.0) -> ClusterResult:
     """Partition ``net`` over hosts and stream ``instances`` items through.
 
-    ``transport`` is a name (``"inprocess"`` / ``"pipe"`` / ``"jaxmesh"``)
-    or a ready :class:`ChannelTransport`.  The ``pipe`` transport spawns one
-    OS process per host and therefore needs ``factory=(callable, args)`` —
-    a picklable recipe each child uses to rebuild the network.
+    ``transport`` is a name (``"inprocess"`` / ``"pipe"`` / ``"shm"`` /
+    ``"jaxmesh"``) or a ready :class:`ChannelTransport`.  Process transports
+    (``pipe`` / ``shm``) spawn one OS process per host and therefore need
+    ``factory=(callable, args)`` — a picklable recipe each child uses to
+    rebuild the network.
+
+    This is the cold path: it stands up a fresh
+    :class:`~repro.cluster.deploy.ClusterDeployment` (partition build, host
+    spawn, per-host stage compilation), runs ONE batch, and tears it all
+    down.  Amortise those costs over many batches by holding the deployment
+    open yourself::
+
+        with ClusterDeployment(net, hosts=2) as dep:
+            for batch in batches:
+                out = dep.run(instances=n)
 
     Returns a :class:`ClusterResult`: the merged Collect dict (identical to
     ``run_sequential``), with per-host :class:`HostReport` telemetry in
     ``.reports``.  Raises :class:`ClusterError` (message = the cross-host
     netlog report) when any host fails.
     """
-    if net is None:
-        if factory is None:
-            raise NetworkError("run_cluster: need net= or factory=")
-        net = factory[0](*factory[1])
-    if plan is None:
-        if hosts is None:
-            raise NetworkError("run_cluster: need hosts= or plan=")
-        plan = partition(net, hosts=hosts)
-    t = make_transport(transport) if isinstance(transport, str) else transport
-    cfg = ExecConfig(microbatch_size, max_in_flight, lanes)
-    bounds = microbatch_plan(instances, microbatch_size)
-    cut_chans = [(c.src, c.dst) for c in plan.cut]
-    caps = {(c.src, c.dst): c.capacity for c in plan.cut}
-    t.setup(cut_chans, caps)
-
-    live = plan.hosts()
-    reports = {h: HostReport(host=h, procs=plan.procs_of(h)) for h in live}
-
-    if isinstance(t, MultiProcessPipe):
-        if factory is None:
-            raise NetworkError(
-                "run_cluster: the pipe transport spawns fresh interpreters "
-                "and needs factory=(picklable_callable, args) to rebuild "
-                "the network in each host process")
-        results = _drive_processes(plan, t, live, bounds, instances, cfg,
-                                   factory, reports, timeout_s)
-    else:
-        results = _drive_threads(plan, t, live, bounds, instances, cfg,
-                                 reports, timeout_s)
-    t.close()
-
-    report_list = [reports[h] for h in live]
-    if not all(r.ok for r in report_list):
-        from repro.core import netlog
-        raise ClusterError(netlog.cluster_report(plan, report_list),
-                           report_list)
-    merged = ClusterResult()
-    for h in live:
-        merged.update(results[h])
-    merged.reports = report_list
-    return merged
-
-
-def _drive_threads(plan, t, live, bounds, instances, cfg, reports,
-                   timeout_s):
-    """inprocess / jaxmesh: one daemon thread per host partition."""
-    meshes = {h: None for h in live}
-    if isinstance(t, JaxMesh):
-        import jax
-        split = t.device_split(len(live))
-        # live host ids need not be contiguous (empty hosts drop out of the
-        # plan) — index submeshes by position in the live list
-        host_index = {h: i for i, h in enumerate(live)}
-        meshes = {h: jax.sharding.Mesh(np.asarray([split[host_index[h]]]),
-                                       ("host",))
-                  for h in live}
-        folded = []
-        for c in plan.cut:
-            if plan.net.procs[c.dst].kind in (Kind.WORKER, Kind.ENGINE):
-                folded.append((c.src, c.dst))
-        t.bind([(c.src, c.dst) for c in plan.cut],
-               {(c.src, c.dst): host_index[plan.assignment[c.dst]]
-                for c in plan.cut},
-               len(live), folded=folded)
-
-    results: dict = {}
-    failed = threading.Event()
-
-    def _one(h):
-        try:
-            out, stats = _run_host(plan, h, t.endpoint(h), bounds,
-                                   instances, cfg, mesh=meshes[h])
-            results[h] = out
-            reports[h].ok = True
-            reports[h].stats_summary = stats.summary()
-            reports[h].donation_summary = stats.donation_summary()
-        except Exception:
-            reports[h].error = traceback.format_exc()
-            failed.set()
-            _signal_failure(plan, h, t.endpoint(h))
-
-    threads = [threading.Thread(target=_one, args=(h,), daemon=True,
-                                name=f"gpp-host-{h}") for h in live]
-    import time
-    deadline = time.monotonic() + timeout_s  # one wall clock for all hosts
-    for th in threads:
-        th.start()
-    for th in threads:
-        th.join(timeout=5.0 if failed.is_set()
-                else max(0.0, deadline - time.monotonic()))
-    hung = [th.name for th in threads if th.is_alive()]
-    if hung and not failed.is_set():
-        for h in live:
-            if reports[h].error is None and not reports[h].ok:
-                reports[h].error = f"timed out after {timeout_s}s"
-    return results
-
-
-def _drive_processes(plan, t, live, bounds, instances, cfg, factory,
-                     reports, timeout_s):
-    """pipe: one spawned OS process per host partition."""
-    ctx = t.ctx
-    result_q = ctx.Queue()
-    procs = []
-    for h in live:
-        p = ctx.Process(
-            target=_host_entry,
-            args=(factory[0], tuple(factory[1]), plan.assignment, h,
-                  bounds, instances, t.endpoint(h), result_q, cfg),
-            name=f"gpp-host-{h}", daemon=True)
-        p.start()
-        procs.append(p)
-    results: dict = {}
-    import queue as _q
-    import time
-    proc_of = dict(zip(live, procs))
-    deadline = time.monotonic() + timeout_s  # one wall clock for all hosts
-    pending = set(live)
-    dead_strikes: dict = {}
-    while pending and time.monotonic() < deadline:
-        try:
-            status, h, payload, stats = result_q.get(timeout=1.0)
-        except _q.Empty:
-            # fail fast on a host that died without reporting (segfault,
-            # OOM kill) — two empty polls of grace so a result posted just
-            # before exit still drains through the queue feeder
-            for h in sorted(pending):
-                if not proc_of[h].is_alive():
-                    dead_strikes[h] = dead_strikes.get(h, 0) + 1
-                    if dead_strikes[h] >= 2:
-                        reports[h].error = (
-                            f"host process died (exitcode "
-                            f"{proc_of[h].exitcode}) without reporting")
-                        pending.discard(h)
-            continue
-        if status == "ok":
-            results[h] = payload
-            reports[h].ok = True
-            reports[h].stats_summary, reports[h].donation_summary = stats
-        else:
-            reports[h].error = payload
-        pending.discard(h)
-    for p in procs:
-        p.join(timeout=10.0)
-        if p.is_alive():
-            p.terminate()
-    for h in live:
-        if not reports[h].ok and reports[h].error is None:
-            reports[h].error = f"no result within {timeout_s}s"
-    return results
+    from .deploy import ClusterDeployment
+    with ClusterDeployment(net, hosts=hosts, plan=plan, transport=transport,
+                           microbatch_size=microbatch_size,
+                           max_in_flight=max_in_flight, lanes=lanes,
+                           factory=factory, timeout_s=timeout_s) as dep:
+        return dep.run(instances=instances)

@@ -22,6 +22,11 @@ Three implementations:
   placement is *folded into that stage jit* as a ``with_sharding_constraint``
   (the ROADMAP's "fold per-chunk device_put sharding into the stage jits"),
   so transfer and compute compile into one program.
+* :class:`SharedMemoryRing` — process hosts like ``pipe``, but each channel
+  owns a ring of preallocated ``multiprocessing.shared_memory`` slots
+  (``ChannelDef.capacity`` of them), so array payloads cross the host
+  boundary as raw buffer writes — no pickling of chunk data, and slot
+  exhaustion IS the backpressure.
 
 All transports carry a per-chunk SKIP marker so upstream COMBINE reducers
 (which emit nothing until their final chunk) stay chunk-aligned across the
@@ -44,10 +49,13 @@ __all__ = [
     "ChannelTransport",
     "InProcess",
     "MultiProcessPipe",
+    "SharedMemoryRing",
     "JaxMesh",
     "make_transport",
     "encode",
     "decode",
+    "pack_raw",
+    "unpack_raw",
 ]
 
 DEFAULT_CAPACITY = 2  # rendezvous channels buffer like the stream executor
@@ -74,6 +82,82 @@ def decode(value):
     return value
 
 
+class _RawLeaf:
+    """Header + buffer encoding of one contiguous numpy leaf.
+
+    Not a registered pytree node, so ``tree_map`` treats it as a leaf; the
+    exact ``dtype.str`` (which carries byte order — ``'<f4'`` vs ``'>f4'``)
+    and the full shape (``()`` for 0-d arrays) survive the round trip, which
+    plain ``tobytes()`` alone would lose.
+    """
+
+    __slots__ = ("dtype", "shape", "buf")
+
+    def __init__(self, dtype: str, shape: tuple, buf: bytes):
+        self.dtype = dtype
+        self.shape = shape
+        self.buf = buf
+
+    # __slots__ classes need explicit pickle support
+    def __getstate__(self):
+        return (self.dtype, self.shape, self.buf)
+
+    def __setstate__(self, state):
+        self.dtype, self.shape, self.buf = state
+
+
+def _rawable(a: np.ndarray) -> bool:
+    """Plain (non-object, non-structured) dtypes round-trip through raw
+    bytes; anything exotic falls back to pickling the array itself."""
+    return not a.dtype.hasobject and a.dtype.names is None
+
+
+def _as_contig(leaf) -> np.ndarray:
+    """C-contiguous numpy view of ``leaf`` — preserving 0-d shape, which
+    ``np.ascontiguousarray`` alone would silently promote to ``(1,)``."""
+    a = np.asarray(leaf)
+    if a.ndim and not a.flags["C_CONTIGUOUS"]:
+        a = np.ascontiguousarray(a)
+    return a
+
+
+def pack_raw(value):
+    """Numpy pytree -> pytree of :class:`_RawLeaf` headers (markers pass
+    through).  The raw-bytes fallback of :meth:`MultiProcessPipe._pack`:
+    contiguous leaves ship as (dtype, shape, buffer) instead of pickled
+    array objects."""
+    if isinstance(value, str):
+        return value
+    import jax
+
+    def _one(leaf):
+        a = _as_contig(leaf)
+        if not _rawable(a):
+            return a  # pickle fallback (object/structured dtypes)
+        return _RawLeaf(a.dtype.str, a.shape, a.tobytes())
+
+    return jax.tree_util.tree_map(_one, value)
+
+
+def unpack_raw(value):
+    """Inverse of :func:`pack_raw`: rebuild each leaf with its recorded
+    dtype (byte order included) and shape — 0-d arrays come back 0-d."""
+    if isinstance(value, str):
+        return value
+    import jax
+
+    def _one(leaf):
+        if not isinstance(leaf, _RawLeaf):
+            return leaf
+        # bytearray: one copy, but WRITABLE — frombuffer over the bytes
+        # object would hand consumers a read-only array, unlike the pickle
+        # path this replaces (and unlike the shm slot path, which copies)
+        return np.frombuffer(bytearray(leaf.buf),
+                             dtype=np.dtype(leaf.dtype)).reshape(leaf.shape)
+
+    return jax.tree_util.tree_map(_one, value)
+
+
 class ChannelTransport:
     """One bounded FIFO per cut channel; chunk-granular send/recv.
 
@@ -83,6 +167,7 @@ class ChannelTransport:
     """
 
     name = "abstract"
+    process_hosts = False  # True: hosts are spawned OS processes
 
     def setup(self, cut_channels, capacities: dict) -> None:
         raise NotImplementedError
@@ -162,6 +247,7 @@ class MultiProcessPipe(_QueueTransport):
     ``multiprocessing`` queues, values cross as pickled numpy pytrees."""
 
     name = "pipe"
+    process_hosts = True
 
     def __init__(self, ctx=None):
         super().__init__()
@@ -182,10 +268,12 @@ class MultiProcessPipe(_QueueTransport):
         return _PipeEndpoint(self._queues)
 
     def _pack(self, value):
-        return encode(value)
+        # contiguous numpy leaves cross as raw header+buffer records — the
+        # queue then pickles plain bytes, never array objects
+        return pack_raw(encode(value))
 
     def _unpack(self, value):
-        return decode(value)
+        return decode(unpack_raw(value))
 
     def close(self) -> None:
         for q in self._queues.values():
@@ -204,10 +292,228 @@ class _PipeEndpoint(_QueueTransport):
         self._queues = queues
 
     def _pack(self, value):
-        return encode(value)
+        return pack_raw(encode(value))
 
     def _unpack(self, value):
-        return decode(value)
+        return decode(unpack_raw(value))
+
+
+class _ShmLeaf:
+    """Placement record of one leaf inside a shared-memory slot."""
+
+    __slots__ = ("dtype", "shape", "offset")
+
+    def __init__(self, dtype: str, shape: tuple, offset: int):
+        self.dtype = dtype
+        self.shape = shape
+        self.offset = offset
+
+    def __getstate__(self):
+        return (self.dtype, self.shape, self.offset)
+
+    def __setstate__(self, state):
+        self.dtype, self.shape, self.offset = state
+
+
+def _attach_shm(name: str):
+    """Attach a peer-created segment.  Spawned hosts share the parent's
+    resource-tracker process and its registry is a *set*, so the attach's
+    re-registration is idempotent and the single unregister happens when the
+    owning transport ``unlink``\\ s in :meth:`SharedMemoryRing.close` —
+    never unregister here, or concurrent hosts race to double-remove the
+    name and the tracker logs KeyErrors."""
+    from multiprocessing import shared_memory
+    return shared_memory.SharedMemory(name=name)
+
+
+class _ShmRing:
+    """One channel's ring: slot names + the two queues that cycle them.
+
+    Picklable through ``Process`` args (mp queues inherit); attached
+    ``SharedMemory`` objects are cached per process, never pickled.
+    """
+
+    def __init__(self, slot_names: list, slot_bytes: int, free_q, data_q):
+        self.slot_names = slot_names
+        self.slot_bytes = slot_bytes
+        self.free_q = free_q  # indices of writable slots (backpressure)
+        self.data_q = data_q  # (ci, header) FIFO, bounded by capacity
+
+
+class _ShmOps:
+    """send/recv over ``self._rings`` — shared by the parent transport and
+    the picklable child endpoint."""
+
+    name = "shm"
+    _rings: dict
+
+    def _attached(self) -> dict:
+        cache = getattr(self, "_shm_cache", None)
+        if cache is None:
+            cache = self._shm_cache = {}
+        return cache
+
+    def _slot(self, ring: _ShmRing, idx: int):
+        cache = self._attached()
+        name = ring.slot_names[idx]
+        if name not in cache:
+            cache[name] = _attach_shm(name)
+        return cache[name]
+
+    def send(self, chan, ci: int, value) -> None:
+        ring = self._rings[chan]
+        if isinstance(value, str):  # SKIP / EOS markers need no slot
+            self._put_header(ring, chan, (ci, ("marker", value)))
+            return
+        import jax
+        arrs = jax.tree_util.tree_map(_as_contig, value)
+        leaves = jax.tree_util.tree_leaves(arrs)
+        total = sum(a.nbytes for a in leaves)
+        if total > ring.slot_bytes or any(not _rawable(a) for a in leaves):
+            # graceful fallback: oversized / exotic chunks ship inline
+            self._put_header(ring, chan, (ci, ("inline", pack_raw(arrs))))
+            return
+        try:
+            idx = ring.free_q.get(timeout=_RECV_TIMEOUT_S)
+        except queue.Empty:
+            raise TransportError(
+                f"{self.name}: channel {chan} has no free slot for "
+                f"{_RECV_TIMEOUT_S}s (consumer host stalled?)") from None
+        buf = self._slot(ring, idx).buf
+        offset = 0
+
+        def _write(a):
+            nonlocal offset
+            meta = _ShmLeaf(a.dtype.str, a.shape, offset)
+            if a.nbytes:  # ONE copy, straight into shared memory (tobytes()
+                # would materialise a second, transient copy per leaf)
+                dst = np.frombuffer(buf, dtype=a.dtype, count=a.size,
+                                    offset=offset).reshape(a.shape)
+                np.copyto(dst, a)
+            offset += a.nbytes
+            return meta
+
+        meta_tree = jax.tree_util.tree_map(_write, arrs)
+        self._put_header(ring, chan, (ci, ("slot", idx, meta_tree)))
+
+    def _put_header(self, ring: _ShmRing, chan, item) -> None:
+        try:
+            ring.data_q.put(item, timeout=_RECV_TIMEOUT_S)
+        except queue.Full:
+            raise TransportError(
+                f"{self.name}: channel {chan} full for {_RECV_TIMEOUT_S}s "
+                "(consumer host stalled?)") from None
+
+    def recv(self, chan, ci: int):
+        ring = self._rings[chan]
+        try:
+            got_ci, header = ring.data_q.get(
+                timeout=_RECV_TIMEOUT_S if ci >= 0 else 1.0)
+        except queue.Empty:
+            raise TransportError(
+                f"{self.name}: channel {chan} empty for {_RECV_TIMEOUT_S}s "
+                "(producer host died?)") from None
+        if header[0] == "marker" and header[1] == EOS:
+            return EOS  # stream terminator outranks the order check
+        if ci >= 0 and got_ci != ci:
+            if header[0] == "slot":  # recycle before raising: the ring
+                ring.free_q.put(header[1])  # invariant is slots == capacity
+            raise TransportError(
+                f"{self.name}: channel {chan} out of order: expected chunk "
+                f"{ci}, got {got_ci}")
+        if header[0] == "marker":
+            return header[1]
+        if header[0] == "inline":
+            return unpack_raw(header[1])
+        _, idx, meta_tree = header
+        buf = self._slot(ring, idx).buf
+        import jax
+
+        def _read(meta):
+            if not isinstance(meta, _ShmLeaf):
+                return meta
+            dt = np.dtype(meta.dtype)
+            n = int(np.prod(meta.shape, dtype=np.int64)) if meta.shape else 1
+            a = np.frombuffer(buf, dtype=dt, count=n,
+                              offset=meta.offset).reshape(meta.shape)
+            return a.copy()  # the slot is recycled the moment we return it
+
+        out = jax.tree_util.tree_map(_read, meta_tree)
+        ring.free_q.put(idx)
+        return out
+
+
+class SharedMemoryRing(_ShmOps, ChannelTransport):
+    """Zero-copy cut channels over ``multiprocessing.shared_memory``.
+
+    Each channel preallocates ``capacity`` fixed-size slots; a send writes
+    the chunk's leaves into a free slot (raw buffer copy — no pickling of
+    array payloads) and queues a tiny placement header; the receiver
+    reconstructs the leaves straight out of the slot and recycles it.  A
+    producer that outruns its consumer blocks on the empty free-slot queue:
+    the ring IS the CSP channel buffer, sized by ``ChannelDef.capacity``
+    exactly like every other transport.
+
+    Chunks larger than ``slot_bytes`` (and object/structured dtypes) fall
+    back to inline header+buffer encoding through the header queue, so the
+    transport never wedges on an unexpected payload — it just loses the
+    zero-copy fast path for that chunk.
+    """
+
+    name = "shm"
+    process_hosts = True
+
+    def __init__(self, ctx=None, slot_bytes: int = 1 << 20):
+        if ctx is None:
+            import multiprocessing
+            ctx = multiprocessing.get_context("spawn")
+        self.ctx = ctx
+        self.slot_bytes = slot_bytes
+        self._rings: dict = {}
+        self._owned: list = []  # created segments; we unlink them
+
+    def setup(self, cut_channels, capacities) -> None:
+        from multiprocessing import shared_memory
+        for chan in cut_channels:
+            cap = capacities.get(chan, 0) or DEFAULT_CAPACITY
+            slots = [shared_memory.SharedMemory(create=True,
+                                                size=self.slot_bytes)
+                     for _ in range(cap)]
+            self._owned.extend(slots)
+            self._attached().update({s.name: s for s in slots})
+            free_q = self.ctx.Queue()
+            for i in range(cap):
+                free_q.put(i)
+            data_q = self.ctx.Queue(maxsize=cap)
+            self._rings[chan] = _ShmRing([s.name for s in slots],
+                                         self.slot_bytes, free_q, data_q)
+
+    def endpoint(self, host: int):
+        return _ShmEndpoint(self._rings)
+
+    def close(self) -> None:
+        for shm in self._owned:
+            try:
+                shm.close()
+                shm.unlink()
+            except Exception:
+                pass
+        self._owned = []
+        for ring in self._rings.values():
+            for q in (ring.free_q, ring.data_q):
+                q.close()
+                q.join_thread()
+
+
+class _ShmEndpoint(_ShmOps, ChannelTransport):
+    """Child-process handle of a SharedMemoryRing (picklable via Process
+    args inheritance; attaches slots lazily, once per process)."""
+
+    name = "shm"
+    process_hosts = True
+
+    def __init__(self, rings: dict):
+        self._rings = rings
 
 
 class JaxMesh(InProcess):
@@ -267,7 +573,7 @@ class JaxMesh(InProcess):
 
 def make_transport(kind: str, **kw) -> ChannelTransport:
     kinds = {"inprocess": InProcess, "pipe": MultiProcessPipe,
-             "jaxmesh": JaxMesh}
+             "shm": SharedMemoryRing, "jaxmesh": JaxMesh}
     if kind not in kinds:
         raise NetworkError(
             f"unknown transport {kind!r}; pick one of {sorted(kinds)}")

@@ -330,7 +330,7 @@ class CompiledNetwork:
     def run_streaming(self, batch=None, *, instances: Optional[int] = None,
                       microbatch_size: int = 8,
                       max_in_flight: Optional[int] = None,
-                      lanes: Optional[int] = None):
+                      lanes: Optional[int] = None, fuse: bool = True):
         """Execute as a pipeline of microbatches (paper's process-oriented
         streaming, ``repro.core.stream``): items are split into
         ``microbatch_size`` chunks, each stage is a per-stage jitted step with
@@ -345,18 +345,23 @@ class CompiledNetwork:
         ``run`` / ``run_sequential`` up to XLA's whole-program reassociation
         (observable only for COMBINE over non-exact floats; exact on every
         paper network).  Scheduling telemetry lands in ``self.stream_stats``.
+
+        ``fuse`` (default on) compiles each maximal linear Worker/Engine run
+        into ONE per-chunk jit (:func:`repro.core.stream.fused_chains`) —
+        same op sequence, one dispatch per chain; the fused chains appear in
+        ``stream_stats.fused``.
         """
         from .stream import StreamExecutor
         if batch is None:
             if instances is None:
                 raise NetworkError("run_streaming() needs batch= or instances=")
             batch = self.make_batch(instances)
-        key = (microbatch_size, max_in_flight, lanes)
+        key = (microbatch_size, max_in_flight, lanes, fuse)
         ex = self._streams.get(key)
         if ex is None:
             ex = self._streams[key] = StreamExecutor(
                 self, microbatch_size=microbatch_size,
-                max_in_flight=max_in_flight, lanes=lanes)
+                max_in_flight=max_in_flight, lanes=lanes, fuse=fuse)
         out = ex.run(batch)
         self.stream_stats = ex.stats
         return out

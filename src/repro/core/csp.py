@@ -206,6 +206,14 @@ class CSPModel:
         if p.kind in (Kind.WORKER, Kind.ENGINE):
             if value == UT:
                 return ("wut",)
+            # a tuple tag is a fused stage chain: apply each component in
+            # order, nesting exactly as the unfused chain of workers would —
+            # fusion is function composition, observably nothing more
+            if isinstance(p.tag, tuple):
+                v = value
+                for t in p.tag:
+                    v = (t, v)
+                return ("write", v)
             return ("write", (p.tag, value))
         if p.kind is Kind.REDUCER:
             closed = s[1]

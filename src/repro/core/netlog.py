@@ -66,11 +66,15 @@ def cluster_report(plan, reports) -> str:
     ``plan`` is a :class:`repro.cluster.partition.PartitionPlan`; ``reports``
     a list of :class:`repro.cluster.runtime.HostReport`.  Pure formatting —
     no cluster imports, so the core stays dependency-free."""
+    chosen: dict = {}  # "src->dst" -> FIFO depth actually deployed
+    for r in reports:
+        chosen.update(getattr(r, "capacities", None) or {})
     lines = [f"== cluster: {plan.net.name} over {len(reports)} host(s) =="]
     for c in plan.cut:
+        cap = c.capacity or chosen.get(f"{c.src}->{c.dst}") or "default"
         lines.append(f"  channel {c.src} -> {c.dst}: host "
                      f"{plan.assignment[c.src]} -> {plan.assignment[c.dst]} "
-                     f"(capacity={c.capacity or 'default'})")
+                     f"(capacity={cap})")
     for r in sorted(reports, key=lambda r: r.host):
         state = "ok" if r.ok else "FAILED"
         lines.append(f"-- host {r.host} [{state}]: {', '.join(r.procs)}")

@@ -57,6 +57,8 @@ __all__ = [
     "microbatch_plan",
     "slice_microbatch",
     "stack_microbatches",
+    "fused_chains",
+    "plan_depth_lanes",
     "EmitChunks",
     "StreamStats",
     "StreamExecutor",
@@ -114,6 +116,75 @@ def stack_microbatches(batch, n_micro: int):
 
 
 # ==========================================================================
+# Chain fusion planning (shared by the executor and the CSP abstraction)
+# ==========================================================================
+
+def fused_chains(net: Network) -> list[tuple[str, ...]]:
+    """Maximal linear runs of functional stages that may compile as one jit.
+
+    A run ``a -> b -> ...`` fuses when every member is a Worker/Engine, every
+    link is the sole successor of its source and the sole predecessor of its
+    destination, and no connector (fan/cast/reducer) sits inside the run —
+    i.e. the stages form a straight pipe with no observable interleaving
+    point between them.  Fusing such a run into one per-chunk jit preserves
+    results exactly (same op sequence, one trace) while cutting per-chunk
+    dispatch overhead to one call per chain instead of one per stage.
+
+    Only runs of length >= 2 are returned; each is a tuple of stage names in
+    dataflow order.
+    """
+    chains: list[tuple[str, ...]] = []
+    in_chain: set[str] = set()
+    for name in net.toposort():
+        if name in in_chain:
+            continue
+        if net.procs[name].kind not in (Kind.WORKER, Kind.ENGINE):
+            continue
+        chain = [name]
+        node = name
+        while True:
+            succs = net.successors(node)
+            if len(succs) != 1:
+                break
+            nxt = succs[0]
+            if (net.procs[nxt].kind not in (Kind.WORKER, Kind.ENGINE)
+                    or len(net.predecessors(nxt)) != 1):
+                break
+            chain.append(nxt)
+            node = nxt
+        if len(chain) > 1:
+            chains.append(tuple(chain))
+            in_chain.update(chain)
+    return chains
+
+
+def plan_depth_lanes(net: Network, max_in_flight: Optional[int],
+                     lanes: Optional[int]) -> tuple[int, int]:
+    """The (in-flight depth, lane count) a StreamExecutor will run with.
+
+    Depth defaults to the network's minimum positive CSP channel capacity
+    (rendezvous networks get 2); lanes default to the widest OneFanAny (or
+    the depth when no fan is present).  Exposed so deployment planning (e.g.
+    cut-channel capacity derivation in :mod:`repro.cluster`) can size
+    transport FIFOs to the executor's actual appetite without building one.
+    """
+    if max_in_flight is not None:
+        depth = max_in_flight
+    else:
+        depth = net.min_capacity() or 2
+    if depth < 1:
+        raise NetworkError(f"max_in_flight must be >= 1, got {depth}")
+    if lanes is not None and lanes < 1:
+        raise NetworkError(f"lanes must be >= 1, got {lanes}")
+    fan_widths = [
+        len(net.successors(n)) for n, p in net.procs.items()
+        if (p.kind is Kind.SPREADER and p.distribution is Distribution.FAN
+            and p.fan_any)]
+    n_lanes = lanes if lanes is not None else max(fan_widths + [depth])
+    return depth, n_lanes
+
+
+# ==========================================================================
 # The executor
 # ==========================================================================
 
@@ -133,6 +204,9 @@ class StreamStats:
     # consumed (is_deleted) by the stage jit, i.e. the memory was reused
     donation: dict = dataclasses.field(default_factory=dict)
     donation_enabled: bool = False  # False on backends without donation (CPU)
+    # fused-chain composition: one tuple of stage names per linear run that
+    # compiled into a single per-chunk jit (empty when nothing fused)
+    fused: list = dataclasses.field(default_factory=list)
 
     def donation_summary(self) -> str:
         if not self.donation_enabled:
@@ -141,12 +215,19 @@ class StreamStats:
                        sorted(self.donation.items()))
         return f"donation: {per or '(no functional stages)'}"
 
+    def fused_summary(self) -> str:
+        if not self.fused:
+            return "fused: (no chains)"
+        per = " ".join("+".join(chain) for chain in self.fused)
+        return f"fused: {per}"
+
     def summary(self) -> str:
         req = sum(r for r, _ in self.donation.values())
         hon = sum(h for _, h in self.donation.values())
         return (f"stream: {self.n_chunks} chunks × ≤{self.microbatch_size} "
                 f"items, depth={self.depth}, lanes={self.lanes}, "
-                f"stalls={self.stalls}, donated={hon}/{req}")
+                f"stalls={self.stalls}, donated={hon}/{req}, "
+                f"fused_chains={len(self.fused)}")
 
 
 class StreamExecutor:
@@ -154,26 +235,28 @@ class StreamExecutor:
 
     def __init__(self, compiled: CompiledNetwork, *, microbatch_size: int,
                  max_in_flight: Optional[int] = None,
-                 lanes: Optional[int] = None):
+                 lanes: Optional[int] = None, fuse: bool = True):
         self.cn = compiled
         self.net = compiled.net
         self.order = compiled.order
         self.mb = microbatch_size
-        cap = self.net.min_capacity()
-        self.depth = max_in_flight if max_in_flight is not None else (cap or 2)
-        if self.depth < 1:
-            raise NetworkError(f"max_in_flight must be >= 1, got {self.depth}")
-        # work-stealing lane count: explicit OneFanAny branches define it,
-        # otherwise as many lanes as chunks can be in flight
-        if lanes is not None and lanes < 1:
-            raise NetworkError(f"lanes must be >= 1, got {lanes}")
-        fan_widths = [len(self.net.successors(n)) for n in self.order
-                      if self._is_fan_any(n)]
-        self.lanes = (lanes if lanes is not None
-                      else max(fan_widths + [self.depth]))
+        # depth: bounded in-flight chunks; lanes: work-stealing lane count
+        # (explicit OneFanAny branches define it, otherwise as many lanes as
+        # chunks can be in flight)
+        self.depth, self.lanes = plan_depth_lanes(
+            self.net, max_in_flight, lanes)
         self._outstanding = [0] * self.lanes
         self._combine_carry: dict = {}  # per-run COMBINE accumulators
         self._jits: dict = {}  # persists across runs: stages compile once
+        self.jit_builds = 0  # cache misses — a warm executor stays at 0
+        self.on_jit_build = None  # optional hook(name) for compile counting
+        self.trace_counts: dict = {}  # stage -> actual jax trace count
+        # intra-partition chain fusion: a straight Worker/Engine run compiles
+        # into ONE per-chunk jit (composed via the shared stage_fn path), so
+        # dispatch costs one call per chain instead of one per stage
+        self._chains = fused_chains(self.net) if fuse else []
+        self._chain_of_head = {c[0]: c for c in self._chains}
+        self._chain_members = {n for c in self._chains for n in c[1:]}
         # CPU has no buffer donation — requesting it only buys a UserWarning
         # per stage per chunk
         self._can_donate = jax.default_backend() != "cpu"
@@ -196,18 +279,46 @@ class StreamExecutor:
                     self._in_spec[c.dst] = spec
         self.stats = StreamStats(microbatch_size=self.mb, depth=self.depth,
                                  lanes=self.lanes,
-                                 donation_enabled=self._can_donate)
+                                 donation_enabled=self._can_donate,
+                                 fused=list(self._chains))
 
     def _is_fan_any(self, name: str) -> bool:
         p = self.net.procs[name]
         return (p.kind is Kind.SPREADER
                 and p.distribution is Distribution.FAN and p.fan_any)
 
+    def _record_build(self, name) -> None:
+        self.jit_builds += 1
+        if self.on_jit_build is not None:
+            self.on_jit_build(name)
+
+    def _stage_label(self, name: str) -> str:
+        """Telemetry key for a stage: fused chains report as one unit."""
+        chain = self._chain_of_head.get(name)
+        return "+".join(chain) if chain else name
+
     # -- per-stage jit cache (shared stage_fn compilation path) ------------
+    def _stage_fn(self, name: str):
+        """The traceable callable for ``name`` — for a fused-chain head, the
+        composition of every member's ``stage_fn`` (same shared compilation
+        path, one trace)."""
+        chain = self._chain_of_head.get(name)
+        if chain is None:
+            return self.cn.stage_fn(name)
+        fns = [self.cn.stage_fn(m) for m in chain]
+
+        def fused(x, _fns=tuple(fns)):
+            for f in _fns:
+                x = f(x)
+            return x
+
+        return fused
+
     def _stage_jit(self, name: str, donate: bool):
         key = (name, donate)
         if key not in self._jits:
-            fn = self.cn.stage_fn(name)
+            self._record_build(name)
+            fn = self._stage_fn(name)
             spec = self._in_spec.get(name)
             if spec is not None:  # sharding constraint folded into the jit
                 sharding = jax.sharding.NamedSharding(self.cn.mesh, spec)
@@ -218,21 +329,40 @@ class StreamExecutor:
                         if hasattr(l, "ndim") and l.ndim > 0 else l, x)
                     return _inner(x)
 
+            # the counter body executes only while jax TRACES (cache miss /
+            # new shape): a warm deployment must never tick it again
             self._jits[key] = jax.jit(
-                fn, donate_argnums=(0,) if donate else ())
+                self._counted(fn, self._stage_label(name)),
+                donate_argnums=(0,) if donate else ())
         return self._jits[key]
+
+    def _counted(self, fn, label):
+        """Wrap ``fn`` so the counter ticks whenever jax TRACES it — cache
+        misses AND shape-driven retraces both show up, so "0 new traces" is
+        a truthful definition of a warm executor."""
+        def counted(*args, _fn=fn, _label=label):
+            self.trace_counts[_label] = self.trace_counts.get(_label, 0) + 1
+            return _fn(*args)
+        return counted
 
     def _carry_jit(self, name: str):
         if ("carry", name) not in self._jits:
-            self._jits[("carry", name)] = jax.jit(
-                self.cn.collect_carry_fn(name))
+            self._record_build(("carry", name))
+            self._jits[("carry", name)] = jax.jit(self._counted(
+                self.cn.collect_carry_fn(name), f"carry:{name}"))
         return self._jits[("carry", name)]
 
     def _combine_carry_jit(self, name: str):
         if ("comb", name) not in self._jits:
-            self._jits[("comb", name)] = jax.jit(
-                self.cn.combine_carry_fn(name))
+            self._record_build(("comb", name))
+            self._jits[("comb", name)] = jax.jit(self._counted(
+                self.cn.combine_carry_fn(name), f"comb:{name}"))
         return self._jits[("comb", name)]
+
+    def new_traces(self) -> int:
+        """Total stage-jit traces so far (builds + retraces); the warm-batch
+        invariant is that this number stops moving."""
+        return sum(self.trace_counts.values())
 
     def _wire(self, x, axis, dst: str, *, replicate: bool = False):
         """Constrain a value flowing to ``dst``: a no-op when ``dst``'s stage
@@ -379,6 +509,13 @@ class StreamExecutor:
                                 rep = self._constrain(x, None, replicate=True)
                             wires[(name, s)] = rep
             elif p.kind in (Kind.WORKER, Kind.ENGINE):
+                if name in self._chain_members:
+                    continue  # runs inside its chain head's fused jit
+                chain = self._chain_of_head.get(name)
+                label = self._stage_label(name)
+                # a fused chain's output feeds the TAIL's successors
+                out_of, succs = ((chain[-1], net.successors(chain[-1]))
+                                 if chain else (name, succs))
                 (x,) = _pop_in(name)
                 if x is _SKIP:
                     out = _SKIP
@@ -392,16 +529,16 @@ class StreamExecutor:
                                          *host_streams.values()))
                     out = self._stage_jit(name, donate)(x)
                     if donate:
-                        rec = self.stats.donation.setdefault(name, [0, 0])
+                        rec = self.stats.donation.setdefault(label, [0, 0])
                         rec[0] += 1
                         leaves = [l for l in jax.tree_util.tree_leaves(x)
                                   if hasattr(l, "is_deleted")]
                         if leaves and all(l.is_deleted() for l in leaves):
                             rec[1] += 1
                     else:
-                        self.stats.donation.setdefault(name, [0, 0])
+                        self.stats.donation.setdefault(label, [0, 0])
                 for s in succs:
-                    wires[(name, s)] = out
+                    wires[(out_of, s)] = out
             elif p.kind is Kind.REDUCER:
                 xs = [v for v in _pop_in(name) if v is not _SKIP]
                 if p.distribution is Distribution.COMBINE:
@@ -485,7 +622,8 @@ class StreamExecutor:
         self.stats = StreamStats(n_items=n, microbatch_size=self.mb,
                                  n_chunks=len(plan), depth=self.depth,
                                  lanes=self.lanes,
-                                 donation_enabled=self._can_donate)
+                                 donation_enabled=self._can_donate,
+                                 fused=list(self._chains))
         self._outstanding = [0] * self.lanes
         self._combine_carry = {}
 
@@ -528,10 +666,29 @@ class StreamExecutor:
 # CSP abstract models of the two schedules (paper §6.1.1 turned on ourselves)
 # ==========================================================================
 
-def _functional_tags(net: Network) -> list[str]:
-    """The symbolic stage chain every item traverses, in topological order."""
-    return [net.procs[n].tag or n for n in net.toposort()
-            if net.procs[n].kind in (Kind.WORKER, Kind.ENGINE)]
+def _functional_tags(net: Network, fused: bool = False) -> list:
+    """The symbolic stage chain every item traverses, in topological order.
+
+    With ``fused=True`` consecutive stages that the executor fuses
+    (:func:`fused_chains`) collapse into one *tuple* tag — the CSP worker
+    applies each component in order (``repro.core.csp`` nests tuple tags),
+    so a fused stage is, observably, exactly the composition of its members.
+    """
+    def _tag(n):
+        return net.procs[n].tag or n
+
+    if not fused:
+        return [_tag(n) for n in net.toposort()
+                if net.procs[n].kind in (Kind.WORKER, Kind.ENGINE)]
+    head_of = {c[0]: c for c in fused_chains(net)}
+    members = {n for c in head_of.values() for n in c[1:]}
+    tags: list = []
+    for n in net.toposort():
+        if net.procs[n].kind not in (Kind.WORKER, Kind.ENGINE) or n in members:
+            continue
+        chain = head_of.get(n)
+        tags.append(tuple(_tag(m) for m in chain) if chain else _tag(n))
+    return tags
 
 
 def synchronous_abstract_model(net: Network, name: str = "sync") -> Network:
@@ -548,7 +705,8 @@ def synchronous_abstract_model(net: Network, name: str = "sync") -> Network:
 
 
 def streaming_abstract_model(net: Network, lanes: int = 2,
-                             name: str = "stream") -> Network:
+                             name: str = "stream",
+                             fused: bool = False) -> Network:
     """CSP model of the streaming schedule: chunks are items, OneFanAny
     assigns each to any free lane (work stealing), each lane is the full
     stage chain, AnyFanOne merges lanes into the Collect.
@@ -556,9 +714,16 @@ def streaming_abstract_model(net: Network, lanes: int = 2,
     ``trace_equivalent(streaming_abstract_model(net), \
 synchronous_abstract_model(net))`` is the refinement obligation the executor
     must meet: same guaranteed termination, same collected outcome on every
-    interleaving."""
-    tags = _functional_tags(net)
-    m = Network(f"{net.name}/{name}[{lanes}]")
+    interleaving.
+
+    ``fused=True`` models the executor's chain-fused schedule: each fused
+    run becomes ONE lane worker carrying the tuple of its members' tags, and
+    the CSP worker applies the tags in order — so the fused schedule's
+    outcomes are the same nested compositions as the synchronous model's,
+    and ``trace_equivalent`` still holds (the fusion is observationally
+    invisible, which is exactly the license to perform it)."""
+    tags = _functional_tags(net, fused=fused)
+    m = Network(f"{net.name}/{name}[{lanes}]{'/fused' if fused else ''}")
     m.add(Emit(lambda i: i, name="emit"),
           OneFanAny(destinations=lanes, name="ofa"))
     m.procs["afo"] = AnyFanOne(sources=lanes, name="afo")

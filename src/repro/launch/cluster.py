@@ -55,7 +55,7 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--hosts", type=int, default=2)
     ap.add_argument("--transport", default="pipe",
-                    choices=["inprocess", "pipe", "jaxmesh"])
+                    choices=["inprocess", "pipe", "shm", "jaxmesh"])
     ap.add_argument("--workload", default="mandelbrot",
                     choices=["mandelbrot", "pipeline"])
     ap.add_argument("--instances", type=int, default=8)
@@ -63,9 +63,14 @@ def main():
     ap.add_argument("--bands", type=int, default=8)
     ap.add_argument("--size", type=int, default=64)
     ap.add_argument("--iters", type=int, default=40)
+    ap.add_argument("--batches", type=int, default=1,
+                    help="batches through ONE warm deployment (batch 0 "
+                         "pays spawn+compile; the rest are steady-state)")
     args = ap.parse_args()
 
-    from repro.cluster import check_refinement, partition, run_cluster
+    import time
+
+    from repro.cluster import ClusterDeployment, check_refinement, partition
     from repro.core import netlog, run_sequential
 
     if args.workload == "mandelbrot":
@@ -81,12 +86,22 @@ def main():
     print(f"[cluster] CSP refinement (partitioned [T= unpartitioned, both "
           f"directions): {check_refinement(net, plan)}")
 
-    out = run_cluster(net, instances=instances, plan=plan,
-                      transport=args.transport,
-                      microbatch_size=args.microbatch, factory=factory)
     seq = run_sequential(net, instances)
-    same = all(bool((out[k] == seq[k]).all() if hasattr(seq[k], "all")
-                    else out[k] == seq[k]) for k in seq)
+    same = True
+    with ClusterDeployment(net, plan=plan, transport=args.transport,
+                           microbatch_size=args.microbatch,
+                           factory=factory) as dep:
+        for b in range(max(args.batches, 1)):
+            t0 = time.perf_counter()
+            out = dep.run(instances=instances)
+            wall = time.perf_counter() - t0
+            same = same and all(
+                bool((out[k] == seq[k]).all() if hasattr(seq[k], "all")
+                     else out[k] == seq[k]) for k in seq)
+            if args.batches > 1:
+                print(f"[cluster] batch {b} "
+                      f"({'cold' if b == 0 else 'warm'}): "
+                      f"{wall * 1e3:.1f}ms identical={same}")
     print(f"[cluster] {args.transport} over {args.hosts} hosts == "
           f"sequential oracle: {same}")
     print(netlog.cluster_report(plan, out.reports))

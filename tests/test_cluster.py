@@ -12,11 +12,12 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.cluster import (ClusterError, InProcess, JaxMesh,
-                           MultiProcessPipe, PartitionExecutor,
+from repro.cluster import (ClusterDeployment, ClusterError, ExecConfig,
+                           InProcess, JaxMesh, MultiProcessPipe,
+                           PartitionExecutor, SharedMemoryRing,
                            abstract_partitioned_model, auto_assignment,
-                           check_refinement, make_transport, partition,
-                           run_cluster)
+                           check_refinement, derive_cut_capacities,
+                           make_transport, partition, run_cluster)
 from repro.core import (Collect, CombineNto1, DataParallelCollect, Emit,
                         GroupOfPipelineCollects, Network, NetworkError,
                         OnePipelineCollect, OneSeqCastList, Worker, build,
@@ -242,6 +243,179 @@ class TestInProcessCluster:
         assert all("donation" in r.donation_summary for r in out.reports)
 
 
+class TestDerivedCapacities:
+    """Satellite: default cut-channel FIFO depth comes from the consumer
+    executor's depth/lane appetite, not a blind constant, and the chosen
+    values land in HostReport.capacities."""
+
+    def test_explicit_capacity_wins(self):
+        net = Network("capped")
+        net.add(Emit(_mk_items(8), name="emit"), Worker(_sq, name="w"))
+        net.procs["collect"] = Collect(_add, init=jnp.asarray(0.0),
+                                       jit_combine=True, name="collect")
+        net.connect("w", "collect", capacity=1)
+        plan = partition(net, assignment={"emit": 0, "w": 0, "collect": 1})
+        caps = derive_cut_capacities(plan, ExecConfig())
+        assert caps[("w", "collect")] == 1
+
+    def test_default_derived_from_depth_and_lanes(self):
+        net = _farm()
+        plan = partition(net, hosts=2)
+        (c,) = plan.cut
+        from repro.core.stream import plan_depth_lanes
+        sub = plan.subnetwork(plan.assignment[c.dst])
+        depth, lanes = plan_depth_lanes(sub, None, None)
+        caps = derive_cut_capacities(plan, ExecConfig())
+        assert caps[(c.src, c.dst)] == max(2, depth, lanes)
+        # a deeper in-flight appetite widens the derived FIFO
+        deep = derive_cut_capacities(plan, ExecConfig(max_in_flight=7))
+        assert deep[(c.src, c.dst)] == 7
+
+    def test_reports_and_netlog_carry_capacities(self):
+        net = _farm()
+        plan = partition(net, hosts=2)
+        out = run_cluster(net, instances=10, plan=plan, microbatch_size=5)
+        merged = {}
+        for r in out.reports:
+            merged.update(r.capacities)
+        (c,) = plan.cut
+        key = f"{c.src}->{c.dst}"
+        assert key in merged and merged[key] >= 2
+        rep = netlog.cluster_report(plan, out.reports)
+        assert f"capacity={merged[key]}" in rep
+
+    def test_transport_fifo_sized_to_derived(self):
+        net = _farm()
+        plan = partition(net, hosts=2)
+        t = InProcess()
+        run_cluster(net, instances=10, plan=plan, transport=t,
+                    microbatch_size=5)
+        (c,) = plan.cut
+        caps = derive_cut_capacities(plan, ExecConfig(microbatch_size=5))
+        assert t._queues[(c.src, c.dst)].maxsize == caps[(c.src, c.dst)]
+
+
+class TestClusterDeployment:
+    """Tentpole: a deployment partitions, compiles, and spawns ONCE; warm
+    `.run` calls reuse everything and stay bit-identical to the oracle."""
+
+    def test_three_batches_bit_identical(self):
+        net = _farm()
+        with ClusterDeployment(net, hosts=2, microbatch_size=2) as dep:
+            for n in (4, 6, 10):
+                out = dep.run(instances=n)
+                seq = run_sequential(net, n)["collect"]
+                assert float(out["collect"]) == float(seq)
+                assert all(r.ok for r in out.reports)
+
+    def test_stage_jits_compile_exactly_once(self):
+        """Compile-counter hook: the first batch traces every stage jit;
+        same-shape warm batches must trace (and build) nothing."""
+        net = _farm()
+        with ClusterDeployment(net, hosts=2, microbatch_size=2) as dep:
+            out1 = dep.run(instances=4)
+            assert sum(r.jit_builds for r in out1.reports) > 0
+            traces = {h: dict(ex.trace_counts)
+                      for h, ex in dep.executors.items()}
+            built = []
+            for ex in dep.executors.values():
+                ex.on_jit_build = built.append
+            for n in (4, 6, 8):  # mb=2: every chunk shape already traced
+                out = dep.run(instances=n)
+                assert sum(r.jit_builds for r in out.reports) == 0
+            assert built == []
+            for h, ex in dep.executors.items():
+                assert ex.trace_counts == traces[h]
+            # a NEW chunk shape is honestly reported as a retrace even
+            # though every jit cache key already exists
+            out = dep.run(instances=5)  # last chunk has fresh shape (1,)
+            assert sum(r.jit_builds for r in out.reports) > 0
+
+    def test_explicit_batch_pytree(self):
+        """deployment.run(batch=...) feeds the Emit an explicit batch."""
+        net = _farm()
+        vals = jnp.asarray(np.arange(8, dtype=np.float32) + 100.0)
+        with ClusterDeployment(net, hosts=2, microbatch_size=2) as dep:
+            out = dep.run(batch=vals)
+            expect = float(jnp.sum(vals * vals))
+            assert float(out["collect"]) == expect
+            # and instance-driven batches still work on the same deployment
+            seq = run_sequential(net, 6)["collect"]
+            assert float(dep.run(instances=6)["collect"]) == float(seq)
+
+    def test_failure_on_batch2_reports_then_fresh_deployment_works(self):
+        """A host failure mid-deployment still yields the §8 cluster report;
+        the poisoned deployment refuses more work; a fresh one succeeds."""
+        def tripwire(acc, x):
+            if float(x) >= 16.0:
+                raise RuntimeError("collector tripped")
+            return {**acc, len(acc): float(x)}
+
+        net = DataParallelCollect(create=_mk_items(8), function=_sq,
+                                  collector=tripwire, init={}, workers=2,
+                                  jit_combine=False)
+        dep = ClusterDeployment(net, hosts=2, microbatch_size=2,
+                                timeout_s=60)
+        try:
+            out = dep.run(instances=4)  # squares < 16: fine
+            assert all(r.ok for r in out.reports)
+            with pytest.raises(ClusterError) as ei:
+                dep.run(instances=8)  # 5² = 25 trips the collector
+            assert "collector tripped" in str(ei.value)
+            assert "FAILED" in str(ei.value)
+            # poisoned: further batches refused with a actionable message
+            with pytest.raises(NetworkError, match="fresh deployment"):
+                dep.run(instances=4)
+        finally:
+            dep.close()
+        with ClusterDeployment(net, hosts=2, microbatch_size=2) as dep2:
+            out = dep2.run(instances=4)
+            assert out["collect"] == {i: float(i * i) for i in range(4)}
+
+    def test_closed_deployment_refuses(self):
+        dep = ClusterDeployment(_farm(), hosts=2, microbatch_size=2)
+        dep.close()
+        with pytest.raises(NetworkError, match="closed"):
+            dep.run(instances=4)
+
+    def test_process_transport_requires_factory(self):
+        """Refused before the transport allocates anything: a failed start
+        must not leak shm segments or queue feeder threads (regression)."""
+        for tname in ("pipe", "shm"):
+            t = make_transport(tname)
+            with pytest.raises(NetworkError, match="factory"):
+                with ClusterDeployment(_farm(), hosts=2,
+                                       transport=t) as dep:
+                    dep.run(instances=4)
+            if tname == "shm":
+                assert not t._owned and not t._rings
+            else:
+                assert not t._queues
+
+    def test_pipe_deployment_reuse_over_real_processes(self):
+        net = _farm_factory(10, 3)
+        with ClusterDeployment(net, hosts=2, transport="pipe",
+                               microbatch_size=2,
+                               factory=(_farm_factory, (10, 3))) as dep:
+            for n in (4, 10):
+                out = dep.run(instances=n)
+                seq = run_sequential(net, n)["collect"]
+                assert float(out["collect"]) == float(seq)
+            warm = dep.run(instances=10)
+            assert sum(r.jit_builds for r in warm.reports) == 0
+
+    def test_shm_deployment_reuse_over_real_processes(self):
+        net = _farm_factory(10, 3)
+        with ClusterDeployment(net, hosts=2, transport="shm",
+                               microbatch_size=2,
+                               factory=(_farm_factory, (10, 3))) as dep:
+            seq = run_sequential(net, 10)["collect"]
+            for _ in range(2):
+                out = dep.run(instances=10)
+                assert float(out["collect"]) == float(seq)
+            assert sum(r.jit_builds for r in out.reports) == 0
+
+
 class TestFailureCapture:
     def test_worker_failure_surfaces_cross_host(self):
         def boom(x):
@@ -295,6 +469,131 @@ class TestMultiProcessPipe:
                    for l in jax.tree_util.tree_leaves(enc))
         dec = decode(enc)
         np.testing.assert_array_equal(dec[0], np.asarray([1.0, 2.0]))
+
+    def test_pack_raw_preserves_dtype_endianness_and_0d(self):
+        """Satellite hardening: the raw header+buffer encoding that crosses
+        process boundaries must round-trip dtype (byte order included),
+        0-d arrays, bools, and non-contiguous views, bit-for-bit."""
+        from repro.cluster.transport import _RawLeaf, pack_raw, unpack_raw
+        tree = {
+            "big": np.arange(6, dtype=">f4").reshape(2, 3),
+            "little": np.arange(6, dtype="<i2"),
+            "zerod": np.float64(3.25),
+            "bool": np.asarray([True, False, True]),
+            "noncontig": np.arange(12.0).reshape(3, 4).T,
+            "jax": jnp.asarray([1.5, -2.5]),
+            "empty": np.zeros((0, 4), np.int32),
+        }
+        packed = pack_raw(tree)
+        # every plain leaf became a raw header+buffer record, not an array
+        assert all(isinstance(l, _RawLeaf)
+                   for l in jax.tree_util.tree_leaves(packed))
+        dec = unpack_raw(packed)
+        for k, v in tree.items():
+            a = np.asarray(v)
+            assert dec[k].dtype == a.dtype, k
+            assert dec[k].shape == a.shape, k
+            assert dec[k].tobytes() == np.ascontiguousarray(a).tobytes(), k
+
+    def test_unpack_raw_arrays_are_writable(self):
+        """The pickle path this encoding replaces handed out writable
+        arrays; consumers that mutate received chunks must keep working
+        (regression)."""
+        from repro.cluster.transport import pack_raw, unpack_raw
+        out = unpack_raw(pack_raw({"x": np.arange(4.0)}))
+        out["x"] *= 2.0  # raises ValueError if read-only
+        np.testing.assert_array_equal(out["x"], [0.0, 2.0, 4.0, 6.0])
+
+    def test_pack_raw_markers_and_exotic_dtypes_pass_through(self):
+        from repro.cluster.transport import EOS, SKIP, pack_raw, unpack_raw
+        assert pack_raw(SKIP) == SKIP and unpack_raw(EOS) == EOS
+        structured = np.zeros(2, dtype=[("a", "<f4"), ("b", "<i8")])
+        packed = pack_raw(structured)  # pickle fallback keeps the array
+        assert isinstance(packed, np.ndarray)
+        np.testing.assert_array_equal(unpack_raw(packed), structured)
+
+    def test_pipe_pack_roundtrip_through_endpoint(self):
+        """The _pack/_unpack pair a pipe endpoint actually applies."""
+        from repro.cluster.transport import _PipeEndpoint
+        ep = _PipeEndpoint({})
+        tree = {"x": np.arange(4, dtype=">u2"), "y": jnp.float32(7.0)}
+        out = ep._unpack(ep._pack(tree))
+        assert out["x"].dtype == np.dtype(">u2")
+        np.testing.assert_array_equal(out["x"], np.arange(4, dtype=">u2"))
+        assert np.asarray(out["y"]).shape == ()
+        assert np.asarray(out["y"]).dtype == np.float32
+
+    def test_encode_result_preserves_0d_and_dtype(self):
+        from repro.cluster.runtime import _encode_result
+        out = _encode_result({"collect": jnp.asarray(5, jnp.int32),
+                              "v": jnp.asarray([1.0, 2.0])})
+        assert np.asarray(out["collect"]).shape == ()
+        assert np.asarray(out["collect"]).dtype == np.int32
+
+
+class TestSharedMemoryRing:
+    """Zero-copy slot-ring transport: payloads cross as raw buffer writes."""
+
+    def test_farm_bit_identical_over_shm(self):
+        net = _farm_factory(10, 3)
+        seq = run_sequential(net, 10)["collect"]
+        out = run_cluster(net, instances=10, hosts=2, transport="shm",
+                          microbatch_size=3,
+                          factory=(_farm_factory, (10, 3)))
+        assert float(out["collect"]) == float(seq)
+        assert all(r.ok for r in out.reports)
+
+    def test_ring_send_recv_in_process(self):
+        t = SharedMemoryRing(slot_bytes=1 << 12)
+        try:
+            t.setup([("a", "b")], {("a", "b"): 2})
+            val = {"x": np.arange(8, dtype="<f8"), "y": np.float32(7)}
+            t.send(("a", "b"), 0, val)
+            out = t.recv(("a", "b"), 0)
+            np.testing.assert_array_equal(out["x"], val["x"])
+            assert np.asarray(out["y"]).shape == ()
+            # slot came back: the ring can carry more chunks than slots
+            for ci in (1, 2, 3):
+                t.send(("a", "b"), ci, val)
+                np.testing.assert_array_equal(
+                    t.recv(("a", "b"), ci)["x"], val["x"])
+        finally:
+            t.close()
+
+    def test_oversize_chunk_falls_back_inline(self):
+        t = SharedMemoryRing(slot_bytes=128)
+        try:
+            t.setup([("a", "b")], {("a", "b"): 2})
+            big = np.arange(1024, dtype=np.float64)
+            t.send(("a", "b"), 0, big)
+            np.testing.assert_array_equal(t.recv(("a", "b"), 0), big)
+        finally:
+            t.close()
+
+    def test_ring_capacity_is_slot_count(self):
+        t = SharedMemoryRing(slot_bytes=1 << 10)
+        try:
+            t.setup([("a", "b")], {("a", "b"): 3})
+            ring = t._rings[("a", "b")]
+            assert len(ring.slot_names) == 3
+            assert ring.data_q._maxsize == 3
+        finally:
+            t.close()
+
+    def test_out_of_order_detected_and_slot_recycled(self):
+        from repro.cluster.transport import TransportError
+        t = SharedMemoryRing(slot_bytes=1 << 10)
+        try:
+            t.setup([("a", "b")], {("a", "b"): 2})
+            t.send(("a", "b"), 5, np.arange(3.0))
+            with pytest.raises(TransportError, match="out of order"):
+                t.recv(("a", "b"), 0)
+            # the offending chunk's slot went back to the ring (invariant:
+            # free slots + in-flight slots == capacity, here 2 + 0)
+            ring = t._rings[("a", "b")]
+            assert ring.free_q.qsize() == 2
+        finally:
+            t.close()
 
 
 class TestJaxMesh:

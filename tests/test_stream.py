@@ -11,7 +11,8 @@ from repro.core import (Collect, DataParallelCollect, Emit,
                         GroupOfPipelineCollects, Network, NetworkError,
                         OnePipelineCollect, TaskParallelOfGroupCollects,
                         Worker, build, csp, run_sequential)
-from repro.core.stream import (microbatch_plan, slice_microbatch,
+from repro.core.stream import (StreamExecutor, fused_chains, microbatch_plan,
+                               plan_depth_lanes, slice_microbatch,
                                stack_microbatches, streaming_abstract_model,
                                synchronous_abstract_model)
 
@@ -359,8 +360,12 @@ class TestDonationTelemetry:
         cn = build(net)
         cn.run_streaming(instances=8, microbatch_size=2)
         stats = cn.stream_stats
-        # every functional stage appears, with requested >= honoured >= 0
-        assert set(stats.donation) == {"stage0", "stage1"}
+        # the two pipeline stages fuse into one chain; telemetry records the
+        # fused unit (unfused mode still records per stage, below)
+        assert set(stats.donation) == {"stage0+stage1"}
+        cn.run_streaming(instances=8, microbatch_size=2, fuse=False)
+        assert set(cn.stream_stats.donation) == {"stage0", "stage1"}
+        stats = cn.stream_stats
         for req, hon in stats.donation.values():
             assert req >= hon >= 0
         if jax.default_backend() == "cpu":
@@ -378,6 +383,112 @@ class TestDonationTelemetry:
         cn = build(net)
         cn.run_streaming(instances=6, microbatch_size=3)
         assert "donated=" in cn.stream_stats.summary()
+
+
+class TestChainFusion:
+    """Intra-partition chain fusion: maximal linear Worker/Engine runs
+    compile into one per-chunk jit, results stay bit-identical, and the
+    fused schedule's CSP abstraction still trace-refines the synchronous
+    model (the fusion is observationally invisible)."""
+
+    def test_chains_found_on_pipeline(self):
+        net = OnePipelineCollect(create=_mk_items(8),
+                                 stage_ops=[_sq, _inc, _inc],
+                                 collector=_add, init=jnp.asarray(0.0),
+                                 jit_combine=True)
+        assert fused_chains(net) == [("stage0", "stage1", "stage2")]
+
+    def test_no_chain_across_fan(self):
+        """A fan boundary (or any connector) breaks the run."""
+        net = DataParallelCollect(create=_mk_items(8), function=_sq,
+                                  collector=_add, init=jnp.asarray(0.0),
+                                  workers=3, jit_combine=True, explicit=True)
+        assert fused_chains(net) == []  # one worker per branch: nothing linear
+
+    def test_branch_internal_chains_fuse(self):
+        """Chains INSIDE a fan branch fuse; the fan itself never does."""
+        net = GroupOfPipelineCollects(
+            create=_mk_items(12), stage_ops=[_sq, _inc], collector=_add,
+            init=jnp.asarray(0.0), jit_combine=True, groups=3, explicit=True)
+        chains = fused_chains(net)
+        assert len(chains) == 3 and all(len(c) == 2 for c in chains)
+
+    @pytest.mark.parametrize("mb", [2, 3, 7])
+    def test_fused_bit_identical(self, mb):
+        net = OnePipelineCollect(create=_mk_items(7),
+                                 stage_ops=[_sq, _inc, lambda x: x * 3.0],
+                                 collector=_add, init=jnp.asarray(0.0),
+                                 jit_combine=True)
+        cn = build(net)
+        seq = run_sequential(net, 7)["collect"]
+        fused = cn.run_streaming(instances=7, microbatch_size=mb)["collect"]
+        unfused = cn.run_streaming(instances=7, microbatch_size=mb,
+                                   fuse=False)["collect"]
+        assert float(seq) == float(fused) == float(unfused)
+        assert cn._streams[(mb, None, None, True)].stats.fused == [
+            ("stage0", "stage1", "stage2")]
+
+    def test_stats_record_fusion(self):
+        net = OnePipelineCollect(create=_mk_items(8), stage_ops=[_sq, _inc],
+                                 collector=_add, init=jnp.asarray(0.0),
+                                 jit_combine=True)
+        cn = build(net)
+        cn.run_streaming(instances=8, microbatch_size=2)
+        assert cn.stream_stats.fused == [("stage0", "stage1")]
+        assert "fused_chains=1" in cn.stream_stats.summary()
+        assert "stage0+stage1" in cn.stream_stats.fused_summary()
+
+    def test_warm_executor_traces_once(self):
+        """The compile-counter hook: re-running a warm executor with
+        same-shape batches never re-traces a stage jit."""
+        net = OnePipelineCollect(create=_mk_items(8), stage_ops=[_sq, _inc],
+                                 collector=_add, init=jnp.asarray(0.0),
+                                 jit_combine=True)
+        cn = build(net)
+        ex = StreamExecutor(cn, microbatch_size=2)
+        built = []
+        ex.on_jit_build = built.append
+        ex.run(cn.make_batch(8))
+        first_traces = dict(ex.trace_counts)
+        first_builds = ex.jit_builds
+        assert built and first_builds > 0
+        for _ in range(2):
+            ex.run(cn.make_batch(8))
+        assert ex.jit_builds == first_builds
+        assert ex.trace_counts == first_traces
+
+    @pytest.mark.parametrize("lanes", [1, 2])
+    def test_fused_schedule_refines_sync(self, lanes):
+        net = OnePipelineCollect(create=_mk_items(4), stage_ops=[_sq, _inc],
+                                 collector=_add, init=jnp.asarray(0.0),
+                                 jit_combine=True)
+        fusedm = streaming_abstract_model(net, lanes=lanes, fused=True)
+        sync = synchronous_abstract_model(net)
+        assert csp.trace_equivalent(fusedm, sync, instances=3)
+        assert csp.trace_equivalent(sync, fusedm, instances=3)
+
+    def test_fused_model_is_safe(self):
+        net = OnePipelineCollect(create=_mk_items(4), stage_ops=[_sq, _inc],
+                                 collector=_add, init=jnp.asarray(0.0),
+                                 jit_combine=True)
+        r = csp.check(streaming_abstract_model(net, lanes=2, fused=True),
+                      instances=3)
+        assert r.deadlock_free and r.divergence_free
+        assert r.all_paths_terminate and r.deterministic
+
+    def test_plan_depth_lanes_matches_executor(self):
+        net = DataParallelCollect(create=_mk_items(8), function=_sq,
+                                  collector=_add, init=jnp.asarray(0.0),
+                                  workers=3, jit_combine=True, explicit=True)
+        cn = build(net)
+        ex = StreamExecutor(cn, microbatch_size=2)
+        assert plan_depth_lanes(net, None, None) == (ex.depth, ex.lanes)
+        assert plan_depth_lanes(net, 5, None) == (5, 5)
+        assert plan_depth_lanes(net, None, 7)[1] == 7
+        with pytest.raises(NetworkError, match="lanes"):
+            plan_depth_lanes(net, None, 0)
+        with pytest.raises(NetworkError, match="max_in_flight"):
+            plan_depth_lanes(net, 0, None)
 
 
 class TestMeshFoldedConstraints:
