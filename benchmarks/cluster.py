@@ -14,15 +14,22 @@ costs per transport on the Mandelbrot row-band farm:
 * ``jaxmesh``   — 2-host partition over mesh submeshes, channel puts folded
                   into the consumer stage jits.
 
-Each transport gets two rows.  The cold row (``cluster_<t>``) is one
+Each transport gets three rows.  The cold row (``cluster_<t>``) is one
 ``run_cluster`` call: partition build + host spawn + per-host stage
 compilation + one batch — the worst-case deployment cost.  The steady row
 (``cluster_<t>_steady``) holds ONE :class:`ClusterDeployment` open, pays
 that bill once, then times warm ``deployment.run`` calls — the §7
 steady-state story; its ``derived`` string reports the cold/warm split and
 the deployed cut-channel capacities so the stall counts are explainable.
+The recovery row (``cluster_<t>_recovery``) injects a transient host
+failure into a warm deployment and times ``deployment.recover()`` — drain,
+epoch bump, §6.1.1 re-proof, replay of the lost chunks — so the elastic
+control plane's cost sits next to the warm batch it protects
+(``vs_warm`` in the derived string; expected within ~10× of one warm
+batch on CPU CI).
 
-Every mode is gated on bit-identical results vs the sequential oracle.
+Every mode is gated on bit-identical results vs the sequential oracle —
+including the recovered batch.
 
     PYTHONPATH=src python -m benchmarks.cluster --smoke   # BENCH_cluster.json
 """
@@ -39,6 +46,46 @@ import time
 from repro.launch.cluster import make_mandelbrot as make_farm
 
 TRANSPORTS = ("inprocess", "pipe", "shm", "jaxmesh")
+
+# per-process counter behind make_recovery_farm's one-shot failure: spawned
+# hosts each import this module fresh, so the trip fires once per deployment
+_TRIP = {"n": 0}
+
+
+def make_recovery_farm(bands: int, height: int, width: int, iters: int,
+                       trip_at: int):
+    """The Mandelbrot farm with a *transiently* failing host-side collector:
+    its ``trip_at``-th item ever (counted per process) raises once, then the
+    host is healthy again — the benchmarkable slice of a host failure (a
+    SIGKILLed host adds respawn + recompile on top; see the elastic-smoke
+    CI step for that path)."""
+    import jax.numpy as jnp  # noqa: F401  (keeps parity with make_farm)
+    import numpy as np
+    from repro.core import DataParallelCollect
+    from repro.kernels.mandelbrot import ref
+
+    band_h = height // bands
+    delta = 3.0 / width
+
+    def create(i):
+        return jnp.asarray(i * band_h, jnp.int32)
+
+    def render(row0):
+        return ref.mandelbrot(band_h, width, x0=-2.2,
+                              y0=-1.15 + delta * row0, pixel_delta=delta,
+                              max_iterations=iters)
+
+    def collector(acc, cnt):
+        _TRIP["n"] += 1
+        if _TRIP["n"] == trip_at:
+            raise RuntimeError("injected transient host failure "
+                               f"(item {trip_at})")
+        return acc + int(np.sum(np.asarray(cnt)))
+
+    return DataParallelCollect(create=create, function=render,
+                               collector=collector, init=0,
+                               workers=bands, jit_combine=False,
+                               name="mandelbrot-recovery")
 
 
 def _wall(fn, repeats: int = 2) -> float:
@@ -64,8 +111,8 @@ def _caps(out) -> str:
 
 def run(*, smoke: bool = False, hosts: int = 2,
         warm_batches: int = 3) -> list:
-    from repro.cluster import (ClusterDeployment, check_refinement,
-                               partition, run_cluster)
+    from repro.cluster import (ClusterDeployment, ClusterError,
+                               check_refinement, partition, run_cluster)
     from repro.core import build, run_sequential
 
     warm_batches = max(warm_batches, 1)  # the steady row needs >= 1 warm run
@@ -130,6 +177,41 @@ def run(*, smoke: bool = False, hosts: int = 2,
                      f"cold_vs_warm={cold / warm:.1f}x "
                      f"warm_jit_builds={builds} stalls={_stalls(wout)} "
                      f"caps={_caps(wout)}"))
+
+        # -- recovery: transient host failure on a warm deployment ---------
+        # batch 1 pays the cold bill, batch 2 is the warm reference, batch 3
+        # trips the injected failure mid-stream; recover() = drain + epoch
+        # bump + §6.1.1 re-proof + replay of the lost chunks
+        _TRIP["n"] = 0  # thread transports share this interpreter's counter
+        trip_at = instances * 2 + max(instances // 2, 1)
+        rfactory = (make_recovery_farm, fargs + (trip_at,))
+        rnet = rfactory[0](*rfactory[1])
+        with ClusterDeployment(rnet, hosts=hosts, transport=transport,
+                               microbatch_size=mb,
+                               factory=rfactory) as dep:
+            dep.run(instances=instances)
+            t0 = time.perf_counter()
+            dep.run(instances=instances)
+            rwarm = time.perf_counter() - t0
+            failed = False
+            try:
+                dep.run(instances=instances)
+            except ClusterError:
+                failed = True
+            t0 = time.perf_counter()
+            rec = dep.recover()
+            rwall = time.perf_counter() - t0
+            same = failed and bool(int(rec["collect"]) == int(seq))
+            (ev,) = dep.events
+        rows.append((f"cluster_{transport}_recovery", rwall * 1e6,
+                     f"identical={same} hosts={hosts} "
+                     f"vs_warm={rwall / rwarm:.2f}x "
+                     f"warm_us={rwarm * 1e6:.0f} epoch={rec.epoch} "
+                     f"refined={ev.refined} "
+                     f"replayed_hosts={len(ev.replay_from)} "
+                     f"requeued={sum(len(v) for v in ev.requeued.values())} "
+                     f"recovery_jit_builds="
+                     f"{sum(r.jit_builds for r in rec.reports)}"))
     return rows
 
 

@@ -89,39 +89,66 @@ def markdown() -> str:
 
 
 def bench_rows() -> list[dict]:
-    """Stream + cluster benchmark rows, one flat list (missing artifacts
-    skip silently — CI produces them; a fresh checkout may not have)."""
+    """Stream + cluster benchmark rows, one flat list.  A fresh clone has
+    no ``BENCH_*.json`` artifacts (and an interrupted benchmark may leave a
+    truncated one): those surface as explicit ``not run`` rows instead of
+    crashing the report — the table always renders, exit code 0."""
     out = []
     for fname in ("BENCH_stream.json", "BENCH_cluster.json"):
         path = os.path.join(REPO_DIR, fname)
+        suite = fname.replace("BENCH_", "").replace(".json", "")
         if not os.path.exists(path):
+            out.append({"suite": suite, "mode": "-", "name": "(not run)",
+                        "derived": f"{fname} missing — run "
+                                   f"`python -m benchmarks.{suite} "
+                                   "--smoke`"})
             continue
-        blob = json.load(open(path))
-        for r in blob.get("rows", []):
-            out.append({"suite": blob.get("benchmark", fname),
-                        "mode": blob.get("mode", "?"), **r})
+        try:
+            with open(path) as f:
+                blob = json.load(f)
+            if not isinstance(blob, dict):
+                raise ValueError("not a JSON object")
+            rows = blob.get("rows", [])
+            if not isinstance(rows, list):
+                raise ValueError("rows is not a list")
+        except (ValueError, OSError) as e:  # truncated / corrupt artifact
+            out.append({"suite": suite, "mode": "-", "name": "(not run)",
+                        "derived": f"{fname} unreadable ({e}) — rerun the "
+                                   "benchmark"})
+            continue
+        if not rows:
+            out.append({"suite": blob.get("benchmark", suite),
+                        "mode": blob.get("mode", "?"), "name": "(not run)",
+                        "derived": f"{fname} holds no rows"})
+        for r in rows:
+            if isinstance(r, dict):
+                out.append({"suite": blob.get("benchmark", suite),
+                            "mode": blob.get("mode", "?"), **r})
     return out
 
 
 def bench_markdown() -> str:
     """One table over both suites: the streaming baseline, the cold cluster
-    deployments, and the warm ``_steady`` rows whose ``derived`` strings
-    carry the cold/warm split."""
+    deployments, the warm ``_steady`` rows whose ``derived`` strings carry
+    the cold/warm split, and the ``_recovery`` rows pricing the elastic
+    control plane."""
     rows = bench_rows()
-    if not rows:
-        return "(no BENCH_*.json artifacts found — run the benchmarks first)"
     lines = ["### runtime benchmarks (stream + cluster)", "",
              "| suite | row | µs/call | derived |", "|---|---|---|---|"]
     for r in rows:
-        lines.append(f"| {r['suite']} ({r['mode']}) | {r['name']} | "
-                     f"{r['us_per_call']:.1f} | {r['derived']} |")
+        us = r.get("us_per_call")
+        us_s = f"{us:.1f}" if isinstance(us, (int, float)) else "-"
+        lines.append(f"| {r.get('suite', '?')} ({r.get('mode', '?')}) | "
+                     f"{r.get('name', '?')} | {us_s} | "
+                     f"{r.get('derived', '')} |")
     return "\n".join(lines)
 
 
 if __name__ == "__main__":
     try:
         print(markdown())
-    except FileNotFoundError as e:  # dryrun artifacts absent on CI runners
+    except (FileNotFoundError, ValueError, KeyError) as e:
+        # dryrun artifacts absent (or partial) on CI runners / fresh clones
         print(f"(skipping §Perf roofline tables: {e})")
     print()
     print(bench_markdown())

@@ -82,6 +82,12 @@ def main():
                     help="batches to stream through ONE warm deployment "
                          "(with --hosts): batch 0 pays spawn+compile, the "
                          "rest run at steady-state speed")
+    ap.add_argument("--kill-host", type=int, default=-1, metavar="N",
+                    help="elastic-recovery demo (process transports, needs "
+                         "--batches >= 3): SIGKILL host N's worker at batch "
+                         "2, let the deployment recover (respawn + epoch "
+                         "bump + replay of the lost chunks) and print the "
+                         "recovery section of the cluster report")
     ap.add_argument("--pallas", action="store_true",
                     help="use the Pallas kernel (interpret mode — slower "
                          "on CPU, exact on TPU)")
@@ -99,8 +105,8 @@ def main():
     if args.hosts:
         import time
 
-        from repro.cluster import ClusterDeployment, check_refinement, \
-            partition
+        from repro.cluster import (ClusterDeployment, ClusterError,
+                                   check_refinement, partition)
         from repro.core import netlog
         plan = partition(net, hosts=args.hosts)
         print(plan.describe())
@@ -109,14 +115,32 @@ def main():
               f"{refines}")
         if not refines:
             raise SystemExit(1)
+        if args.kill_host >= 0 and args.batches < 3:
+            args.batches = 3  # cold batch, warm batch, then the murder
         # one warm deployment serves every batch: spawn + stage compilation
         # are paid exactly once (batch 0), the rest is steady state
+        recovered = False
         with ClusterDeployment(net, plan=plan, transport=args.transport,
                                microbatch_size=max(args.bands // 4, 1),
                                factory=factory) as dep:
             for b in range(max(args.batches, 1)):
+                if b == 2 and args.kill_host >= 0 and not recovered:
+                    print(f"batch {b}: killing host {args.kill_host}'s "
+                          "worker process (SIGKILL, mid-deployment)")
+                    dep.kill_host(args.kill_host)
                 t0 = time.perf_counter()
-                out = dep.run(instances=args.bands)
+                try:
+                    out = dep.run(instances=args.bands)
+                except ClusterError:
+                    # the §8 report fired; recover() respawns the corpse,
+                    # bumps the plan epoch, re-proves the refinement and
+                    # replays exactly the lost chunks of THIS batch
+                    t0 = time.perf_counter()
+                    out = dep.recover()
+                    recovered = True
+                    print(f"batch {b}: host failure captured — recovered "
+                          f"in {(time.perf_counter() - t0) * 1e3:.1f}ms "
+                          f"(epoch {dep.epoch})")
                 wall = time.perf_counter() - t0
                 img = _assemble(out["collect"])
                 same = bool((img == seq_img).all())
@@ -128,7 +152,11 @@ def main():
                     break
         print(f"sequential == cluster({args.transport}, {args.hosts} hosts): "
               f"{bool((img == seq_img).all())}")
-        print(netlog.cluster_report(plan, out.reports))
+        print(netlog.cluster_report(dep.plan, out.reports,
+                                    events=dep.events))
+        if args.kill_host >= 0 and not (recovered and dep.epoch >= 2):
+            print("kill-host demo: no recovery happened (host survived?)")
+            raise SystemExit(1)
         if not (img == seq_img).all():
             raise SystemExit(1)
     else:

@@ -13,9 +13,11 @@ streams batch after batch through the warm hosts at near single-host
 speed; :func:`run_cluster` is the one-shot convenience on top.
 """
 
+from .control import ClusterController, RecoveryEvent
 from .deploy import ClusterDeployment
 from .partition import (PartitionPlan, abstract_partitioned_model,
-                        auto_assignment, check_refinement, partition)
+                        auto_assignment, check_redeployment,
+                        check_refinement, partition, repartition_without)
 from .runtime import (ClusterError, ClusterResult, ExecConfig, HostReport,
                       PartitionExecutor, derive_cut_capacities,
                       make_host_executor, run_cluster)
@@ -24,11 +26,12 @@ from .transport import (ChannelTransport, InProcess, JaxMesh,
                         make_transport)
 
 __all__ = [
-    "PartitionPlan", "partition", "auto_assignment",
-    "abstract_partitioned_model", "check_refinement",
+    "PartitionPlan", "partition", "auto_assignment", "repartition_without",
+    "abstract_partitioned_model", "check_refinement", "check_redeployment",
     "ChannelTransport", "InProcess", "MultiProcessPipe", "SharedMemoryRing",
     "JaxMesh", "TransportError", "make_transport",
     "PartitionExecutor", "run_cluster", "ClusterResult", "ClusterError",
-    "HostReport", "ExecConfig", "ClusterDeployment",
+    "HostReport", "ExecConfig", "ClusterDeployment", "ClusterController",
+    "RecoveryEvent",
     "derive_cut_capacities", "make_host_executor",
 ]

@@ -1,0 +1,774 @@
+"""The elastic cluster control plane: a live deployment as a mutable plan.
+
+PR 3's :class:`~repro.cluster.deploy.ClusterDeployment` froze the
+partition → transport → host wiring at ``start()`` and *poisoned* itself on
+the first host failure — the warm path died exactly when production traffic
+needed it.  This module extracts that wiring into a
+:class:`ClusterController` that owns per-host lifecycle (spawn / drain /
+restart) and an **epoch-stamped plan**, so a running deployment is a control
+plane, not a frozen artifact:
+
+* every transported record carries the plan epoch
+  (:mod:`repro.cluster.transport`); bumping the epoch on recovery makes
+  leftovers of a failed stream harmless;
+* a host whose *peer* dies stalls instead of dying: the streaming
+  executor's chunk-replay bookkeeping
+  (:class:`repro.core.stream._ReplayState`) keeps its fold state, so the
+  batch later resumes at the first lost chunk;
+* a host whose *own* code throws reports the full traceback (the paper's
+  §8 error capture), resets its run state, and parks again — warm;
+* :meth:`ClusterController.recover` drains the surviving transports
+  (requeueing undelivered chunks under the new epoch), restarts the dead
+  host's worker — or, with ``mode="rebalance"``, reuses the PR 2 planner to
+  move its processes onto survivors — re-proves the §6.1.1 refinement for
+  the new epoch's plan (:func:`repro.cluster.partition.check_redeployment`),
+  and replays **only the lost chunks** of the failed batch;
+* every recovery is recorded as a :class:`RecoveryEvent`, rendered by
+  :func:`repro.core.netlog.cluster_report`.
+
+The paper's guarantee (§6) is that a verified network terminates correctly
+even under error capture; Kerridge's Cluster Builder deploys the same
+network over whatever workstations are alive.  This is both, live: the
+network never changes, only the epoch-stamped mapping of processes to
+hosts does — and each remapping is re-proved equivalent to the original.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import queue as _queue
+import threading
+import time
+import traceback
+from typing import Any, Optional
+
+import numpy as np
+
+from repro.core.dataflow import Distribution, Kind, Network, NetworkError
+from repro.core.stream import microbatch_plan
+
+from .partition import (PartitionPlan, check_redeployment, is_shim,
+                        partition, repartition_without)
+from .runtime import (ClusterError, ClusterResult, ExecConfig, HostReport,
+                      _emit_batch, _encode_result, _signal_failure,
+                      derive_cut_capacities, make_host_executor)
+from .transport import (EOS, ChannelTransport, JaxMesh, make_transport)
+
+__all__ = ["ClusterController", "RecoveryEvent"]
+
+_SHUTDOWN = "__gpp_shutdown__"
+
+
+@dataclasses.dataclass
+class RecoveryEvent:
+    """One recovery of a live deployment (epoch N -> N+1), for the report."""
+
+    epoch_from: int
+    epoch_to: int
+    mode: str                 # "restart" | "rebalance"
+    dead: list                # hosts whose worker process died
+    erred: list               # hosts whose own code threw (host alive)
+    stalled: dict             # surviving host -> first chunk it still needs
+    restarted: list           # hosts whose worker was respawned
+    moved: dict               # process -> (old host, new host), rebalance
+    requeued: dict            # "src->dst" -> undelivered chunks requeued
+    discarded: int            # drained records thrown away
+    replay_from: dict         # host -> first chunk replayed
+    refined: Optional[bool] = None  # new epoch's plan [T=] original network
+    wall_s: float = 0.0
+
+    def describe(self) -> str:
+        bits = [f"epoch {self.epoch_from} -> {self.epoch_to} "
+                f"({self.mode}):"]
+        if self.dead:
+            bits.append(f"dead hosts {self.dead}")
+        if self.erred:
+            bits.append(f"erred hosts {self.erred}")
+        if self.stalled:
+            bits.append("stalled " + ", ".join(
+                f"host {h} at chunk {ci}"
+                for h, ci in sorted(self.stalled.items())))
+        if self.restarted:
+            bits.append(f"restarted {self.restarted}")
+        if self.moved:
+            bits.append("moved " + ", ".join(
+                f"{p}:{a}->{b}" for p, (a, b) in sorted(self.moved.items())))
+        req = sum(len(v) for v in self.requeued.values())
+        bits.append(f"requeued {req} / discarded {self.discarded} "
+                    "in-flight chunks")
+        if self.replay_from:
+            bits.append("replayed " + ", ".join(
+                f"host {h} from chunk {ci}"
+                for h, ci in sorted(self.replay_from.items())))
+        if self.refined is not None:
+            bits.append(f"refinement(epoch {self.epoch_to})="
+                        f"{self.refined}")
+        bits.append(f"wall {self.wall_s:.2f}s")
+        return "; ".join(bits)
+
+
+def _batch_items(batch) -> int:
+    import jax
+    leaves = jax.tree_util.tree_leaves(batch)
+    if not leaves:
+        raise NetworkError("run: empty batch")
+    return leaves[0].shape[0]
+
+
+def _has_real_emit(sub: Network) -> bool:
+    return any(not is_shim(e.name) for e in sub.emits())
+
+
+def _serve_host(sub, ex, plan, host, endpoint, work_q, result_q,
+                encode=False) -> None:
+    """The warm-host loop: park on the work queue, stream each batch through
+    the ONE persistent executor, report per batch.  Shared verbatim by
+    thread hosts and spawned process hosts.
+
+    A host never retires itself: a peer failure leaves it *stalled* (fold
+    state intact, batch resumable), its own failure is reported with a full
+    traceback and its run state reset — either way it parks again, warm,
+    and the controller decides what happens next.
+    """
+    while True:
+        msg = work_q.get()
+        if isinstance(msg, str) and msg == _SHUTDOWN:
+            break
+        kind, batch_id, epoch, bounds, instances, batch, start_ci = msg
+        endpoint.epoch = epoch
+        before = ex.new_traces()  # builds AND shape-driven retraces
+        try:
+            if batch is None or not _has_real_emit(sub):
+                batch = _emit_batch(sub, instances)
+            if kind == "replay" and ex.replay_state is not None:
+                out = ex.resume_partition(batch)  # only the lost chunks
+            else:
+                ex.reset_run_state()
+                out = ex.run_partition(list(bounds), batch,
+                                       start_ci=start_ci)
+            result_q.put(("ok", host, batch_id,
+                          _encode_result(out) if encode else out,
+                          (ex.stats.summary(), ex.stats.donation_summary(),
+                           ex.new_traces() - before)))
+        except Exception:
+            stats = (ex.stats.summary(), ex.stats.donation_summary(),
+                     ex.new_traces() - before)
+            if ex.replay_state is not None:
+                # a PEER died mid-stream: this host is a healthy survivor
+                # holding a resumable fold — report where it stopped
+                result_q.put(("stalled", host, batch_id,
+                              (ex.replay_state.next_ci,
+                               traceback.format_exc()), stats))
+            else:
+                # this host's own failure: capture it, reset, stay warm
+                ex.reset_run_state()
+                _signal_failure(plan, host, endpoint)
+                result_q.put(("err", host, batch_id,
+                              traceback.format_exc(), stats))
+
+
+def _process_host_entry(factory, fargs, assignment: dict, host: int,
+                        endpoint, work_q, result_q, cfg: ExecConfig) -> None:
+    """Spawned-process host main: rebuild the network from the picklable
+    factory, build the executor ONCE, then serve batches until shutdown."""
+    try:
+        net = factory(*fargs)
+        plan = partition(net, assignment=assignment)
+        ex = make_host_executor(plan, host, endpoint, cfg)
+        sub = ex.net
+    except Exception:
+        result_q.put(("err", host, None, traceback.format_exc(), None))
+        return
+    _serve_host(sub, ex, plan, host, endpoint, work_q, result_q,
+                encode=True)
+
+
+class ClusterController:
+    """Owns a deployment's live state: the epoch-stamped plan, the transport,
+    and one parked worker per host — with the lifecycle verbs
+    (:meth:`spawn_host`, :meth:`stop_host`, :meth:`restart_host`,
+    :meth:`kill_host`) and the recovery path (:meth:`recover`) that PR 3's
+    frozen wiring could not express.  :class:`~repro.cluster.deploy
+    .ClusterDeployment` is the user-facing facade over this class."""
+
+    def __init__(self, net: Network, plan: PartitionPlan, cfg: ExecConfig,
+                 transport: ChannelTransport, factory: Optional[tuple],
+                 timeout_s: float):
+        self.net = net
+        self.plan = plan
+        self.cfg = cfg
+        self.transport = transport
+        self.factory = factory
+        self.timeout_s = timeout_s
+        self.epoch = 1
+        self.events: list[RecoveryEvent] = []
+        self.capacities = derive_cut_capacities(plan, cfg)
+        self._live = plan.hosts()
+        self._started = False
+        self._transport_up = False
+        self._closed = False
+        self._batch_seq = 0
+        self._threads: dict = {}
+        self._procs: dict = {}
+        self._work_qs: dict = {}
+        self._result_q: Any = None
+        self._meshes: dict = {}       # JaxMesh: per-host submesh (stable)
+        self._host_index: dict = {}   # JaxMesh: host -> submesh slot
+        self.executors: dict = {}     # thread hosts only: live executors
+        # failure state of the last batch (drives recovery)
+        self._needs_recovery = False
+        self._dead: set = set()
+        self._erred: set = set()
+        self._stalled: dict = {}      # host -> resume chunk
+        self._last_batch: Optional[tuple] = None   # descriptor, for replay
+        self._ok_cache: dict = {}     # completed hosts' results of a failed
+        self._kept: dict = {}         # chan -> drained records to requeue
+
+    # -- lifecycle ---------------------------------------------------------
+    def start(self) -> None:
+        """Stand the deployment up (idempotent): transport FIFOs, one parked
+        worker per host, stage jits ready to compile on the first batch."""
+        if self._started:
+            return
+        if self._closed:
+            raise NetworkError("ClusterController: already closed")
+        t = self.transport
+        if t.process_hosts and self.factory is None:
+            # validate BEFORE the transport allocates anything (shm segments,
+            # queue feeder threads) — a refused start must leak nothing
+            raise NetworkError(
+                f"ClusterDeployment: the {t.name!r} transport spawns "
+                "fresh interpreters and needs factory="
+                "(picklable_callable, args) to rebuild the network in "
+                "each host process")
+        t.set_epoch(self.epoch)
+        cut_chans = [(c.src, c.dst) for c in self.plan.cut]
+        t.setup(cut_chans, self.capacities)
+        self._transport_up = True
+        try:
+            self._bind_meshes()
+            self._result_q = (t.ctx.Queue() if t.process_hosts
+                              else _queue.Queue())
+            for h in self._live:
+                self.spawn_host(h)
+        except Exception:
+            self.close()
+            raise
+        self._started = True
+
+    def _bind_meshes(self) -> None:
+        """Per-host submeshes (JaxMesh transport only) + channel binding.
+        Submesh slots are assigned once and survive recovery: a rebalance
+        never re-splits the devices under a surviving host's compiled jits."""
+        t, plan = self.transport, self.plan
+        self._meshes = {h: None for h in self._live}
+        if not isinstance(t, JaxMesh):
+            return
+        import jax
+        if not self._host_index:
+            self._host_index = {h: i for i, h in enumerate(self._live)}
+            self._split = t.device_split(len(self._live))
+        self._meshes = {h: jax.sharding.Mesh(
+            np.asarray([self._split[self._host_index[h]]]), ("host",))
+            for h in self._live}
+        folded = [(c.src, c.dst) for c in plan.cut
+                  if plan.net.procs[c.dst].kind in (Kind.WORKER,
+                                                    Kind.ENGINE)]
+        t.bind([(c.src, c.dst) for c in plan.cut],
+               {(c.src, c.dst): self._host_index[plan.assignment[c.dst]]
+                for c in plan.cut},
+               len(self._host_index), folded=folded)
+
+    def spawn_host(self, h: int) -> None:
+        """Park one warm worker for host ``h``: a daemon thread holding a
+        live executor, or a spawned OS process that builds its own."""
+        if h not in self._work_qs:
+            self._work_qs[h] = (self.transport.ctx.Queue()
+                                if self.transport.process_hosts
+                                else _queue.Queue())
+        if self.transport.process_hosts:
+            p = self.transport.ctx.Process(
+                target=_process_host_entry,
+                args=(self.factory[0], tuple(self.factory[1]),
+                      self.plan.assignment, h, self.transport.endpoint(h),
+                      self._work_qs[h], self._result_q, self.cfg),
+                name=f"gpp-host-{h}", daemon=True)
+            self._procs[h] = p
+            p.start()
+            return
+
+        def _one():
+            endpoint = self.transport.endpoint(h)
+            try:
+                ex = make_host_executor(self.plan, h, endpoint, self.cfg,
+                                        mesh=self._meshes.get(h))
+                self.executors[h] = ex
+            except Exception:
+                self._result_q.put(("err", h, None,
+                                    traceback.format_exc(), None))
+                return
+            _serve_host(ex.net, ex, self.plan, h, endpoint,
+                        self._work_qs[h], self._result_q)
+
+        th = threading.Thread(target=_one, daemon=True,
+                              name=f"gpp-host-{h}")
+        self._threads[h] = th
+        th.start()
+
+    def stop_host(self, h: int, *, kill: bool = False) -> None:
+        """Retire host ``h``'s worker: graceful shutdown (drain the park
+        queue, join), or ``kill=True`` for process hosts (SIGKILL)."""
+        p = self._procs.pop(h, None)
+        if p is not None:
+            if kill and p.is_alive():
+                p.kill()
+                p.join(timeout=10.0)
+            else:
+                self._drain_work_q(h)
+                try:
+                    self._work_qs[h].put(_SHUTDOWN, timeout=1.0)
+                except Exception:
+                    pass
+                p.join(timeout=10.0)
+                if p.is_alive():
+                    p.terminate()
+            return
+        th = self._threads.pop(h, None)
+        if th is not None:
+            if kill:
+                raise NetworkError(
+                    "stop_host: thread hosts cannot be killed — only "
+                    "process transports (pipe/shm) simulate host death")
+            self._drain_work_q(h)
+            try:
+                self._work_qs[h].put(_SHUTDOWN, timeout=1.0)
+            except Exception:
+                pass
+            th.join(timeout=5.0)
+            self.executors.pop(h, None)
+
+    def restart_host(self, h: int) -> None:
+        """Respawn host ``h``'s worker against the (possibly still warm)
+        transport: the plan is unchanged, only the worker is fresh."""
+        p = self._procs.pop(h, None)
+        if p is not None:
+            if p.is_alive():
+                p.terminate()
+            p.join(timeout=10.0)
+        th = self._threads.pop(h, None)
+        if th is not None and th.is_alive():
+            try:
+                self._work_qs[h].put(_SHUTDOWN, timeout=1.0)
+            except Exception:
+                pass
+            th.join(timeout=5.0)
+        self.executors.pop(h, None)
+        if self.transport.process_hosts:
+            # a SIGKILLed worker parked on its queue died HOLDING the
+            # queue's reader lock — the corpse's queue is unreadable
+            # forever, so the respawned worker gets a fresh one (only the
+            # controller writes it; pending messages were stale anyway)
+            self._work_qs.pop(h, None)
+        else:
+            self._drain_work_q(h)
+        self.spawn_host(h)
+
+    def kill_host(self, h: int) -> None:
+        """Fault injection: SIGKILL host ``h``'s worker process mid-flight
+        (no cleanup, no goodbye — the honest failure mode)."""
+        p = self._procs.get(h)
+        if p is None:
+            raise NetworkError(
+                "kill_host: only process transports (pipe/shm) have a "
+                "worker process to kill; thread hosts share this "
+                "interpreter")
+        p.kill()
+
+    def _drain_work_q(self, h: int) -> None:
+        q = self._work_qs.get(h)
+        while q is not None:
+            try:
+                q.get_nowait()
+            except Exception:
+                break
+
+    def close(self) -> None:
+        """Shut the workers down and release the transport (idempotent;
+        safe to call after a failed start — whatever came up goes down)."""
+        if self._closed:
+            return
+        self._closed = True
+        for q in self._work_qs.values():
+            try:
+                q.put(_SHUTDOWN, timeout=1.0)
+            except Exception:
+                pass
+        for th in self._threads.values():
+            th.join(timeout=5.0)
+        for p in self._procs.values():
+            p.join(timeout=10.0)
+            if p.is_alive():
+                p.terminate()
+        if self._transport_up:
+            self.transport.close()
+
+    # -- batch execution ---------------------------------------------------
+    def run_batch(self, instances: Optional[int] = None, *,
+                  batch=None) -> ClusterResult:
+        """Stream one batch through the warm deployment; on a host failure
+        raise :class:`ClusterError` and remember everything :meth:`recover`
+        needs (who died, who stalled where, the batch descriptor)."""
+        if self._closed:
+            raise NetworkError("ClusterDeployment: already closed")
+        self.start()
+        if self._needs_recovery:
+            # a previous batch failed and the caller moved on: recover the
+            # deployment (no replay) so this fresh batch runs clean
+            self.recover(replay=False)
+        if batch is not None:
+            instances = _batch_items(batch)
+        if instances is None:
+            raise NetworkError("run: need instances= or batch=")
+        bounds = microbatch_plan(instances, self.cfg.microbatch_size)
+        batch_id = self._batch_seq
+        self._batch_seq += 1
+        # an explicit batch feeds the real Emit only — don't pickle it
+        # through every host's work queue when one host owns the Emit
+        emit_hosts = {self.plan.assignment[e.name]
+                      for e in self.net.emits()}
+        for h in self._live:
+            self._work_qs[h].put(
+                ("batch", batch_id, self.epoch, bounds, instances,
+                 batch if h in emit_hosts else None, 0))
+        reports = self._fresh_reports()
+        results = self._await_results(batch_id, reports, set(self._live))
+        return self._finish_batch(batch_id, bounds, instances, batch,
+                                  reports, results)
+
+    def _fresh_reports(self) -> dict:
+        plan = self.plan
+        return {h: HostReport(
+            host=h, procs=plan.procs_of(h), epoch=self.epoch,
+            capacities={f"{c.src}->{c.dst}":
+                        self.capacities[(c.src, c.dst)]
+                        for c in plan.ingress_of(h) + plan.egress_of(h)})
+            for h in self._live}
+
+    def _finish_batch(self, batch_id, bounds, instances, batch,
+                      reports: dict, results: dict) -> ClusterResult:
+        report_list = [reports[h] for h in self._live]
+        if not all(r.ok for r in report_list):
+            self._needs_recovery = True
+            self._last_batch = (batch_id, bounds, instances, batch)
+            self._ok_cache = results
+            from repro.core import netlog
+            raise ClusterError(
+                netlog.cluster_report(self.plan, report_list,
+                                      events=self.events),
+                report_list)
+        merged = ClusterResult()
+        for h in self._live:
+            merged.update(results[h])
+        merged.reports = report_list
+        merged.epoch = self.epoch
+        return merged
+
+    def _await_results(self, batch_id: int, reports: dict,
+                       pending: set) -> dict:
+        """One result per pending host, within one shared wall clock.
+
+        A host process that dies without reporting (kill, segfault, OOM) is
+        detected after two empty polls of grace; the controller then speaks
+        for the corpse — EOS down its egress channels so blocked consumers
+        stall (resumably) instead of hanging, its ingress drained so blocked
+        producers finish — which quiesces the whole deployment far inside
+        the transport's own 120s timeout."""
+        results: dict = {}
+        deadline = time.monotonic() + self.timeout_s
+        dead_strikes: dict = {}
+        failed_hosts: set = set()
+        while pending and time.monotonic() < deadline:
+            try:
+                status, h, bid, payload, stats = self._result_q.get(
+                    timeout=1.0)
+            except _queue.Empty:
+                for h in sorted(pending):
+                    p = self._procs.get(h)
+                    if p is not None and not p.is_alive():
+                        dead_strikes[h] = dead_strikes.get(h, 0) + 1
+                        if dead_strikes[h] >= 2:
+                            reports[h].error = (
+                                f"host process died (exitcode {p.exitcode})"
+                                " without reporting")
+                            self._dead.add(h)
+                            failed_hosts.add(h)
+                            pending.discard(h)
+                self._quiesce(failed_hosts)
+                continue
+            if h not in pending:
+                continue
+            if stats is not None:
+                (reports[h].stats_summary, reports[h].donation_summary,
+                 reports[h].jit_builds) = stats
+            if status == "ok":
+                if bid != batch_id:
+                    continue  # stale success from an abandoned batch
+                results[h] = payload
+                reports[h].ok = True
+            elif status == "stalled":
+                resume_ci, tb = payload
+                reports[h].stalled = True
+                reports[h].resume_ci = resume_ci
+                reports[h].error = tb
+                if bid == batch_id:
+                    self._stalled[h] = resume_ci
+                failed_hosts.add(h)
+                self._quiesce(failed_hosts)
+            else:  # errors count whatever batch they were raised on
+                reports[h].error = payload
+                self._erred.add(h)
+                failed_hosts.add(h)
+                self._quiesce(failed_hosts)
+            pending.discard(h)
+        for h in pending:
+            reports[h].error = f"no result within {self.timeout_s}s"
+            self._erred.add(h)
+        return results
+
+    def _quiesce(self, failed_hosts: set) -> None:
+        """Stop the failure from hanging its neighbours: EOS down each
+        failed host's egress (consumers stall resumably), and drain each
+        failed host's ingress (producers unblock and finish) — keeping
+        records bound for *stalled* survivors for post-recovery requeue."""
+        if not failed_hosts:
+            return
+        plan, t = self.plan, self.transport
+        for h in failed_hosts:
+            for c in plan.egress_of(h):
+                t.inject_eos((c.src, c.dst))
+        drain_chans = [(c.src, c.dst) for h in failed_hosts
+                       for c in plan.ingress_of(h)]
+        keep = {(c.src, c.dst) for c in plan.cut
+                if plan.assignment[c.dst] in self._stalled}
+        if drain_chans:
+            for chan, (kept, _) in t.drain(drain_chans,
+                                           keep=keep).items():
+                if kept:
+                    self._kept.setdefault(chan, []).extend(kept)
+
+    # -- recovery ----------------------------------------------------------
+    def recover(self, mode: str = "restart",
+                replay: bool = True) -> Optional[ClusterResult]:
+        """Bring a failed deployment back without a fresh ``start()``.
+
+        ``mode="restart"`` respawns each dead host's worker against the
+        warm transport (the plan is unchanged); ``mode="rebalance"`` reuses
+        the PR 2 planner to move the failed hosts' processes onto survivors
+        (a new plan, re-proved against the original network).  Either way
+        the surviving transports are drained — undelivered chunks bound for
+        stalled survivors are requeued under the bumped epoch — and, with
+        ``replay=True``, the failed batch is replayed: stalled hosts resume
+        at their first lost chunk, everyone else re-streams only what the
+        survivors still need.  Returns the replayed batch's result (None
+        when ``replay=False`` or no batch was pending)."""
+        if mode not in ("restart", "rebalance"):
+            raise NetworkError(f"recover: unknown mode {mode!r}")
+        if not self._needs_recovery:
+            raise NetworkError("recover: nothing to recover — the last "
+                               "batch completed")
+        t0 = time.monotonic()
+        old_plan = self.plan
+        ev = RecoveryEvent(
+            epoch_from=self.epoch, epoch_to=self.epoch + 1, mode=mode,
+            dead=sorted(self._dead), erred=sorted(self._erred),
+            stalled=dict(self._stalled), restarted=[], moved={},
+            requeued={}, discarded=0, replay_from={})
+        # 1. drain what the failed stream left in the pipes (quiesce kept
+        #    partial passes; this is the full sweep)
+        keep = {(c.src, c.dst) for c in self.plan.cut
+                if self.plan.assignment[c.dst] in self._stalled}
+        for chan, (kept, dropped) in self.transport.drain(
+                keep=keep).items():
+            if kept:
+                self._kept.setdefault(chan, []).extend(kept)
+            ev.discarded += dropped
+        # 2. restart or rebalance the failed hosts
+        if mode == "rebalance" and (self._dead or self._erred):
+            self._rebalance(ev)
+        else:
+            for h in sorted(self._dead):
+                self.restart_host(h)
+                ev.restarted.append(h)
+        # 3. new epoch: stale records become invisible
+        self.epoch += 1
+        self.transport.set_epoch(self.epoch)
+        # 4. requeue undelivered chunks for the stalled survivors (at most
+        #    one FIFO's worth — the replay covers the rest).  They belong to
+        #    the FAILED batch, so they only go back when that batch is about
+        #    to be replayed; a recover(replay=False) that moves on to fresh
+        #    batches must discard them (a fresh consumer expects chunk 0)
+        requeued_map: dict = {}
+        for chan, records in sorted(self._kept.items()):
+            if (replay and self._last_batch is not None
+                    and chan in {(c.src, c.dst) for c in self.plan.cut}
+                    and self.plan.assignment[chan[1]] in self._stalled):
+                n = self.transport.requeue(chan, records)
+                requeued_map[chan] = [ci for ci, _ in records[:n]]
+                ev.requeued[f"{chan[0]}->{chan[1]}"] = requeued_map[chan]
+                ev.discarded += len(records) - n
+            else:
+                ev.discarded += len(records)
+        self._kept = {}
+        # 5. re-prove the paper's §6.1.1 refinement for the new epoch's
+        #    plan (re-deployment must still trace-refine the original net)
+        try:
+            ev.refined = check_redeployment(self.net, old_plan, self.plan)
+        except Exception:
+            ev.refined = False
+        # 6. replay only the lost chunks of the failed batch.  Snapshot and
+        #    clear the failure state first: if the replay fails TOO, the
+        #    await loop repopulates it fresh for the next recover()
+        result = None
+        pending_batch, ok_cache = self._last_batch, self._ok_cache
+        stalled = dict(self._stalled)
+        self._dead.clear()
+        self._erred.clear()
+        self._stalled = {}
+        self._last_batch = None
+        self._ok_cache = {}
+        self._needs_recovery = False
+        try:
+            if replay and pending_batch is not None:
+                result = self._replay(pending_batch, stalled, ok_cache,
+                                      requeued_map, ev)
+        finally:
+            ev.wall_s = time.monotonic() - t0
+            self.events.append(ev)
+        return result
+
+    def _rebalance(self, ev: RecoveryEvent) -> None:
+        """Reuse the planner: move the failed hosts' processes onto
+        survivors, rebuild only the workers whose partition changed."""
+        evacuate = sorted(self._dead or self._erred)
+        old_plan = self.plan
+        new_assign = repartition_without(old_plan, evacuate)
+        new_plan = partition(self.net, assignment=new_assign)
+        ev.moved = {p: (old_plan.assignment[p], new_assign[p])
+                    for p in new_assign
+                    if old_plan.assignment[p] != new_assign[p]}
+        new_caps = derive_cut_capacities(new_plan, self.cfg)
+
+        def _shape(plan, h):  # what a host's worker is wired to
+            return (tuple(plan.procs_of(h)),
+                    tuple((c.src, c.dst) for c in plan.ingress_of(h)),
+                    tuple((c.src, c.dst) for c in plan.egress_of(h)))
+
+        changed = [h for h in new_plan.hosts()
+                   if h in old_plan.hosts()
+                   and _shape(old_plan, h) != _shape(new_plan, h)]
+        dropped = [h for h in old_plan.hosts()
+                   if h not in new_plan.hosts()]
+        self.plan = new_plan
+        self.capacities = new_caps
+        self._live = new_plan.hosts()
+        self.transport.reconfigure(
+            [(c.src, c.dst) for c in new_plan.cut], new_caps)
+        self._bind_meshes()
+        for h in dropped:
+            self.stop_host(h)
+            self._work_qs.pop(h, None)
+        for h in changed:
+            # a rebuilt worker loses any stalled fold state with its old
+            # subnetwork — it replays from scratch, survivors don't
+            self._stalled.pop(h, None)
+            self.restart_host(h)
+            ev.restarted.append(h)
+        for h in sorted(set(self._dead) & set(self._live)):
+            if h not in changed:
+                self.restart_host(h)
+                ev.restarted.append(h)
+
+    def _host_stateful(self, h: int) -> bool:
+        """A host whose partition folds state across chunks (a real Collect
+        or a COMBINE reducer) cannot replay a stream tail — it must re-run
+        from chunk 0 unless it kept resumable state."""
+        for name in self.plan.procs_of(h):
+            p = self.plan.net.procs[name]
+            if p.kind is Kind.COLLECT:
+                return True
+            if (p.kind is Kind.REDUCER
+                    and p.distribution is Distribution.COMBINE):
+                return True
+        return False
+
+    def _host_order(self) -> list:
+        """Hosts in dataflow order (the host graph is acyclic by plan
+        construction)."""
+        plan = self.plan
+        hosts = plan.hosts()
+        succ = {h: set() for h in hosts}
+        indeg = {h: 0 for h in hosts}
+        for c in plan.cut:
+            a, b = plan.assignment[c.src], plan.assignment[c.dst]
+            if b not in succ[a]:
+                succ[a].add(b)
+                indeg[b] += 1
+        order, ready = [], sorted(h for h in hosts if indeg[h] == 0)
+        while ready:
+            h = ready.pop(0)
+            order.append(h)
+            for m in sorted(succ[h]):
+                indeg[m] -= 1
+                if indeg[m] == 0:
+                    ready.append(m)
+        return order
+
+    def _replay(self, pending_batch, stalled: dict, ok_cache: dict,
+                requeued_map: dict, ev: RecoveryEvent) -> ClusterResult:
+        """Replay the failed batch: stalled hosts resume their saved fold,
+        everyone else streams from the first chunk some consumer still
+        needs (0 for stateful partitions), hosts nobody needs sit out."""
+        batch_id, bounds, instances, batch = pending_batch
+        n = len(bounds)
+        plan = self.plan
+        # chan -> first ci NOT covered by the requeued undelivered chunks
+        requeued_next = {chan: max(cis) + 1
+                         for chan, cis in requeued_map.items() if cis}
+        from_ci: dict = {}
+        for h in reversed(self._host_order()):
+            if h in stalled:
+                from_ci[h] = stalled[h]
+                continue
+            if self._host_stateful(h):
+                from_ci[h] = 0
+                continue
+            needs = []
+            for c in plan.egress_of(h):
+                chan = (c.src, c.dst)
+                dst_h = plan.assignment[c.dst]
+                need = from_ci.get(dst_h, 0)
+                if dst_h in stalled:
+                    need = max(need, requeued_next.get(chan, 0))
+                needs.append(need)
+            from_ci[h] = min(needs) if needs else n
+        participants = [
+            h for h in self._live
+            if h in stalled or from_ci[h] < n
+            or h not in ok_cache]  # hosts with no usable result rerun
+        emit_hosts = {plan.assignment[e.name] for e in self.net.emits()}
+        for h in participants:
+            start = from_ci[h] if h not in stalled else 0
+            ev.replay_from[h] = stalled[h] if h in stalled else start
+            self._work_qs[h].put(
+                ("replay", batch_id, self.epoch, bounds, instances,
+                 batch if h in emit_hosts else None, start))
+        reports = self._fresh_reports()
+        results = self._await_results(batch_id, reports, set(participants))
+        for h in self._live:  # completed hosts' results are reused verbatim
+            if h not in results and h in ok_cache:
+                results[h] = ok_cache[h]
+                reports[h].ok = True
+                reports[h].stats_summary = ("(reused: completed before "
+                                            "the failure)")
+        return self._finish_batch(batch_id, bounds, instances, batch,
+                                  reports, results)

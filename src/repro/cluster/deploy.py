@@ -21,91 +21,32 @@ then feeds it work; :class:`ClusterDeployment` is that steady-state path:
 * :meth:`close` (or the context manager exit) shuts the workers down and
   releases the transport.
 
-Failure semantics: a host that throws signals EOS down its cut channels so
-its peers fail fast, the failing batch raises
+This class is the user-facing facade over the **elastic control plane**
+(:class:`repro.cluster.control.ClusterController`, PR 4).  Failure
+semantics changed accordingly: a host failure mid-batch still raises
 :class:`~repro.cluster.runtime.ClusterError` carrying the §8-style cluster
-report, and the deployment is *poisoned* — transport FIFOs may hold
-partial streams — so further :meth:`run` calls are refused; stand up a
-fresh deployment (the paper's error-capture story: report precisely, never
-limp on).
+report (report precisely, never limp on), but the deployment is no longer
+poisoned.  :meth:`recover` drains the surviving transports, restarts the
+dead host's worker (or rebalances its processes onto survivors), bumps the
+plan epoch, re-proves the §6.1.1 refinement for the new plan, and replays
+only the lost chunks of the failed batch — returning its completed,
+oracle-identical result.  A plain :meth:`run` after a failure recovers
+automatically (without replaying the failed batch) and streams the new
+batch through the repaired deployment.
 """
 
 from __future__ import annotations
 
-import queue as _queue
-import threading
-import time
-import traceback
-from typing import Any, Optional
+from typing import Optional
 
-import numpy as np
+from repro.core.dataflow import Network, NetworkError
 
-from repro.core.dataflow import Kind, Network, NetworkError
-from repro.core.stream import microbatch_plan
-
-from .partition import PartitionPlan, is_shim, partition
-from .runtime import (ClusterError, ClusterResult, ExecConfig, HostReport,
-                      _emit_batch, _encode_result, _signal_failure,
-                      derive_cut_capacities, make_host_executor)
-from .transport import ChannelTransport, JaxMesh, make_transport
+from .control import ClusterController
+from .partition import PartitionPlan, partition
+from .runtime import ClusterResult, ExecConfig
+from .transport import ChannelTransport, make_transport
 
 __all__ = ["ClusterDeployment"]
-
-_SHUTDOWN = "__gpp_shutdown__"
-
-
-def _batch_items(batch) -> int:
-    import jax
-    leaves = jax.tree_util.tree_leaves(batch)
-    if not leaves:
-        raise NetworkError("run: empty batch")
-    return leaves[0].shape[0]
-
-
-def _has_real_emit(sub: Network) -> bool:
-    return any(not is_shim(e.name) for e in sub.emits())
-
-
-def _serve_batches(sub, ex, plan, host, endpoint, work_q, result_q,
-                   encode=False) -> None:
-    """The warm-host loop: park on the work queue, stream each batch through
-    the ONE persistent executor, report per batch.  Shared verbatim by
-    thread hosts and spawned process hosts."""
-    while True:
-        msg = work_q.get()
-        if isinstance(msg, str) and msg == _SHUTDOWN:
-            break
-        batch_id, bounds, instances, batch = msg
-        try:
-            if batch is None or not _has_real_emit(sub):
-                batch = _emit_batch(sub, instances)
-            before = ex.new_traces()  # builds AND shape-driven retraces
-            out = ex.run_partition(list(bounds), batch)
-            result_q.put(("ok", host, batch_id,
-                          _encode_result(out) if encode else out,
-                          (ex.stats.summary(), ex.stats.donation_summary(),
-                           ex.new_traces() - before)))
-        except Exception:
-            _signal_failure(plan, host, endpoint)
-            result_q.put(("err", host, batch_id,
-                          traceback.format_exc(), None))
-            break  # transport state is unknown now: this host retires
-
-
-def _process_host_entry(factory, fargs, assignment: dict, host: int,
-                        endpoint, work_q, result_q, cfg: ExecConfig) -> None:
-    """Spawned-process host main: rebuild the network from the picklable
-    factory, build the executor ONCE, then serve batches until shutdown."""
-    try:
-        net = factory(*fargs)
-        plan = partition(net, assignment=assignment)
-        ex = make_host_executor(plan, host, endpoint, cfg)
-        sub = ex.net
-    except Exception:
-        result_q.put(("err", host, None, traceback.format_exc(), None))
-        return
-    _serve_batches(sub, ex, plan, host, endpoint, work_q, result_q,
-                   encode=True)
 
 
 class ClusterDeployment:
@@ -126,6 +67,12 @@ class ClusterDeployment:
     :class:`~repro.cluster.runtime.HostReport`\\ s carry streaming telemetry,
     the chosen cut-channel capacities, and the number of stage jits built
     during that batch (0 once warm).
+
+    Elasticity: a batch that loses a host raises ``ClusterError``; call
+    :meth:`recover` to repair the deployment *and* obtain the failed
+    batch's completed result (the lost chunks are replayed through the
+    restarted or rebalanced plan), or just :meth:`run` the next batch —
+    the deployment recovers itself first.
     """
 
     def __init__(self, net: Optional[Network] = None, *,
@@ -147,27 +94,52 @@ class ClusterDeployment:
                 raise NetworkError("ClusterDeployment: need hosts= or plan=")
             plan = partition(net, hosts=hosts)
         self.net = net
-        self.plan = plan
-        self.cfg = ExecConfig(microbatch_size, max_in_flight, lanes, fuse)
-        self.transport: ChannelTransport = (
-            make_transport(transport) if isinstance(transport, str)
-            else transport)
-        self.factory = factory
-        self.timeout_s = timeout_s
-        # chosen FIFO depth per cut channel (explicit capacity or derived
-        # from the consumer executor's depth/lanes) — also in HostReports
-        self.capacities = derive_cut_capacities(self.plan, self.cfg)
-        self._live = self.plan.hosts()
-        self._started = False
-        self._transport_up = False  # setup() ran: close() must release it
-        self._closed = False
-        self._failed = False
-        self._batch_seq = 0
-        self._threads: dict = {}
-        self._procs: dict = {}
-        self._work_qs: dict = {}
-        self._result_q: Any = None
-        self.executors: dict = {}  # thread hosts only: live executors
+        cfg = ExecConfig(microbatch_size, max_in_flight, lanes, fuse)
+        t: ChannelTransport = (make_transport(transport)
+                               if isinstance(transport, str) else transport)
+        self.controller = ClusterController(net, plan, cfg, t, factory,
+                                            timeout_s)
+
+    # -- the control plane, surfaced ---------------------------------------
+    @property
+    def plan(self) -> PartitionPlan:
+        """The CURRENT plan (rebalancing swaps it; see :attr:`epoch`)."""
+        return self.controller.plan
+
+    @property
+    def capacities(self) -> dict:
+        return self.controller.capacities
+
+    @property
+    def transport(self) -> ChannelTransport:
+        return self.controller.transport
+
+    @property
+    def executors(self) -> dict:
+        """Thread hosts only: the live per-host executors."""
+        return self.controller.executors
+
+    @property
+    def epoch(self) -> int:
+        """Plan epoch: 1 at start(), +1 per recovery."""
+        return self.controller.epoch
+
+    @property
+    def events(self) -> list:
+        """:class:`RecoveryEvent` per recovery, oldest first."""
+        return self.controller.events
+
+    @property
+    def cfg(self) -> ExecConfig:
+        return self.controller.cfg
+
+    @property
+    def factory(self) -> Optional[tuple]:
+        return self.controller.factory
+
+    @property
+    def timeout_s(self) -> float:
+        return self.controller.timeout_s
 
     # -- lifecycle ---------------------------------------------------------
     def __enter__(self) -> "ClusterDeployment":
@@ -180,111 +152,23 @@ class ClusterDeployment:
     def start(self) -> None:
         """Stand the deployment up (idempotent): transport FIFOs, one parked
         worker per host, stage jits ready to compile on the first batch."""
-        if self._started:
-            return
-        if self._closed:
-            raise NetworkError("ClusterDeployment: already closed")
-        t = self.transport
-        if t.process_hosts and self.factory is None:
-            # validate BEFORE the transport allocates anything (shm segments,
-            # queue feeder threads) — a refused start must leak nothing
-            raise NetworkError(
-                f"ClusterDeployment: the {t.name!r} transport spawns "
-                "fresh interpreters and needs factory="
-                "(picklable_callable, args) to rebuild the network in "
-                "each host process")
-        cut_chans = [(c.src, c.dst) for c in self.plan.cut]
-        t.setup(cut_chans, self.capacities)
-        self._transport_up = True
-        try:
-            if t.process_hosts:
-                self._start_process_hosts()
-            else:
-                self._start_thread_hosts()
-        except Exception:
-            self.close()
-            raise
-        self._started = True
-
-    def _host_meshes(self) -> dict:
-        """Per-host submeshes (JaxMesh transport only) + channel binding."""
-        t, plan, live = self.transport, self.plan, self._live
-        meshes = {h: None for h in live}
-        if isinstance(t, JaxMesh):
-            import jax
-            split = t.device_split(len(live))
-            # live host ids need not be contiguous (empty hosts drop out of
-            # the plan) — index submeshes by position in the live list
-            host_index = {h: i for i, h in enumerate(live)}
-            meshes = {h: jax.sharding.Mesh(
-                np.asarray([split[host_index[h]]]), ("host",))
-                for h in live}
-            folded = [(c.src, c.dst) for c in plan.cut
-                      if plan.net.procs[c.dst].kind in (Kind.WORKER,
-                                                        Kind.ENGINE)]
-            t.bind([(c.src, c.dst) for c in plan.cut],
-                   {(c.src, c.dst): host_index[plan.assignment[c.dst]]
-                    for c in plan.cut},
-                   len(live), folded=folded)
-        return meshes
-
-    def _start_thread_hosts(self) -> None:
-        meshes = self._host_meshes()
-        self._result_q = _queue.Queue()
-
-        def _one(h):
-            endpoint = self.transport.endpoint(h)
-            try:
-                ex = make_host_executor(self.plan, h, endpoint, self.cfg,
-                                        mesh=meshes[h])
-                self.executors[h] = ex
-            except Exception:
-                self._result_q.put(("err", h, None,
-                                    traceback.format_exc(), None))
-                return
-            _serve_batches(ex.net, ex, self.plan, h, endpoint,
-                           self._work_qs[h], self._result_q)
-
-        for h in self._live:
-            self._work_qs[h] = _queue.Queue()
-            th = threading.Thread(target=_one, args=(h,), daemon=True,
-                                  name=f"gpp-host-{h}")
-            self._threads[h] = th
-            th.start()
-
-    def _start_process_hosts(self) -> None:
-        ctx = self.transport.ctx
-        self._result_q = ctx.Queue()
-        for h in self._live:
-            self._work_qs[h] = ctx.Queue()
-            p = ctx.Process(
-                target=_process_host_entry,
-                args=(self.factory[0], tuple(self.factory[1]),
-                      self.plan.assignment, h, self.transport.endpoint(h),
-                      self._work_qs[h], self._result_q, self.cfg),
-                name=f"gpp-host-{h}", daemon=True)
-            self._procs[h] = p
-            p.start()
+        self.controller.start()
 
     def close(self) -> None:
         """Shut the workers down and release the transport (idempotent;
         safe to call after a failed start — whatever came up goes down)."""
-        if self._closed:
-            return
-        self._closed = True
-        for q in self._work_qs.values():
-            try:
-                q.put(_SHUTDOWN, timeout=1.0)
-            except Exception:
-                pass
-        for th in self._threads.values():
-            th.join(timeout=5.0)
-        for p in self._procs.values():
-            p.join(timeout=10.0)
-            if p.is_alive():
-                p.terminate()
-        if self._transport_up:
-            self.transport.close()
+        self.controller.close()
+
+    def kill_host(self, host: int) -> None:
+        """Fault injection (process transports): SIGKILL one host's worker
+        mid-flight.  The next batch detects the corpse, quiesces the
+        survivors resumably, and raises ``ClusterError``; :meth:`recover`
+        brings the deployment back."""
+        self.controller.kill_host(host)
+
+    def restart_host(self, host: int) -> None:
+        """Respawn one host's worker against the warm transport."""
+        self.controller.restart_host(host)
 
     # -- execution ---------------------------------------------------------
     def run(self, instances: Optional[int] = None, *,
@@ -294,90 +178,17 @@ class ClusterDeployment:
         Provide ``instances`` (each host's real Emit materialises its own
         items, exactly like ``run_cluster``) or an explicit ``batch`` pytree
         for the network's Emit.  Returns the merged Collect dict with fresh
-        per-host reports; raises :class:`ClusterError` on any host failure,
-        after which this deployment refuses further batches.
+        per-host reports; raises :class:`ClusterError` on any host failure.
+        After a failure the deployment is NOT poisoned: :meth:`recover`
+        replays the failed batch, or the next :meth:`run` auto-recovers and
+        moves on.
         """
-        if self._failed:
-            raise NetworkError(
-                "ClusterDeployment: a previous batch failed and the "
-                "transport state is unknown — create a fresh deployment")
-        if self._closed:
-            raise NetworkError("ClusterDeployment: already closed")
-        self.start()
-        if batch is not None:
-            instances = _batch_items(batch)
-        if instances is None:
-            raise NetworkError("run: need instances= or batch=")
-        bounds = microbatch_plan(instances, self.cfg.microbatch_size)
-        batch_id = self._batch_seq
-        self._batch_seq += 1
-        plan = self.plan
-        reports = {h: HostReport(
-            host=h, procs=plan.procs_of(h),
-            capacities={f"{c.src}->{c.dst}":
-                        self.capacities[(c.src, c.dst)]
-                        for c in plan.ingress_of(h) + plan.egress_of(h)})
-            for h in self._live}
-        # an explicit batch feeds the real Emit only — don't pickle it
-        # through every host's work queue when one host owns the Emit
-        emit_hosts = {plan.assignment[e.name] for e in self.net.emits()}
-        for h in self._live:
-            self._work_qs[h].put((batch_id, bounds, instances,
-                                  batch if h in emit_hosts else None))
+        return self.controller.run_batch(instances, batch=batch)
 
-        results = self._await_results(batch_id, reports)
-
-        report_list = [reports[h] for h in self._live]
-        if not all(r.ok for r in report_list):
-            self._failed = True
-            from repro.core import netlog
-            raise ClusterError(netlog.cluster_report(plan, report_list),
-                               report_list)
-        merged = ClusterResult()
-        for h in self._live:
-            merged.update(results[h])
-        merged.reports = report_list
-        return merged
-
-    def _await_results(self, batch_id: int, reports: dict) -> dict:
-        """One result per live host, within one shared wall clock; a host
-        process that dies without reporting (segfault, OOM kill) is detected
-        after two empty polls of grace so a result posted just before exit
-        still drains through the queue feeder."""
-        results: dict = {}
-        deadline = time.monotonic() + self.timeout_s
-        pending = set(self._live)
-        dead_strikes: dict = {}
-        while pending and time.monotonic() < deadline:
-            try:
-                status, h, bid, payload, stats = self._result_q.get(
-                    timeout=1.0)
-            except _queue.Empty:
-                for h in sorted(pending):
-                    p = self._procs.get(h)
-                    if p is not None and not p.is_alive():
-                        dead_strikes[h] = dead_strikes.get(h, 0) + 1
-                        if dead_strikes[h] >= 2:
-                            reports[h].error = (
-                                f"host process died (exitcode {p.exitcode}) "
-                                "without reporting")
-                            pending.discard(h)
-                continue
-            if h not in pending:
-                continue
-            if status == "ok":
-                if bid != batch_id:
-                    continue  # stale success from an abandoned batch
-                results[h] = payload
-                reports[h].ok = True
-                (reports[h].stats_summary, reports[h].donation_summary,
-                 reports[h].jit_builds) = stats
-            else:  # errors count whatever batch they were raised on
-                reports[h].error = payload
-            pending.discard(h)
-        timed_out = bool(pending)
-        for h in pending:
-            reports[h].error = f"no result within {self.timeout_s}s"
-        if timed_out:
-            self._failed = True
-        return results
+    def recover(self, mode: str = "restart") -> Optional[ClusterResult]:
+        """Repair a failed deployment and replay the failed batch's lost
+        chunks (see :meth:`ClusterController.recover`).  ``mode="restart"``
+        respawns dead workers under the unchanged plan; ``mode="rebalance"``
+        moves the failed hosts' processes onto survivors via the planner.
+        Returns the replayed batch's completed result."""
+        return self.controller.recover(mode=mode, replay=True)

@@ -45,11 +45,13 @@ __all__ = [
     "PartitionPlan",
     "partition",
     "auto_assignment",
+    "repartition_without",
     "ingress_shim",
     "egress_shim",
     "is_shim",
     "abstract_partitioned_model",
     "check_refinement",
+    "check_redeployment",
 ]
 
 _IN = "__xh_in__"
@@ -208,6 +210,58 @@ def partition(net: Network, *, hosts: Optional[int] = None,
     return plan
 
 
+def repartition_without(plan: PartitionPlan,
+                        failed_hosts) -> dict[str, int]:
+    """Rebalance a live plan around failed hosts (the elastic control
+    plane's planner reuse): every process owned by a host in
+    ``failed_hosts`` is reassigned to a surviving host, preferring the
+    nearest surviving *upstream* neighbour in dataflow order (which keeps
+    the host graph acyclic and fans unsplit), falling back to the nearest
+    downstream one, and — when no neighbour assignment validates — to the
+    always-legal single-survivor plan (the whole network on one host, no
+    cut at all).
+
+    Returns a full assignment dict; feed it back through :func:`partition`
+    so the new plan is validated and provable like any other."""
+    net = plan.net
+    failed = set(failed_hosts)
+    survivors = [h for h in plan.hosts() if h not in failed]
+    if not survivors:
+        raise NetworkError(
+            f"repartition_without: every host failed ({sorted(failed)}) — "
+            "nothing left to rebalance onto")
+    order = net.toposort()
+    # dataflow position of each host = index of its first process
+    first_pos = {h: min(order.index(p) for p in plan.procs_of(h))
+                 for h in plan.hosts()}
+
+    def _candidate(prefer_upstream: bool) -> dict[str, int]:
+        assign = dict(plan.assignment)
+        for h in sorted(failed, key=first_pos.get):
+            ups = [s for s in survivors if first_pos[s] <= first_pos[h]]
+            downs = [s for s in survivors if first_pos[s] > first_pos[h]]
+            if prefer_upstream:
+                target = max(ups, key=first_pos.get) if ups \
+                    else min(downs, key=first_pos.get)
+            else:
+                target = min(downs, key=first_pos.get) if downs \
+                    else max(ups, key=first_pos.get)
+            for p in plan.procs_of(h):
+                assign[p] = target
+        return assign
+
+    for prefer_upstream in (True, False):
+        assign = _candidate(prefer_upstream)
+        try:
+            partition(net, assignment=assign)
+            return assign
+        except NetworkError:
+            continue
+    # always legal: everything on one survivor (no cut channels)
+    lone = survivors[0]
+    return {p: lone for p in net.procs}
+
+
 def _has_cycle(nodes, edges) -> bool:
     succ: dict = {n: [] for n in nodes}
     for a, b in edges:
@@ -262,3 +316,43 @@ def check_refinement(net: Network, plan: PartitionPlan,
     part = abstract_partitioned_model(net, plan)
     return (csp.trace_equivalent(part, net, instances=instances, **kw)
             and csp.trace_equivalent(net, part, instances=instances, **kw))
+
+
+def check_redeployment(net: Network, old_plan: PartitionPlan,
+                       new_plan: PartitionPlan, instances: int = 3,
+                       **kw) -> bool:
+    """§6.1.1 lifted to *re*-deployment: when the control plane swaps plan
+    epochs under a live network, the epoch-N+1 plan must be provably as
+    good as the epoch-N one — not just "some valid plan".
+
+    Three obligations, all mechanical:
+
+    1. the new plan refines the original network in the outcome sense
+       (:func:`check_refinement` — termination + identical singleton
+       outcome on every interleaving);
+    2. the new partitioned model's *observable trace set* is contained in
+       the original network's (``net [T= model(new_plan)`` with the actual
+       traces, not just outcomes — :func:`repro.core.csp.trace_refines`),
+       so relay buffering introduces no collect-arrival ordering the
+       unpartitioned network could not exhibit;
+    3. the same containment against the *old* partitioned model, both
+       directions — epoch N and epoch N+1 are observably the same
+       deployment.
+
+    Each of the three state spaces is explored exactly once (traces
+    collected up front, containments compared on the sets): this check sits
+    inside every live recovery, whose wall time the CI recovery rows gate.
+    """
+    old_m = abstract_partitioned_model(net, old_plan, name="epochN")
+    new_m = abstract_partitioned_model(net, new_plan, name="epochN+1")
+    results = {}
+    for key, model in (("net", net), ("old", old_m), ("new", new_m)):
+        r = csp.check(model, instances, collect_traces=True, **kw)
+        if not (r.deadlock_free and r.all_paths_terminate):
+            return False
+        results[key] = r
+    return (results["net"].outcomes == results["new"].outcomes
+            and len(results["net"].outcomes) == 1
+            and results["new"].traces <= results["net"].traces
+            and results["new"].traces <= results["old"].traces
+            and results["old"].traces <= results["new"].traces)

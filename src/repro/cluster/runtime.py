@@ -84,12 +84,20 @@ class HostReport:
     # stage-jit traces recorded during THIS batch — fresh builds AND
     # shape-driven retraces both count, so 0 means genuinely warm
     jit_builds: int = 0
+    # elastic control plane: a stalled host is a SURVIVOR of a peer failure —
+    # it kept its fold state and can resume the batch at `resume_ci` once the
+    # controller recovers the peer (contrast `error`, a failure of this host)
+    stalled: bool = False
+    resume_ci: Optional[int] = None
+    epoch: int = 1  # plan epoch this report was produced under
 
 
 class ClusterResult(dict):
-    """Collect results plus per-host telemetry (``.reports``)."""
+    """Collect results plus per-host telemetry (``.reports``) and the plan
+    epoch that produced them (``.epoch``; > 1 after a recovery)."""
 
     reports: list
+    epoch: int
 
 
 class ClusterError(NetworkError):
@@ -102,7 +110,16 @@ class ClusterError(NetworkError):
 
 class PartitionExecutor(StreamExecutor):
     """StreamExecutor over one host's subnetwork: ingress Emit shims recv
-    from the transport, egress Collect shims send into it."""
+    from the transport, egress Collect shims send into it.
+
+    A peer dying mid-stream surfaces here as a :class:`TransportError` from
+    an ingress recv — *before* the chunk being assembled had any effect — so
+    the base executor's chunk-replay bookkeeping captures a resumable
+    :class:`~repro.core.stream._ReplayState`, and ingress values already
+    received for that chunk are buffered (``_ingress_buf``) so the resumed
+    run re-reads only what it never got."""
+
+    _resumable_errors = (TransportError,)
 
     def __init__(self, compiled, *, plan: PartitionPlan, host: int,
                  endpoint: ChannelTransport, microbatch_size: int,
@@ -112,6 +129,7 @@ class PartitionExecutor(StreamExecutor):
                          max_in_flight=max_in_flight, lanes=lanes, fuse=fuse)
         self.host = host
         self.ep = endpoint
+        self._ingress_buf: dict = {}  # ci -> {shim: received value}
         self.ingress = [(ingress_shim(c.src, c.dst), (c.src, c.dst))
                         for c in plan.ingress_of(host)]
         self.egress = [(egress_shim(c.src, c.dst), (c.src, c.dst))
@@ -155,7 +173,11 @@ class PartitionExecutor(StreamExecutor):
         for e in self.net.emits():
             if not is_shim(e.name):
                 chunk[e.name] = slice_microbatch(batch, lo, hi)
+        buf = self._ingress_buf.get(ci, {})
         for shim, chan in self.ingress:
+            if shim in buf:  # received before a mid-chunk interruption
+                chunk[shim] = buf[shim]
+                continue
             v = self.ep.recv(chan, ci)
             if isinstance(v, str):
                 if v == SKIP:
@@ -164,7 +186,12 @@ class PartitionExecutor(StreamExecutor):
                     raise TransportError(
                         f"channel {chan}: producer host terminated before "
                         f"chunk {ci}")
+            # buffer as we go: if a LATER ingress recv of this chunk fails,
+            # the resumed run must not re-read this channel (the producer
+            # will not resend what the FIFO already delivered)
+            self._ingress_buf.setdefault(ci, {})[shim] = v
             chunk[shim] = v
+        self._ingress_buf.pop(ci, None)  # chunk fully assembled
         return chunk
 
     def _forward_egress(self, ci: int, host_streams: dict) -> None:
@@ -175,9 +202,23 @@ class PartitionExecutor(StreamExecutor):
     def _local_collects(self) -> list:
         return [p for p in self.net.collects() if not is_shim(p.name)]
 
-    def run_partition(self, bounds: list, batch=None) -> dict:
-        """Stream ``len(bounds)`` chunks through this partition."""
-        return self._run_plan(bounds, batch)
+    def reset_run_state(self) -> None:
+        """Forget any interrupted run (the controller is starting a fresh
+        batch or a replay-from-scratch): resume state, buffered ingress and
+        COMBINE carries all go."""
+        self.replay_state = None
+        self._ingress_buf = {}
+        self._combine_carry = {}
+
+    def run_partition(self, bounds: list, batch=None, *,
+                      start_ci: int = 0) -> dict:
+        """Stream chunks ``bounds[start_ci:]`` through this partition
+        (``start_ci`` > 0: a replay of only the lost tail of a batch)."""
+        return self._run_plan(list(bounds), batch, start_ci=start_ci)
+
+    def resume_partition(self, batch=None) -> dict:
+        """Resume an interrupted batch from the saved replay state."""
+        return self.resume_plan(batch)
 
 
 # ==========================================================================

@@ -31,11 +31,24 @@ Three implementations:
 All transports carry a per-chunk SKIP marker so upstream COMBINE reducers
 (which emit nothing until their final chunk) stay chunk-aligned across the
 cut, and an EOS marker as a defensive stream terminator.
+
+Elasticity (the control plane, :mod:`repro.cluster.control`): every record
+on the wire is stamped ``(epoch, ci, payload)``.  The deployment epoch is
+bumped by the controller on every recovery, so a consumer silently discards
+records left over from a pre-recovery stream (stale epoch) and replayed
+duplicates (``ci`` below the chunk it needs) instead of tripping the
+out-of-order check — which is exactly what lets a restarted producer replay
+a stream from chunk 0 against a surviving consumer that already folded a
+prefix.  :meth:`ChannelTransport.drain` empties the FIFOs between epochs,
+optionally *requeueing* still-valid undelivered chunks (re-tagged to the new
+epoch) so a restarted host replays only the chunks that never reached the
+transport.
 """
 
 from __future__ import annotations
 
 import queue
+import time as _time
 
 import numpy as np
 
@@ -63,6 +76,7 @@ SKIP = "__gpp_skip__"  # chunk produced nothing (COMBINE still accumulating)
 EOS = "__gpp_eos__"    # defensive end-of-stream marker
 
 _RECV_TIMEOUT_S = 120.0  # a hung peer surfaces as a TransportError, not a hang
+_DRAIN_POLL_S = 0.02  # drain declares a FIFO empty after 2 misses of this
 
 
 class TransportError(NetworkError):
@@ -164,13 +178,28 @@ class ChannelTransport:
     ``chan`` keys are ``(src, dst)`` process-name pairs from the plan's cut
     list.  ``send`` blocks on a full pipe (backpressure); ``recv`` blocks on
     an empty one and raises :class:`TransportError` after a timeout.
+
+    Every record is stamped with the deployment ``epoch`` (see the module
+    docstring): ``recv`` discards stale-epoch records and replayed
+    duplicates, so post-recovery streams compose with pre-recovery leftovers
+    without protocol violations.
     """
 
     name = "abstract"
     process_hosts = False  # True: hosts are spawned OS processes
+    epoch = 1  # deployment epoch records are stamped with (controller-bumped)
 
     def setup(self, cut_channels, capacities: dict) -> None:
         raise NotImplementedError
+
+    def reconfigure(self, cut_channels, capacities: dict) -> None:
+        """Re-point the transport at a new cut (rebalance): keep the FIFO of
+        every channel still in the cut, create the missing ones, release the
+        removed ones.  Default: a full re-setup."""
+        self.setup(cut_channels, capacities)
+
+    def set_epoch(self, epoch: int) -> None:
+        self.epoch = epoch
 
     def endpoint(self, host: int):
         """The (possibly serialisable) handle a host runner uses."""
@@ -181,6 +210,36 @@ class ChannelTransport:
 
     def recv(self, chan, ci: int):
         raise NotImplementedError
+
+    def drain(self, channels=None, *, keep=frozenset()) -> dict:
+        """Empty channel FIFOs (a recovery step).  ``channels`` limits the
+        sweep (None = all).  For channels in ``keep`` the undelivered *data*
+        records are decoded and returned in FIFO order so the controller can
+        :meth:`requeue` them under the new epoch; everything else — EOS
+        markers, records of dead peers, stale streams — is discarded (shm
+        slots recycled).  Returns ``{chan: (records, n_discarded)}`` with
+        ``records = [(ci, value), ...]``."""
+        return {}
+
+    def requeue(self, chan, records) -> int:
+        """Re-send drained records on ``chan`` at the CURRENT epoch, oldest
+        first, at most one FIFO's worth (never blocks on a full pipe: the
+        producer replays whatever does not fit).  Returns the number
+        requeued — a contiguous prefix of ``records``."""
+        n = 0
+        for ci, value in records[:self._requeue_limit(chan)]:
+            self.send(chan, ci, value)
+            n += 1
+        return n
+
+    def _requeue_limit(self, chan) -> int:
+        return 0
+
+    def inject_eos(self, chan) -> bool:
+        """Controller-side out-of-band EOS (a dead producer cannot send its
+        own): non-blocking, returns False when the FIFO is full (retry on
+        the next quiesce tick)."""
+        return False
 
     def close(self) -> None:
         pass
@@ -196,9 +255,29 @@ class _QueueTransport(ChannelTransport):
         cap = capacities.get(chan, 0)
         return cap if cap > 0 else DEFAULT_CAPACITY
 
+    def _new_queue(self, chan, capacities):
+        raise NotImplementedError
+
+    def _release_queue(self, q) -> None:
+        pass
+
+    def setup(self, cut_channels, capacities) -> None:
+        for chan in cut_channels:
+            self._queues[chan] = self._new_queue(chan, capacities)
+
+    def reconfigure(self, cut_channels, capacities) -> None:
+        old = self._queues
+        self._queues = {}
+        for chan in cut_channels:
+            kept = old.pop(chan, None)
+            self._queues[chan] = (kept if kept is not None
+                                  else self._new_queue(chan, capacities))
+        for q in old.values():  # channels no longer in the cut
+            self._release_queue(q)
+
     def send(self, chan, ci: int, value) -> None:
         try:
-            self._queues[chan].put((ci, self._pack(value)),
+            self._queues[chan].put((self.epoch, ci, self._pack(value)),
                                    timeout=_RECV_TIMEOUT_S)
         except queue.Full:
             raise TransportError(
@@ -206,21 +285,70 @@ class _QueueTransport(ChannelTransport):
                 "(consumer host stalled?)") from None
 
     def recv(self, chan, ci: int):
+        deadline = _time.monotonic() + (_RECV_TIMEOUT_S if ci >= 0 else 1.0)
+        while True:
+            try:
+                ep, got_ci, value = self._queues[chan].get(
+                    timeout=max(deadline - _time.monotonic(), 0.01))
+            except queue.Empty:
+                raise TransportError(
+                    f"{self.name}: channel {chan} empty for "
+                    f"{_RECV_TIMEOUT_S}s (producer host died?)") from None
+            if ci < 0:  # draining: any record at any epoch
+                if isinstance(value, str) and value == EOS:
+                    return EOS
+                return self._unpack(value)
+            if ep < self.epoch:
+                continue  # pre-recovery leftover: silently discarded
+            if ep > self.epoch:
+                raise TransportError(
+                    f"{self.name}: channel {chan} carries epoch {ep} but "
+                    f"this endpoint is at {self.epoch} (controller out of "
+                    "sync)")
+            if isinstance(value, str) and value == EOS:
+                return EOS  # stream terminator outranks the order check (a
+                # peer failing mid-stream sends EOS out of band)
+            if got_ci < ci:
+                continue  # replayed duplicate of an already-folded chunk
+            if got_ci > ci:
+                raise TransportError(
+                    f"{self.name}: channel {chan} out of order: expected "
+                    f"chunk {ci}, got {got_ci}")
+            return self._unpack(value)
+
+    def drain(self, channels=None, *, keep=frozenset()) -> dict:
+        out = {}
+        for chan in (self._queues if channels is None else channels):
+            q = self._queues[chan]
+            records, empties, failures = [], 0, 0
+            while empties < 2 and failures < 10_000:
+                try:
+                    records.append(q.get(timeout=_DRAIN_POLL_S))
+                    empties = 0
+                except queue.Empty:
+                    empties += 1
+                except Exception:  # a peer killed mid-put can corrupt a
+                    failures += 1  # pickled record — count it lost, move on
+            kept, dropped = [], 0
+            for ep, ci, value in records:
+                if (chan in keep and ci >= 0
+                        and not (isinstance(value, str) and value == EOS)):
+                    kept.append((ci, value if isinstance(value, str)
+                                 else self._unpack(value)))
+                else:
+                    dropped += 1
+            out[chan] = (kept, dropped + failures)
+        return out
+
+    def _requeue_limit(self, chan) -> int:
+        return self._queues[chan].maxsize or DEFAULT_CAPACITY
+
+    def inject_eos(self, chan) -> bool:
         try:
-            got_ci, value = self._queues[chan].get(
-                timeout=_RECV_TIMEOUT_S if ci >= 0 else 1.0)
-        except queue.Empty:
-            raise TransportError(
-                f"{self.name}: channel {chan} empty for {_RECV_TIMEOUT_S}s "
-                "(producer host died?)") from None
-        if isinstance(value, str) and value == EOS:
-            return EOS  # stream terminator outranks the order check (a peer
-            # failing mid-stream sends EOS out of band; the caller reports it)
-        if ci >= 0 and got_ci != ci:  # ci < 0: draining, any chunk accepted
-            raise TransportError(
-                f"{self.name}: channel {chan} out of order: expected chunk "
-                f"{ci}, got {got_ci}")
-        return self._unpack(value)
+            self._queues[chan].put((self.epoch, -1, EOS), timeout=0.1)
+            return True
+        except queue.Full:
+            return False
 
     def _pack(self, value):
         return value
@@ -235,10 +363,8 @@ class InProcess(_QueueTransport):
 
     name = "inprocess"
 
-    def setup(self, cut_channels, capacities) -> None:
-        for chan in cut_channels:
-            self._queues[chan] = queue.Queue(
-                maxsize=self._capacity(capacities, chan))
+    def _new_queue(self, chan, capacities):
+        return queue.Queue(maxsize=self._capacity(capacities, chan))
 
 
 class MultiProcessPipe(_QueueTransport):
@@ -258,10 +384,14 @@ class MultiProcessPipe(_QueueTransport):
             ctx = multiprocessing.get_context("spawn")
         self.ctx = ctx
 
-    def setup(self, cut_channels, capacities) -> None:
-        for chan in cut_channels:
-            self._queues[chan] = self.ctx.Queue(
-                maxsize=self._capacity(capacities, chan))
+    def _new_queue(self, chan, capacities):
+        return self.ctx.Queue(maxsize=self._capacity(capacities, chan))
+
+    def _release_queue(self, q) -> None:
+        q.close()
+
+    def _requeue_limit(self, chan) -> int:
+        return self._queues[chan]._maxsize or DEFAULT_CAPACITY
 
     def endpoint(self, host: int):
         # mp.Queues are inheritable through Process args; ship only the dict
@@ -363,7 +493,7 @@ class _ShmOps:
     def send(self, chan, ci: int, value) -> None:
         ring = self._rings[chan]
         if isinstance(value, str):  # SKIP / EOS markers need no slot
-            self._put_header(ring, chan, (ci, ("marker", value)))
+            self._put_header(ring, chan, (self.epoch, ci, ("marker", value)))
             return
         import jax
         arrs = jax.tree_util.tree_map(_as_contig, value)
@@ -371,7 +501,8 @@ class _ShmOps:
         total = sum(a.nbytes for a in leaves)
         if total > ring.slot_bytes or any(not _rawable(a) for a in leaves):
             # graceful fallback: oversized / exotic chunks ship inline
-            self._put_header(ring, chan, (ci, ("inline", pack_raw(arrs))))
+            self._put_header(ring, chan,
+                             (self.epoch, ci, ("inline", pack_raw(arrs))))
             return
         try:
             idx = ring.free_q.get(timeout=_RECV_TIMEOUT_S)
@@ -394,7 +525,8 @@ class _ShmOps:
             return meta
 
         meta_tree = jax.tree_util.tree_map(_write, arrs)
-        self._put_header(ring, chan, (ci, ("slot", idx, meta_tree)))
+        self._put_header(ring, chan, (self.epoch, ci,
+                                      ("slot", idx, meta_tree)))
 
     def _put_header(self, ring: _ShmRing, chan, item) -> None:
         try:
@@ -404,23 +536,14 @@ class _ShmOps:
                 f"{self.name}: channel {chan} full for {_RECV_TIMEOUT_S}s "
                 "(consumer host stalled?)") from None
 
-    def recv(self, chan, ci: int):
-        ring = self._rings[chan]
-        try:
-            got_ci, header = ring.data_q.get(
-                timeout=_RECV_TIMEOUT_S if ci >= 0 else 1.0)
-        except queue.Empty:
-            raise TransportError(
-                f"{self.name}: channel {chan} empty for {_RECV_TIMEOUT_S}s "
-                "(producer host died?)") from None
-        if header[0] == "marker" and header[1] == EOS:
-            return EOS  # stream terminator outranks the order check
-        if ci >= 0 and got_ci != ci:
-            if header[0] == "slot":  # recycle before raising: the ring
-                ring.free_q.put(header[1])  # invariant is slots == capacity
-            raise TransportError(
-                f"{self.name}: channel {chan} out of order: expected chunk "
-                f"{ci}, got {got_ci}")
+    def _discard_header(self, ring: _ShmRing, header) -> None:
+        """Drop a header, recycling its slot (the ring invariant is that
+        free slots + in-flight slots == capacity)."""
+        if header[0] == "slot":
+            ring.free_q.put(header[1])
+
+    def _consume_header(self, ring: _ShmRing, header):
+        """Decode a header into its value, recycling the slot."""
         if header[0] == "marker":
             return header[1]
         if header[0] == "inline":
@@ -441,6 +564,41 @@ class _ShmOps:
         out = jax.tree_util.tree_map(_read, meta_tree)
         ring.free_q.put(idx)
         return out
+
+    def recv(self, chan, ci: int):
+        ring = self._rings[chan]
+        deadline = _time.monotonic() + (_RECV_TIMEOUT_S if ci >= 0 else 1.0)
+        while True:
+            try:
+                ep, got_ci, header = ring.data_q.get(
+                    timeout=max(deadline - _time.monotonic(), 0.01))
+            except queue.Empty:
+                raise TransportError(
+                    f"{self.name}: channel {chan} empty for "
+                    f"{_RECV_TIMEOUT_S}s (producer host died?)") from None
+            is_eos = header[0] == "marker" and header[1] == EOS
+            if ci < 0:  # draining: any record at any epoch
+                return EOS if is_eos else self._consume_header(ring, header)
+            if ep < self.epoch:
+                self._discard_header(ring, header)  # pre-recovery leftover
+                continue
+            if ep > self.epoch:
+                self._discard_header(ring, header)
+                raise TransportError(
+                    f"{self.name}: channel {chan} carries epoch {ep} but "
+                    f"this endpoint is at {self.epoch} (controller out of "
+                    "sync)")
+            if is_eos:
+                return EOS  # stream terminator outranks the order check
+            if got_ci < ci:
+                self._discard_header(ring, header)  # replayed duplicate
+                continue
+            if got_ci > ci:
+                self._discard_header(ring, header)
+                raise TransportError(
+                    f"{self.name}: channel {chan} out of order: expected "
+                    f"chunk {ci}, got {got_ci}")
+            return self._consume_header(ring, header)
 
 
 class SharedMemoryRing(_ShmOps, ChannelTransport):
@@ -470,35 +628,112 @@ class SharedMemoryRing(_ShmOps, ChannelTransport):
         self.ctx = ctx
         self.slot_bytes = slot_bytes
         self._rings: dict = {}
-        self._owned: list = []  # created segments; we unlink them
+        self._owned: dict = {}  # chan -> created segments; we unlink them
+        self._atexit_armed = False
+
+    def _make_ring(self, chan, capacities) -> _ShmRing:
+        from multiprocessing import shared_memory
+        cap = capacities.get(chan, 0) or DEFAULT_CAPACITY
+        slots = [shared_memory.SharedMemory(create=True,
+                                            size=self.slot_bytes)
+                 for _ in range(cap)]
+        self._owned[chan] = slots
+        self._attached().update({s.name: s for s in slots})
+        free_q = self.ctx.Queue()
+        for i in range(cap):
+            free_q.put(i)
+        data_q = self.ctx.Queue(maxsize=cap)
+        return _ShmRing([s.name for s in slots], self.slot_bytes,
+                        free_q, data_q)
 
     def setup(self, cut_channels, capacities) -> None:
-        from multiprocessing import shared_memory
         for chan in cut_channels:
-            cap = capacities.get(chan, 0) or DEFAULT_CAPACITY
-            slots = [shared_memory.SharedMemory(create=True,
-                                                size=self.slot_bytes)
-                     for _ in range(cap)]
-            self._owned.extend(slots)
-            self._attached().update({s.name: s for s in slots})
-            free_q = self.ctx.Queue()
-            for i in range(cap):
-                free_q.put(i)
-            data_q = self.ctx.Queue(maxsize=cap)
-            self._rings[chan] = _ShmRing([s.name for s in slots],
-                                         self.slot_bytes, free_q, data_q)
+            self._rings[chan] = self._make_ring(chan, capacities)
+        # a process that dies without a clean close() must not strand the
+        # segments: /dev/shm outlives us, so unlink from atexit as a net
+        if not self._atexit_armed:
+            import atexit
+            atexit.register(self._unlink_owned)
+            self._atexit_armed = True
 
-    def endpoint(self, host: int):
-        return _ShmEndpoint(self._rings)
+    def reconfigure(self, cut_channels, capacities) -> None:
+        keep = set(cut_channels)
+        for chan in list(self._rings):
+            if chan not in keep:
+                self._release_ring(chan)
+        for chan in cut_channels:
+            if chan not in self._rings:
+                self._rings[chan] = self._make_ring(chan, capacities)
 
-    def close(self) -> None:
-        for shm in self._owned:
+    def _release_ring(self, chan) -> None:
+        ring = self._rings.pop(chan)
+        cache = self._attached()
+        for shm in self._owned.pop(chan, ()):
+            cache.pop(shm.name, None)
             try:
                 shm.close()
                 shm.unlink()
             except Exception:
                 pass
-        self._owned = []
+        for q in (ring.free_q, ring.data_q):
+            q.close()
+
+    def drain(self, channels=None, *, keep=frozenset()) -> dict:
+        out = {}
+        for chan in (self._rings if channels is None else channels):
+            ring = self._rings[chan]
+            records, empties, failures = [], 0, 0
+            while empties < 2 and failures < 10_000:
+                try:
+                    records.append(ring.data_q.get(timeout=_DRAIN_POLL_S))
+                    empties = 0
+                except queue.Empty:
+                    empties += 1
+                except Exception:  # a peer killed mid-put can corrupt a
+                    failures += 1  # pickled header — count it lost, move on
+            kept, dropped = [], failures
+            for ep, ci, header in records:
+                is_eos = header[0] == "marker" and header[1] == EOS
+                if chan in keep and ci >= 0 and not is_eos:
+                    # decode out of the slot (recycling it): holding slots
+                    # hostage would starve the producer's free-slot ring
+                    kept.append((ci, self._consume_header(ring, header)))
+                else:
+                    self._discard_header(ring, header)
+                    dropped += 1
+            out[chan] = (kept, dropped)
+        return out
+
+    def _requeue_limit(self, chan) -> int:
+        return len(self._rings[chan].slot_names)
+
+    def inject_eos(self, chan) -> bool:
+        try:
+            self._rings[chan].data_q.put(
+                (self.epoch, -1, ("marker", EOS)), timeout=0.1)
+            return True
+        except queue.Full:
+            return False
+
+    def endpoint(self, host: int):
+        return _ShmEndpoint(self._rings)
+
+    def _unlink_owned(self) -> None:
+        for slots in self._owned.values():
+            for shm in slots:
+                try:
+                    shm.close()
+                    shm.unlink()
+                except Exception:
+                    pass
+        self._owned = {}
+
+    def close(self) -> None:
+        self._unlink_owned()
+        if self._atexit_armed:
+            import atexit
+            atexit.unregister(self._unlink_owned)
+            self._atexit_armed = False
         for ring in self._rings.values():
             for q in (ring.free_q, ring.data_q):
                 q.close()

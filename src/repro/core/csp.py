@@ -38,7 +38,8 @@ from typing import Any, Hashable, Optional
 
 from .dataflow import Distribution, Kind, Network
 
-__all__ = ["CSPModel", "ExplorationResult", "check", "trace_equivalent"]
+__all__ = ["CSPModel", "ExplorationResult", "check", "trace_equivalent",
+           "trace_refines"]
 
 UT = "UT"
 DONE = ("done",)
@@ -419,3 +420,22 @@ def trace_equivalent(net_a: Network, net_b: Network, instances: int = 3,
     if not (rb.deadlock_free and rb.all_paths_terminate):
         return False
     return ra.outcomes == rb.outcomes and len(ra.outcomes) == 1
+
+
+def trace_refines(spec: Network, impl: Network, instances: int = 3,
+                  **kw) -> bool:
+    """FDR's actual ``spec [T= impl`` on the *observable trace sets* (events
+    on channels into Collects, internals hidden): every observable trace the
+    implementation can exhibit, the specification can too.
+
+    This is strictly finer than :func:`trace_equivalent`'s outcome check —
+    it compares arrival *orderings*, not just final multisets — which is
+    what re-deployment (:func:`repro.cluster.partition.check_redeployment`)
+    needs: a swapped plan must not introduce a collect-arrival interleaving
+    the original network could never produce.  Traces compare on the
+    ``(collect, value)`` events themselves, so the two networks may have
+    entirely different internal topology (relays, shims) as long as the
+    observable behaviour is contained."""
+    rs = check(spec, instances, collect_traces=True, **kw)
+    ri = check(impl, instances, collect_traces=True, **kw)
+    return ri.traces <= rs.traces

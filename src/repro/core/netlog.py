@@ -59,29 +59,43 @@ def report(cn: CompiledNetwork) -> str:
     return topology(cn.net) + "\n\n" + timeline(cn.logs)
 
 
-def cluster_report(plan, reports) -> str:
-    """Cross-host §8 report: per-host partition, streaming telemetry, and
-    captured failures (the paper's error-capture mechanism at cluster scale).
+def cluster_report(plan, reports, events=None) -> str:
+    """Cross-host §8 report: per-host partition, streaming telemetry,
+    captured failures (the paper's error-capture mechanism at cluster
+    scale), and — when the elastic control plane has recovered the
+    deployment — one ``recovery`` line per plan-epoch swap.
 
     ``plan`` is a :class:`repro.cluster.partition.PartitionPlan`; ``reports``
-    a list of :class:`repro.cluster.runtime.HostReport`.  Pure formatting —
-    no cluster imports, so the core stays dependency-free."""
+    a list of :class:`repro.cluster.runtime.HostReport`; ``events`` an
+    optional list of :class:`repro.cluster.control.RecoveryEvent`.  Pure
+    formatting — no cluster imports, so the core stays dependency-free."""
     chosen: dict = {}  # "src->dst" -> FIFO depth actually deployed
+    epoch = 1
     for r in reports:
         chosen.update(getattr(r, "capacities", None) or {})
-    lines = [f"== cluster: {plan.net.name} over {len(reports)} host(s) =="]
+        epoch = max(epoch, getattr(r, "epoch", 1))
+    lines = [f"== cluster: {plan.net.name} over {len(reports)} host(s), "
+             f"plan epoch {epoch} =="]
     for c in plan.cut:
         cap = c.capacity or chosen.get(f"{c.src}->{c.dst}") or "default"
         lines.append(f"  channel {c.src} -> {c.dst}: host "
                      f"{plan.assignment[c.src]} -> {plan.assignment[c.dst]} "
                      f"(capacity={cap})")
     for r in sorted(reports, key=lambda r: r.host):
-        state = "ok" if r.ok else "FAILED"
+        state = "ok" if r.ok else (
+            "STALLED" if getattr(r, "stalled", False) else "FAILED")
         lines.append(f"-- host {r.host} [{state}]: {', '.join(r.procs)}")
+        if getattr(r, "stalled", False) and r.resume_ci is not None:
+            lines.append(f"   stalled: fold state intact, resumes at "
+                         f"chunk {r.resume_ci}")
         if r.stats_summary:
             lines.append(f"   {r.stats_summary}")
         if r.donation_summary:
             lines.append(f"   {r.donation_summary}")
         if r.error:
             lines.extend(f"   ! {ln}" for ln in r.error.strip().splitlines())
+    if events:
+        lines.append("-- recovery --")
+        for ev in events:
+            lines.append(f"   {ev.describe()}")
     return "\n".join(lines)

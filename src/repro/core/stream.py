@@ -207,6 +207,10 @@ class StreamStats:
     # fused-chain composition: one tuple of stage names per linear run that
     # compiled into a single per-chunk jit (empty when nothing fused)
     fused: list = dataclasses.field(default_factory=list)
+    # chunk-replay bookkeeping (cluster recovery): how many times this run
+    # was resumed after an interrupted stream, and from which chunk
+    replays: int = 0
+    resumed_at: Optional[int] = None
 
     def donation_summary(self) -> str:
         if not self.donation_enabled:
@@ -224,14 +228,38 @@ class StreamStats:
     def summary(self) -> str:
         req = sum(r for r, _ in self.donation.values())
         hon = sum(h for _, h in self.donation.values())
+        replay = (f", replays={self.replays}@chunk{self.resumed_at}"
+                  if self.replays else "")
         return (f"stream: {self.n_chunks} chunks × ≤{self.microbatch_size} "
                 f"items, depth={self.depth}, lanes={self.lanes}, "
                 f"stalls={self.stalls}, donated={hon}/{req}, "
-                f"fused_chains={len(self.fused)}")
+                f"fused_chains={len(self.fused)}{replay}")
+
+
+@dataclasses.dataclass
+class _ReplayState:
+    """What survives an interrupted streaming run — the chunk-replay
+    bookkeeping behind cluster recovery.  Captured when the interruption
+    happened *before* the chunk had any effect (an ingress recv failure:
+    chunks ``< next_ci`` are fully folded into the accumulators, chunk
+    ``next_ci`` onwards never entered the DAG), so resuming the same plan at
+    ``next_ci`` with these accumulators replays exactly the lost chunks."""
+
+    next_ci: int          # first chunk that was NOT folded
+    plan: list            # full bounds of the interrupted run
+    jit_accs: dict        # per-Collect jitted fold accumulators
+    host_accs: dict       # per-Collect host-side fold accumulators
+    combine_carry: dict   # per-COMBINE carried accumulators
+    stats: "StreamStats"  # telemetry continues across the resume
 
 
 class StreamExecutor:
     """Run a :class:`CompiledNetwork` as a pipeline of microbatches."""
+
+    # exception types whose mid-run capture is safe to resume from: raised
+    # by _chunk_inputs BEFORE the chunk had any effect (the cluster
+    # PartitionExecutor sets this to its transport error type)
+    _resumable_errors: tuple = ()
 
     def __init__(self, compiled: CompiledNetwork, *, microbatch_size: int,
                  max_in_flight: Optional[int] = None,
@@ -247,6 +275,7 @@ class StreamExecutor:
             self.net, max_in_flight, lanes)
         self._outstanding = [0] * self.lanes
         self._combine_carry: dict = {}  # per-run COMBINE accumulators
+        self.replay_state: Optional[_ReplayState] = None  # interrupted run
         self._jits: dict = {}  # persists across runs: stages compile once
         self.jit_builds = 0  # cache misses — a warm executor stays at 0
         self.on_jit_build = None  # optional hook(name) for compile counting
@@ -615,10 +644,13 @@ class StreamExecutor:
         exclude boundary shims)."""
         return list(self.net.collects())
 
-    def _run_plan(self, plan, batch):
-        net = self.net
+    def _run_plan(self, plan, batch, *, start_ci: int = 0):
+        """Fresh run over ``plan[start_ci:]`` (``start_ci`` > 0 is a cluster
+        replay of a stream tail: chunk numbering stays aligned with the full
+        batch so transported chunk ids match the surviving peers')."""
         self._check_fan_divisibility(plan)
         n = plan[-1][1] if plan else 0
+        self.replay_state = None
         self.stats = StreamStats(n_items=n, microbatch_size=self.mb,
                                  n_chunks=len(plan), depth=self.depth,
                                  lanes=self.lanes,
@@ -626,21 +658,53 @@ class StreamExecutor:
                                  fused=list(self._chains))
         self._outstanding = [0] * self.lanes
         self._combine_carry = {}
-
         jit_accs: dict[str, Any] = {}
         host_accs = {p.name: copy.deepcopy(p.init)
                      for p in self._local_collects() if not p.jit_combine}
+        return self._drive(plan, batch, start_ci, jit_accs, host_accs)
+
+    def resume_plan(self, batch=None):
+        """Resume the interrupted run captured in :attr:`replay_state`:
+        chunks already folded stay folded, only the lost tail streams."""
+        st = self.replay_state
+        if st is None:
+            raise NetworkError("resume_plan: no interrupted run to resume")
+        self.replay_state = None
+        self._combine_carry = st.combine_carry
+        self.stats = st.stats
+        self.stats.replays += 1
+        if self.stats.resumed_at is None:
+            self.stats.resumed_at = st.next_ci
+        self._outstanding = [0] * self.lanes
+        return self._drive(st.plan, batch, st.next_ci, st.jit_accs,
+                           st.host_accs)
+
+    def _drive(self, plan, batch, start_ci, jit_accs, host_accs):
         in_flight: deque = deque()
-        for ci, (lo, hi) in enumerate(plan):
+        for ci in range(start_ci, len(plan)):
+            lo, hi = plan[ci]
             if len(in_flight) >= self.depth:  # backpressure BEFORE dispatch:
-                self.stats.stalls += 1       # at most `depth` chunks unretired
+                self.stats.stalls += 1       # ≤ `depth` chunks unretired
                 self._retire(in_flight.popleft(), host_accs)
-            chunk = self._chunk_inputs(ci, lo, hi, batch)
+            try:
+                chunk = self._chunk_inputs(ci, lo, hi, batch)
+            except Exception as e:
+                # the chunk never entered the DAG; whatever is in flight is
+                # complete — retire it so the accumulators are consistent,
+                # then (for resumable failures: a peer died mid-stream) save
+                # the fold state so a controller can replay just the tail
+                while in_flight:
+                    self._retire(in_flight.popleft(), host_accs)
+                if isinstance(e, self._resumable_errors):
+                    self.replay_state = _ReplayState(
+                        ci, list(plan), jit_accs, host_accs,
+                        dict(self._combine_carry), self.stats)
+                raise
             streams, host_streams, lanes_used = self._dispatch_chunk(
                 ci, chunk, final=ci == len(plan) - 1)
             self._forward_egress(ci, host_streams)
             for name, x in streams.items():
-                if name not in jit_accs:  # first chunk: the fused fold w/ init
+                if name not in jit_accs:  # first chunk: fused fold w/ init
                     jit_accs[name] = self._stage_jit(name, False)(x)
                 else:  # later chunks: carry fold — same linear item order
                     jit_accs[name] = self._carry_jit(name)(jit_accs[name], x)

@@ -16,8 +16,9 @@ from repro.cluster import (ClusterDeployment, ClusterError, ExecConfig,
                            InProcess, JaxMesh, MultiProcessPipe,
                            PartitionExecutor, SharedMemoryRing,
                            abstract_partitioned_model, auto_assignment,
-                           check_refinement, derive_cut_capacities,
-                           make_transport, partition, run_cluster)
+                           check_redeployment, check_refinement,
+                           derive_cut_capacities, make_transport, partition,
+                           repartition_without, run_cluster)
 from repro.core import (Collect, CombineNto1, DataParallelCollect, Emit,
                         GroupOfPipelineCollects, Network, NetworkError,
                         OnePipelineCollect, OneSeqCastList, Worker, build,
@@ -294,6 +295,50 @@ class TestDerivedCapacities:
         caps = derive_cut_capacities(plan, ExecConfig(microbatch_size=5))
         assert t._queues[(c.src, c.dst)].maxsize == caps[(c.src, c.dst)]
 
+    def test_fan_immediately_at_cut_boundary(self):
+        """Satellite edge case: when the cut channel feeds straight into a
+        work-stealing fan, the derived FIFO depth must cover the fan's full
+        lane appetite, not just the channel-capacity default."""
+        net = _farm(12, 4, explicit=True)  # explicit OneFanAny, 4 branches
+        assignment = {n: (0 if n == "emit" else 1) for n in net.procs}
+        plan = partition(net, assignment=assignment)
+        (c,) = plan.cut
+        assert net.procs[c.dst].kind is Kind.SPREADER  # fan AT the boundary
+        caps = derive_cut_capacities(plan, ExecConfig())
+        from repro.core.stream import plan_depth_lanes
+        depth, lanes = plan_depth_lanes(plan.subnetwork(1), None, None)
+        assert lanes == 4  # the fan defines the lane count
+        assert caps[(c.src, c.dst)] == max(2, depth, lanes) >= 4
+        # and the real deployment matches the oracle with that sizing
+        out = run_cluster(net, instances=12, plan=plan, microbatch_size=4)
+        assert float(out["collect"]) == float(
+            run_sequential(net, 12)["collect"])
+
+    def test_single_process_partitions(self):
+        """Satellite edge case: one process per host — every subnet is a
+        lone stage between shims, and every cut still gets the >= 2 floor."""
+        net = _pipeline()
+        order = net.toposort()
+        plan = partition(net, assignment={n: i for i, n in enumerate(order)})
+        assert len(plan.cut) == len(order) - 1
+        caps = derive_cut_capacities(plan, ExecConfig())
+        assert all(v >= 2 for v in caps.values())
+        out = run_cluster(net, instances=7, plan=plan, microbatch_size=3)
+        assert float(out["collect"]) == float(
+            run_sequential(net, 7)["collect"])
+
+    def test_capacity_floor_with_depth_one_consumer(self):
+        """Satellite edge case: a consumer executor throttled to depth 1
+        must still get the DEFAULT_CAPACITY floor — a 1-deep transport FIFO
+        would serialise producer and consumer chunk-by-chunk."""
+        from repro.cluster.transport import DEFAULT_CAPACITY
+        net = _farm()
+        plan = partition(net, hosts=2)
+        (c,) = plan.cut
+        caps = derive_cut_capacities(plan, ExecConfig(max_in_flight=1,
+                                                      lanes=1))
+        assert caps[(c.src, c.dst)] == DEFAULT_CAPACITY == 2
+
 
 class TestClusterDeployment:
     """Tentpole: a deployment partitions, compiles, and spawns ONCE; warm
@@ -343,9 +388,13 @@ class TestClusterDeployment:
             seq = run_sequential(net, 6)["collect"]
             assert float(dep.run(instances=6)["collect"]) == float(seq)
 
-    def test_failure_on_batch2_reports_then_fresh_deployment_works(self):
-        """A host failure mid-deployment still yields the §8 cluster report;
-        the poisoned deployment refuses more work; a fresh one succeeds."""
+    def test_failure_on_batch2_reports_then_same_deployment_recovers(self):
+        """A host failure mid-deployment still yields the §8 cluster report,
+        but the deployment is no longer poisoned: the next plain run()
+        auto-recovers (epoch bump, drained transport) and streams a new
+        batch through the SAME warm deployment.  A deterministic poison
+        batch keeps failing precisely (never limps on) — recovery repairs
+        hosts, not user code."""
         def tripwire(acc, x):
             if float(x) >= 16.0:
                 raise RuntimeError("collector tripped")
@@ -354,23 +403,26 @@ class TestClusterDeployment:
         net = DataParallelCollect(create=_mk_items(8), function=_sq,
                                   collector=tripwire, init={}, workers=2,
                                   jit_combine=False)
-        dep = ClusterDeployment(net, hosts=2, microbatch_size=2,
-                                timeout_s=60)
-        try:
+        with ClusterDeployment(net, hosts=2, microbatch_size=2,
+                               timeout_s=60) as dep:
             out = dep.run(instances=4)  # squares < 16: fine
             assert all(r.ok for r in out.reports)
             with pytest.raises(ClusterError) as ei:
                 dep.run(instances=8)  # 5² = 25 trips the collector
             assert "collector tripped" in str(ei.value)
             assert "FAILED" in str(ei.value)
-            # poisoned: further batches refused with a actionable message
-            with pytest.raises(NetworkError, match="fresh deployment"):
-                dep.run(instances=4)
-        finally:
-            dep.close()
-        with ClusterDeployment(net, hosts=2, microbatch_size=2) as dep2:
-            out = dep2.run(instances=4)
+            # NOT poisoned: a fresh batch runs on the same deployment
+            # (auto-recovery bumps the epoch first)
+            out = dep.run(instances=4)
             assert out["collect"] == {i: float(i * i) for i in range(4)}
+            assert dep.epoch == 2 and len(dep.events) == 1
+            # the poison batch itself still fails — deterministically
+            with pytest.raises(ClusterError):
+                dep.run(instances=8)
+            with pytest.raises(ClusterError):
+                dep.recover()  # the replay trips the same user bug
+            assert dep.run(instances=4)["collect"] == \
+                {i: float(i * i) for i in range(4)}
 
     def test_closed_deployment_refuses(self):
         dep = ClusterDeployment(_farm(), hosts=2, microbatch_size=2)
@@ -594,6 +646,295 @@ class TestSharedMemoryRing:
             assert ring.free_q.qsize() == 2
         finally:
             t.close()
+
+
+def _trip_once_farm(trip_at: int, state: dict):
+    """Farm whose host-side collector raises exactly once, on its
+    ``trip_at``-th call ever — a transient host failure (thread hosts share
+    ``state`` with the test)."""
+    def coll(acc, x):
+        state["n"] = state.get("n", 0) + 1
+        if state["n"] == trip_at:
+            raise RuntimeError("transient collector failure")
+        return {**acc, len(acc): float(x)}
+
+    return DataParallelCollect(create=_mk_items(8), function=_sq,
+                               collector=coll, init={}, workers=2,
+                               jit_combine=False)
+
+
+class TestElasticRecovery:
+    """Tentpole: a live deployment is a control plane — host failures are
+    drained, repaired (restart or rebalance), epoch-stamped, re-proved, and
+    the failed batch's lost chunks replayed, all without a fresh start()."""
+
+    EXPECT8 = {i: float(i * i) for i in range(8)}
+
+    def test_recover_replays_and_unaffected_hosts_stay_warm(self):
+        state: dict = {}
+        net = _trip_once_farm(trip_at=12, state=state)
+        with ClusterDeployment(net, hosts=2, microbatch_size=2,
+                               timeout_s=60) as dep:
+            assert dep.run(instances=8)["collect"] == self.EXPECT8
+            traces = {h: dict(ex.trace_counts)
+                      for h, ex in dep.executors.items()}
+            with pytest.raises(ClusterError):
+                dep.run(instances=8)  # call 12 lands mid-batch-2
+            rec = dep.recover()
+            # the replayed batch is bit-identical to the oracle
+            assert rec["collect"] == self.EXPECT8
+            assert all(r.ok for r in rec.reports)
+            # zero new stage jits anywhere: recovery reused every warm
+            # executor (same shapes, same jits — compile-counter asserted)
+            assert sum(r.jit_builds for r in rec.reports) == 0
+            for h, ex in dep.executors.items():
+                assert dict(ex.trace_counts) == traces[h]
+            # epoch bumped, event recorded, refinement re-proved
+            assert dep.epoch == 2 and rec.epoch == 2
+            (ev,) = dep.events
+            assert ev.epoch_from == 1 and ev.epoch_to == 2
+            assert ev.erred == [1] and ev.refined is True
+            # ... and the deployment keeps serving warm batches
+            out = dep.run(instances=8)
+            assert out["collect"] == self.EXPECT8
+            assert sum(r.jit_builds for r in out.reports) == 0
+
+    def test_recovery_section_in_cluster_report(self):
+        state: dict = {}
+        net = _trip_once_farm(trip_at=12, state=state)
+        with ClusterDeployment(net, hosts=2, microbatch_size=2,
+                               timeout_s=60) as dep:
+            dep.run(instances=8)
+            with pytest.raises(ClusterError):
+                dep.run(instances=8)
+            rec = dep.recover()
+            rep = netlog.cluster_report(dep.plan, rec.reports,
+                                        events=dep.events)
+            assert "plan epoch 2" in rep
+            assert "-- recovery --" in rep
+            assert "epoch 1 -> 2 (restart)" in rep
+            assert "refinement(epoch 2)=True" in rep
+
+    def test_rebalance_moves_processes_onto_survivors(self):
+        """recover(mode="rebalance") reuses the planner: the failed host's
+        processes move to survivors, the new plan is validated and
+        re-proved, and the replay runs on the new topology."""
+        state: dict = {}
+        net = _trip_once_farm(trip_at=12, state=state)
+        with ClusterDeployment(net, hosts=2, microbatch_size=2,
+                               timeout_s=60) as dep:
+            assert dep.run(instances=8)["collect"] == self.EXPECT8
+            old_hosts = dep.plan.hosts()
+            assert old_hosts == [0, 1]
+            with pytest.raises(ClusterError):
+                dep.run(instances=8)
+            rec = dep.recover(mode="rebalance")
+            assert rec["collect"] == self.EXPECT8
+            # the erred host was evacuated: its procs now live on host 0
+            assert dep.plan.hosts() == [0]
+            (ev,) = dep.events
+            assert ev.mode == "rebalance" and ev.moved
+            assert all(dst == 0 for _, dst in ev.moved.values())
+            assert ev.refined is True  # epoch-2 plan [T=] original net
+            # the rebalanced single-host deployment keeps serving
+            assert dep.run(instances=8)["collect"] == self.EXPECT8
+
+    def test_stalled_survivor_resumes_partial_fold(self):
+        """A consumer whose producer dies mid-stream stalls with its fold
+        intact (chunk-replay bookkeeping): resuming replays ONLY the lost
+        chunks, and the result matches the uninterrupted oracle."""
+        from repro.cluster.transport import EOS as _EOS
+        net = _farm()
+        plan = partition(net, hosts=2)
+        (c,) = plan.cut
+        consumer = plan.assignment[c.dst]
+        chan = (c.src, c.dst)
+        oracle = run_sequential(net, 8)["collect"]
+
+        t = InProcess()
+        t.setup([chan], {chan: 8})
+        from repro.core.builder import build as _build
+        ex = PartitionExecutor(_build(plan.subnetwork(consumer)), plan=plan,
+                               host=consumer, endpoint=t, microbatch_size=2)
+        producer_ex = PartitionExecutor(
+            _build(plan.subnetwork(plan.assignment[c.src])), plan=plan,
+            host=plan.assignment[c.src], endpoint=t, microbatch_size=2)
+        bounds = [(0, 2), (2, 4), (4, 6), (6, 8)]
+        from repro.core.builder import make_emit_batch
+        batch = make_emit_batch(net, 8)
+        # producer streams chunks 0..1, then "dies" (EOS on the wire)
+        producer_ex.run_partition(bounds[:2], batch)
+        t.send(chan, -1, _EOS)
+        with pytest.raises(NetworkError):
+            ex.run_partition(bounds)
+        st = ex.replay_state
+        assert st is not None and st.next_ci == 2
+        assert ex.stats.summary()  # telemetry survives the interruption
+        # "controller": bump the epoch, replay the tail from the restarted
+        # producer, resume the survivor — only chunks 2..3 flow again
+        t.set_epoch(2)
+        producer_ex.reset_run_state()
+        producer_ex.run_partition(bounds, batch, start_ci=2)
+        out = ex.resume_partition()
+        assert float(out["collect"]) == float(oracle)
+        assert ex.stats.replays == 1 and ex.stats.resumed_at == 2
+
+    def test_transport_epoch_and_duplicate_semantics(self):
+        """Stale-epoch records and replayed duplicates are dropped; future
+        epochs are a protocol error; EOS outranks ordering."""
+        from repro.cluster.transport import TransportError
+        t = InProcess()
+        t.setup([("a", "b")], {("a", "b"): 8})
+        t.send(("a", "b"), 0, "old-epoch")
+        t.set_epoch(2)
+        t.send(("a", "b"), 0, "dup")       # will be asked for as ci=1
+        t.send(("a", "b"), 1, "current")
+        # epoch-1 record dropped, ci=0 duplicate dropped, ci=1 delivered
+        assert t.recv(("a", "b"), 1) == "current"
+        t.epoch = 1  # consumer behind the controller: future-epoch error
+        t.send(("a", "b"), 2, "future")  # sent at epoch 1...
+        t.set_epoch(2)
+        t._queues[("a", "b")].put((3, 2, "from-the-future"))
+        with pytest.raises(TransportError, match="epoch"):
+            t.recv(("a", "b"), 2)
+
+    def test_drain_keep_and_requeue(self):
+        """drain() empties the FIFOs, returning undelivered chunks for kept
+        channels; requeue() re-stamps them under the new epoch so a stalled
+        survivor accepts exactly what it never folded."""
+        t = InProcess()
+        t.setup([("a", "b"), ("c", "d")], {("a", "b"): 8, ("c", "d"): 8})
+        for ci in (2, 3, 4):
+            t.send(("a", "b"), ci, {"v": np.asarray([ci])})
+        t.send(("c", "d"), 0, "doomed")
+        drained = t.drain(keep={("a", "b")})
+        assert [ci for ci, _ in drained[("a", "b")][0]] == [2, 3, 4]
+        assert drained[("c", "d")] == ([], 1)
+        t.set_epoch(2)
+        n = t.requeue(("a", "b"), drained[("a", "b")][0])
+        assert n == 3
+        for ci in (2, 3, 4):  # consumer at the new epoch reads them in order
+            assert int(t.recv(("a", "b"), ci)["v"][0]) == ci
+
+    def test_shm_drain_recycles_slots(self):
+        t = SharedMemoryRing(slot_bytes=1 << 10)
+        try:
+            t.setup([("a", "b")], {("a", "b"): 3})
+            for ci in range(3):
+                t.send(("a", "b"), ci, np.arange(4.0))
+            drained = t.drain()  # no keep: discard everything
+            assert drained[("a", "b")][1] == 3
+            # every slot is back on the free ring
+            assert t._rings[("a", "b")].free_q.qsize() == 3
+        finally:
+            t.close()
+
+    def test_shm_atexit_unlink_registered(self):
+        """Satellite: owned segments unlink from atexit, not only close()
+        — a parent that dies mid-batch must not strand /dev/shm segments."""
+        t = SharedMemoryRing(slot_bytes=1 << 10)
+        t.setup([("a", "b")], {("a", "b"): 2})
+        assert t._atexit_armed
+        names = [s.name for slots in t._owned.values() for s in slots]
+        t._unlink_owned()  # what atexit would run
+        from multiprocessing import shared_memory
+        for name in names:
+            with pytest.raises(FileNotFoundError):
+                shared_memory.SharedMemory(name=name)
+        t.close()  # idempotent after the atexit path
+        assert not t._atexit_armed
+
+    def test_repartition_without_prefers_upstream_merge(self):
+        net = _pipeline()
+        net.place("emit", host=0).place("stage0", host=1)
+        net.place("stage1", host=2).place("collect", host=2)
+        plan = partition(net, hosts=3)
+        assign = repartition_without(plan, [1])
+        assert assign["stage0"] == 0  # merged into the upstream survivor
+        partition(net, assignment=assign)  # validates
+        assert check_redeployment(net, plan,
+                                  partition(net, assignment=assign))
+
+    def test_repartition_without_all_hosts_failed(self):
+        net = _farm()
+        plan = partition(net, hosts=2)
+        with pytest.raises(NetworkError, match="every host failed"):
+            repartition_without(plan, plan.hosts())
+
+    def test_check_redeployment_across_plan_shapes(self):
+        net = _farm()
+        p2 = partition(net, hosts=2)
+        for hosts in (1, 3):
+            assert check_redeployment(net, p2, partition(net, hosts=hosts))
+
+    def test_plain_run_after_failure_discards_undelivered_chunks(self):
+        """Auto-recovery (run() after a failure, no replay) must DISCARD the
+        failed stream's undelivered chunks rather than requeue them: a fresh
+        batch's consumer expects chunk 0, and a requeued chunk 2 would trip
+        the out-of-order protocol check (regression)."""
+        from repro.cluster.transport import SKIP
+        state: dict = {}
+        net = _trip_once_farm(trip_at=12, state=state)
+        with ClusterDeployment(net, hosts=2, microbatch_size=2,
+                               timeout_s=60) as dep:
+            assert dep.run(instances=8)["collect"] == self.EXPECT8
+            with pytest.raises(ClusterError):
+                dep.run(instances=8)
+            # pretend the failed stream left undelivered chunks bound for a
+            # stalled survivor (the kill-host scenario, made deterministic)
+            ctrl = dep.controller
+            (c,) = dep.plan.cut
+            ctrl._kept = {(c.src, c.dst): [(2, SKIP), (3, SKIP)]}
+            ctrl._stalled = {dep.plan.assignment[c.dst]: 2}
+            out = dep.run(instances=8)  # auto-recovers, then runs fresh
+            assert out["collect"] == self.EXPECT8
+            assert dep.events[-1].requeued == {}
+            assert dep.events[-1].discarded >= 2
+
+    def test_kill_host_refused_for_thread_hosts(self):
+        with ClusterDeployment(_farm(), hosts=2,
+                               microbatch_size=2) as dep:
+            dep.run(instances=8)
+            with pytest.raises(NetworkError, match="process transports"):
+                dep.kill_host(0)
+
+    def test_recover_without_failure_refused(self):
+        with ClusterDeployment(_farm(), hosts=2, microbatch_size=2) as dep:
+            dep.run(instances=8)
+            with pytest.raises(NetworkError, match="nothing to recover"):
+                dep.recover()
+
+    def test_pipe_kill_host_restarts_warm(self):
+        """The CI elastic-smoke scenario, in-suite: SIGKILL one real host
+        process mid-deployment; the survivor stalls resumably, recover()
+        respawns the corpse against the warm transport, replays the lost
+        batch oracle-identically, and the survivor builds ZERO new jits."""
+        net = _farm_factory(10, 3)
+        seq = run_sequential(net, 10)["collect"]
+        with ClusterDeployment(net, hosts=2, transport="pipe",
+                               microbatch_size=2, timeout_s=120,
+                               factory=(_farm_factory, (10, 3))) as dep:
+            out = dep.run(instances=10)
+            assert float(out["collect"]) == float(seq)
+            victim = dep.plan.assignment["emit"]
+            survivor = next(h for h in dep.plan.hosts() if h != victim)
+            dep.kill_host(victim)
+            with pytest.raises(ClusterError) as ei:
+                dep.run(instances=10)
+            assert any(not r.ok and not r.stalled for r in ei.value.reports)
+            rec = dep.recover()
+            assert float(rec["collect"]) == float(seq)
+            assert dep.epoch == 2
+            by_host = {r.host: r for r in rec.reports}
+            # the unaffected host replayed entirely warm
+            assert by_host[survivor].jit_builds == 0
+            (ev,) = dep.events
+            assert ev.dead == [victim] and ev.restarted == [victim]
+            assert ev.refined is True
+            # and the deployment is warm again end-to-end
+            out = dep.run(instances=10)
+            assert float(out["collect"]) == float(seq)
+            assert sum(r.jit_builds for r in out.reports) == 0
 
 
 class TestJaxMesh:

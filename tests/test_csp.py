@@ -72,6 +72,36 @@ def test_gop_pog_raw_trace_asymmetry():
     assert ra.outcomes == rb.outcomes  # ... but the result never does
 
 
+def test_trace_refines_is_containment():
+    """``trace_refines`` is FDR's actual ``[T=`` on observable trace sets:
+    reflexive, and a farm with MORE workers still refines a single-lane
+    one (any interleaving it adds is already possible... it is not — the
+    single lane is the stricter spec, so containment must FAIL that way
+    while outcome-equivalence holds)."""
+    farm1, farm2 = _farm(1), _farm(2)
+    assert csp.trace_refines(farm1, farm1, instances=3)
+    assert csp.trace_refines(farm2, farm2, instances=3)
+    # a 1-worker farm emits arrivals in item order only; the 2-worker farm
+    # may reorder — so farm2's traces contain farm1's, not vice versa
+    assert csp.trace_refines(farm2, farm1, instances=3)
+    assert not csp.trace_refines(farm1, farm2, instances=3)
+    # ...even though the collected OUTCOME is identical (Def 7's point)
+    assert csp.trace_equivalent(farm1, farm2, instances=3)
+
+
+def test_trace_refines_across_relay_models():
+    """The re-deployment obligation: inserting transparent relays (the
+    partitioned model's transports) changes no observable trace, in either
+    direction — the license to swap plan epochs under a live network."""
+    from repro.cluster import abstract_partitioned_model, partition
+    net = OnePipelineCollect(create=lambda i: i, stage_ops=[_f, _f],
+                             collector=_coll)
+    plan = partition(net, hosts=2)
+    model = abstract_partitioned_model(net, plan)
+    assert csp.trace_refines(net, model, instances=3)
+    assert csp.trace_refines(model, net, instances=3)
+
+
 def test_deadlock_detected_in_broken_model():
     """A worker ring with no source deadlocks immediately — the checker
     sees it (negative control; verify would refuse this network)."""

@@ -1,0 +1,46 @@
+"""benchmarks.perf_report must render on a fresh clone: missing or
+truncated BENCH_*.json artifacts become explicit "(not run)" rows, never a
+crash (satellite of the elastic-control-plane PR)."""
+
+import json
+import os
+
+import benchmarks.perf_report as pr
+
+
+def test_missing_artifacts_render_not_run_rows(tmp_path, monkeypatch):
+    monkeypatch.setattr(pr, "REPO_DIR", str(tmp_path))
+    md = pr.bench_markdown()
+    assert "(not run)" in md
+    assert "BENCH_stream.json missing" in md
+    assert "BENCH_cluster.json missing" in md
+    # it is still a well-formed table
+    assert md.splitlines()[2].startswith("| suite |")
+
+
+def test_truncated_artifact_renders_unreadable_row(tmp_path, monkeypatch):
+    monkeypatch.setattr(pr, "REPO_DIR", str(tmp_path))
+    (tmp_path / "BENCH_cluster.json").write_text(
+        '{"benchmark": "cluster", "rows":')  # interrupted mid-write
+    md = pr.bench_markdown()
+    assert "BENCH_cluster.json unreadable" in md
+
+
+def test_empty_and_malformed_rows_tolerated(tmp_path, monkeypatch):
+    monkeypatch.setattr(pr, "REPO_DIR", str(tmp_path))
+    (tmp_path / "BENCH_stream.json").write_text(
+        json.dumps({"benchmark": "stream", "mode": "smoke", "rows": []}))
+    (tmp_path / "BENCH_cluster.json").write_text(
+        json.dumps({"benchmark": "cluster", "mode": "smoke",
+                    "rows": [{"name": "partial_row"},  # no us_per_call
+                             "not-a-dict"]}))
+    md = pr.bench_markdown()
+    assert "holds no rows" in md
+    assert "| partial_row | - |" in md
+
+
+def test_real_artifacts_still_render(monkeypatch):
+    if not os.path.exists(os.path.join(pr.REPO_DIR, "BENCH_cluster.json")):
+        import pytest
+        pytest.skip("no local benchmark artifacts")
+    assert "cluster" in pr.bench_markdown()

@@ -263,6 +263,71 @@ class TestStreamingEquivalence:
         assert len(cn._streams) == 1  # same executor (and stage jits) reused
 
 
+class TestChunkReplay:
+    """Chunk-replay bookkeeping (the cluster control plane's foundation):
+    an interrupted run captures a resumable state iff the interruption hit
+    before the chunk had any effect, and resuming replays only the tail."""
+
+    class _PeerDied(NetworkError):
+        pass
+
+    def _interruptible(self, fail_at: int):
+        net = OnePipelineCollect(create=_mk_items(8), stage_ops=[_sq, _inc],
+                                 collector=_add, init=jnp.asarray(0.0),
+                                 jit_combine=True)
+        cn = build(net)
+        ex = StreamExecutor(cn, microbatch_size=2)
+        ex._resumable_errors = (self._PeerDied,)
+        orig = ex._chunk_inputs
+        trips = {"armed": True}
+
+        def flaky(ci, lo, hi, batch):
+            if ci == fail_at and trips["armed"]:
+                trips["armed"] = False
+                raise self._PeerDied(f"peer died before chunk {ci}")
+            return orig(ci, lo, hi, batch)
+
+        ex._chunk_inputs = flaky
+        return net, ex
+
+    def test_resume_replays_only_the_tail(self):
+        net, ex = self._interruptible(fail_at=2)
+        batch = jnp.arange(8, dtype=jnp.float32)
+        with pytest.raises(self._PeerDied):
+            ex.run(batch)
+        st = ex.replay_state
+        assert st is not None and st.next_ci == 2
+        out = ex.resume_plan(batch)
+        assert float(out["collect"]) == float(
+            run_sequential(net, 8)["collect"])
+        assert ex.stats.replays == 1 and ex.stats.resumed_at == 2
+        assert "replays=1@chunk2" in ex.stats.summary()
+        assert ex.replay_state is None  # consumed by the resume
+
+    def test_non_resumable_error_leaves_no_state(self):
+        net, ex = self._interruptible(fail_at=1)
+        ex._resumable_errors = ()  # the same failure, now non-resumable
+        with pytest.raises(self._PeerDied):
+            ex.run(jnp.arange(8, dtype=jnp.float32))
+        assert ex.replay_state is None
+        with pytest.raises(NetworkError, match="no interrupted run"):
+            ex.resume_plan(None)
+
+    def test_start_ci_runs_an_aligned_tail(self):
+        """run with start_ci=k streams chunks k.. with chunk ids aligned to
+        the full plan (what a restarted cluster host replays)."""
+        net = OnePipelineCollect(create=_mk_items(8), stage_ops=[_sq, _inc],
+                                 collector=_add, init=jnp.asarray(0.0),
+                                 jit_combine=True)
+        ex = StreamExecutor(build(net), microbatch_size=2)
+        batch = jnp.arange(8, dtype=jnp.float32)
+        plan = microbatch_plan(8, 2)
+        tail = ex._run_plan(plan, batch, start_ci=2)
+        # only items 4..7 flowed: the fold covers the tail alone
+        assert float(tail["collect"]) == float(sum(i * i + 1
+                                                   for i in range(4, 8)))
+
+
 class TestBackpressure:
     def test_depth_from_channel_capacity(self):
         """A buffered channel's capacity bounds the in-flight chunk count."""
