@@ -21,6 +21,8 @@ from .partition import (PartitionPlan, abstract_partitioned_model,
 from .runtime import (ClusterError, ClusterResult, ExecConfig, HostReport,
                       PartitionExecutor, derive_cut_capacities,
                       make_host_executor, run_cluster)
+from .sim import (FaultEvent, FaultSchedule, SimClock, SimTransport,
+                  run_pipe_brick_scenario, run_scenario)
 from .transport import (ChannelTransport, InProcess, JaxMesh,
                         MultiProcessPipe, SharedMemoryRing, TransportError,
                         make_transport)
@@ -34,4 +36,6 @@ __all__ = [
     "HostReport", "ExecConfig", "ClusterDeployment", "ClusterController",
     "RecoveryEvent",
     "derive_cut_capacities", "make_host_executor",
+    "FaultEvent", "FaultSchedule", "SimClock", "SimTransport",
+    "run_scenario", "run_pipe_brick_scenario",
 ]

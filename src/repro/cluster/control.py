@@ -76,26 +76,40 @@ class RecoveryEvent:
     replay_from: dict         # host -> first chunk replayed
     refined: Optional[bool] = None  # new epoch's plan [T=] original network
     wall_s: float = 0.0
+    # dead-reader FIFOs found on the dead hosts' ingress (a host SIGKILLed
+    # mid-recv bricks the queue): rebuilt in place, or routed around by the
+    # auto-fallback to mode="rebalance" (auto_mode records which, and why)
+    bricked: list = dataclasses.field(default_factory=list)
+    auto_mode: Optional[str] = None
 
     def describe(self) -> str:
+        """One deterministic line (hosts, channels and dicts sorted), so
+        report snapshots are stable across thread-report orderings."""
         bits = [f"epoch {self.epoch_from} -> {self.epoch_to} "
-                f"({self.mode}):"]
+                f"({self.mode})"]
         if self.dead:
-            bits.append(f"dead hosts {self.dead}")
+            bits.append(f"dead hosts {sorted(self.dead)}")
         if self.erred:
-            bits.append(f"erred hosts {self.erred}")
+            bits.append(f"erred hosts {sorted(self.erred)}")
         if self.stalled:
             bits.append("stalled " + ", ".join(
                 f"host {h} at chunk {ci}"
                 for h, ci in sorted(self.stalled.items())))
+        if self.bricked:
+            bits.append("bricked ingress FIFO "
+                        + ", ".join(sorted(self.bricked)))
+        if self.auto_mode:
+            bits.append(self.auto_mode)
         if self.restarted:
-            bits.append(f"restarted {self.restarted}")
+            bits.append(f"restarted {sorted(self.restarted)}")
         if self.moved:
             bits.append("moved " + ", ".join(
                 f"{p}:{a}->{b}" for p, (a, b) in sorted(self.moved.items())))
         req = sum(len(v) for v in self.requeued.values())
-        bits.append(f"requeued {req} / discarded {self.discarded} "
-                    "in-flight chunks")
+        detail = ", ".join(f"{chan}:{cis}"
+                           for chan, cis in sorted(self.requeued.items()))
+        bits.append(f"requeued {req}{f' [{detail}]' if detail else ''}"
+                    f" / discarded {self.discarded} in-flight chunks")
         if self.replay_from:
             bits.append("replayed " + ", ".join(
                 f"host {h} from chunk {ci}"
@@ -200,6 +214,8 @@ class ClusterController:
         self.transport = transport
         self.factory = factory
         self.timeout_s = timeout_s
+        self.poll_s = 1.0  # result-queue poll (dead-host detection cadence;
+        # the fault-injection simulator shrinks it to keep scenarios fast)
         self.epoch = 1
         self.events: list[RecoveryEvent] = []
         self.capacities = derive_cut_capacities(plan, cfg)
@@ -490,7 +506,7 @@ class ClusterController:
         while pending and time.monotonic() < deadline:
             try:
                 status, h, bid, payload, stats = self._result_q.get(
-                    timeout=1.0)
+                    timeout=self.poll_s)
             except _queue.Empty:
                 for h in sorted(pending):
                     p = self._procs.get(h)
@@ -592,11 +608,82 @@ class ClusterController:
             if kept:
                 self._kept.setdefault(chan, []).extend(kept)
             ev.discarded += dropped
+        # 1b. a host SIGKILLed while blocked in recv died HOLDING its
+        #     ingress FIFO's reader lock — the restarted worker (and every
+        #     later drain) would block on the bricked queue forever.  Probe
+        #     the dead hosts' ingress channels; rebuild what the transport
+        #     can (respawning any live host that still holds an endpoint
+        #     onto the abandoned FIFO — spawned processes snapshot the
+        #     queue map), otherwise route around it via mode="rebalance".
+        force_restart: set = set()
+        if self._dead:
+            ingress = [(c.src, c.dst) for h in sorted(self._dead)
+                       for c in self.plan.ingress_of(h)]
+            bricked = (self.transport.bricked_channels(ingress)
+                       if ingress else set())
+            ev.bricked = sorted(f"{a}->{b}" for a, b in bricked)
+            if bricked:
+                if all(self.transport.rebuild_channel(chan)
+                       for chan in sorted(bricked)):
+                    if self.transport.process_hosts:
+                        # whatever the bricked FIFO still held is
+                        # unreachable; the replay re-streams it, so the
+                        # rebuilt channel's live endpoints must restart
+                        # (a thread host reads the rebuilt map in place)
+                        for chan in bricked:
+                            for p_name in chan:
+                                h = self.plan.assignment[p_name]
+                                if h not in self._dead:
+                                    force_restart.add(h)
+                else:
+                    # erred hosts count: their worker is parked warm and
+                    # can absorb the dead hosts' processes — only a host
+                    # whose WORKER died is not a rebalance target
+                    survivors = sorted(set(self._live) - self._dead)
+                    if not survivors:
+                        # can't rebuild, nobody left to route around it:
+                        # refuse loudly instead of looping through doomed
+                        # rebalances (found by the fault-injection
+                        # simulator: double-kill + unrebuildable brick)
+                        raise NetworkError(
+                            f"recover: bricked ingress FIFO(s) "
+                            f"{ev.bricked} cannot be rebuilt by the "
+                            f"{self.transport.name!r} transport and no "
+                            "surviving host is left to rebalance around "
+                            "them — the deployment cannot be recovered "
+                            "(fresh start() required)")
+                    # route around instead: FORGET the bricked FIFOs so
+                    # the rebalance's reconfigure recreates any that stay
+                    # in the new cut (reconfigure otherwise reuses the
+                    # dead queue for an unchanged (src, dst) key), and
+                    # restart live hosts whose endpoints snapshot the
+                    # abandoned queue
+                    for chan in sorted(bricked):
+                        self.transport.forget_channel(chan)
+                        if self.transport.process_hosts:
+                            for p_name in chan:
+                                h = self.plan.assignment[p_name]
+                                if h not in self._dead:
+                                    force_restart.add(h)
+                    if mode != "rebalance":
+                        ev.auto_mode = ("auto-fallback restart->rebalance: "
+                                        "bricked FIFO not rebuildable")
+                        mode = ev.mode = "rebalance"
         # 2. restart or rebalance the failed hosts
         if mode == "rebalance" and (self._dead or self._erred):
             self._rebalance(ev)
+            for h in sorted(force_restart):  # stale endpoints onto a
+                # rebuilt FIFO still in the new cut: respawn those too
+                if h in self._live and h not in ev.restarted:
+                    self._stalled.pop(h, None)
+                    self.restart_host(h)
+                    ev.restarted.append(h)
         else:
-            for h in sorted(self._dead):
+            for h in sorted(set(self._dead) | force_restart):
+                if h not in self._dead:
+                    # a force-restarted survivor loses any stalled fold
+                    # state with its worker — it replays from scratch
+                    self._stalled.pop(h, None)
                 self.restart_host(h)
                 ev.restarted.append(h)
         # 3. new epoch: stale records become invisible
@@ -764,8 +851,14 @@ class ClusterController:
                  batch if h in emit_hosts else None, start))
         reports = self._fresh_reports()
         results = self._await_results(batch_id, reports, set(participants))
-        for h in self._live:  # completed hosts' results are reused verbatim
-            if h not in results and h in ok_cache:
+        for h in self._live:  # hosts that sat the replay out reuse their
+            # completed result verbatim.  ONLY those: a participant that
+            # produced nothing (killed again mid-replay) must stay not-ok —
+            # backfilling it from ok_cache would resurrect a result of the
+            # failed batch's OLD partition and mask the new death (found by
+            # the fault-injection simulator: double-kill, second kill
+            # landing as the restarted worker picks the replay up)
+            if h not in participants and h not in results and h in ok_cache:
                 results[h] = ok_cache[h]
                 reports[h].ok = True
                 reports[h].stats_summary = ("(reused: completed before "

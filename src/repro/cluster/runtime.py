@@ -203,12 +203,10 @@ class PartitionExecutor(StreamExecutor):
         return [p for p in self.net.collects() if not is_shim(p.name)]
 
     def reset_run_state(self) -> None:
-        """Forget any interrupted run (the controller is starting a fresh
-        batch or a replay-from-scratch): resume state, buffered ingress and
-        COMBINE carries all go."""
-        self.replay_state = None
+        """Base reset (resume state, COMBINE carries) plus the partition's
+        buffered partial ingress."""
+        super().reset_run_state()
         self._ingress_buf = {}
-        self._combine_carry = {}
 
     def run_partition(self, bounds: list, batch=None, *,
                       start_ci: int = 0) -> dict:

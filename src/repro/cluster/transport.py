@@ -77,6 +77,7 @@ EOS = "__gpp_eos__"    # defensive end-of-stream marker
 
 _RECV_TIMEOUT_S = 120.0  # a hung peer surfaces as a TransportError, not a hang
 _DRAIN_POLL_S = 0.02  # drain declares a FIFO empty after 2 misses of this
+_BRICK_PROBE_S = 0.25  # reader-lock probe: held longer than this = corpse
 
 
 class TransportError(NetworkError):
@@ -188,6 +189,10 @@ class ChannelTransport:
     name = "abstract"
     process_hosts = False  # True: hosts are spawned OS processes
     epoch = 1  # deployment epoch records are stamped with (controller-bumped)
+    # how long a blocked send/recv waits before declaring the peer hung —
+    # a class attribute so the fault-injection simulator (and tests) can
+    # shrink it without patching the module constant
+    recv_timeout_s = _RECV_TIMEOUT_S
 
     def setup(self, cut_channels, capacities: dict) -> None:
         raise NotImplementedError
@@ -241,6 +246,35 @@ class ChannelTransport:
         the next quiesce tick)."""
         return False
 
+    def bricked_channels(self, channels=None) -> set:
+        """Channels whose FIFO inherited a *dead reader lock*: a host
+        SIGKILLed while blocked inside ``recv`` dies holding the queue's
+        reader lock, so every later ``get`` — a restarted worker, the
+        controller's drain — times out empty forever.  The controller probes
+        a dead host's ingress channels during :meth:`recover` and routes
+        around (or rebuilds) whatever this reports.  ``channels`` limits the
+        probe (None = all).  Default: nothing bricks (thread hosts cannot be
+        SIGKILLed mid-``get``)."""
+        return set()
+
+    def rebuild_channel(self, chan) -> bool:
+        """Replace a bricked channel's FIFO with a fresh one at the same
+        capacity, abandoning the old queue and whatever the corpse left in
+        it (the epoch bump makes those records stale anyway).  Returns True
+        when the transport could rebuild — the *controller* is responsible
+        for restarting any live host still holding an endpoint onto the old
+        FIFO (spawned processes snapshot the queue map at spawn time).
+        Default: cannot rebuild (fall back to ``mode="rebalance"``)."""
+        return False
+
+    def forget_channel(self, chan) -> None:
+        """Discard a channel's FIFO entirely so a later ``reconfigure`` /
+        ``setup`` recreates it from scratch.  The rebalance fallback uses
+        this for bricked FIFOs: ``reconfigure`` keeps the FIFO of every
+        channel still in the new cut, so without forgetting, a bricked
+        channel whose (src, dst) pair survives the rebalance would hand the
+        relocated consumer the same dead queue.  Default: nothing to do."""
+
     def close(self) -> None:
         pass
 
@@ -250,6 +284,7 @@ class _QueueTransport(ChannelTransport):
 
     def __init__(self):
         self._queues: dict = {}
+        self._caps: dict = {}  # chan -> capacity, kept for rebuilds
 
     def _capacity(self, capacities, chan) -> int:
         cap = capacities.get(chan, 0)
@@ -262,10 +297,12 @@ class _QueueTransport(ChannelTransport):
         pass
 
     def setup(self, cut_channels, capacities) -> None:
+        self._caps.update(capacities)
         for chan in cut_channels:
             self._queues[chan] = self._new_queue(chan, capacities)
 
     def reconfigure(self, cut_channels, capacities) -> None:
+        self._caps.update(capacities)
         old = self._queues
         self._queues = {}
         for chan in cut_channels:
@@ -275,17 +312,53 @@ class _QueueTransport(ChannelTransport):
         for q in old.values():  # channels no longer in the cut
             self._release_queue(q)
 
+    def bricked_channels(self, channels=None) -> set:
+        """Probe each FIFO's reader lock (mp queues only — ``queue.Queue``
+        readers are threads, which cannot die holding it): a lock that stays
+        held for :data:`_BRICK_PROBE_S` with its reader host dead is the
+        corpse's.  Only probe channels whose legitimate reader is known dead
+        (the controller passes a dead host's ingress): a *live* reader
+        blocked in ``recv`` also holds the lock while waiting."""
+        out = set()
+        for chan in (list(self._queues) if channels is None else channels):
+            q = self._queues.get(chan)
+            rlock = getattr(q, "_rlock", None)
+            if rlock is None:
+                continue
+            if rlock.acquire(True, _BRICK_PROBE_S):
+                rlock.release()
+            else:
+                out.add(chan)
+        return out
+
+    def rebuild_channel(self, chan) -> bool:
+        if chan not in self._queues:
+            return False
+        self.forget_channel(chan)
+        self._queues[chan] = self._new_queue(chan, self._caps)
+        return True
+
+    def forget_channel(self, chan) -> None:
+        old = self._queues.pop(chan, None)
+        if old is None:
+            return
+        try:  # abandon the bricked FIFO; never join its feeder (it may
+            self._release_queue(old)  # be wedged mid-flush with the corpse)
+        except Exception:
+            pass
+
     def send(self, chan, ci: int, value) -> None:
         try:
             self._queues[chan].put((self.epoch, ci, self._pack(value)),
-                                   timeout=_RECV_TIMEOUT_S)
+                                   timeout=self.recv_timeout_s)
         except queue.Full:
             raise TransportError(
-                f"{self.name}: channel {chan} full for {_RECV_TIMEOUT_S}s "
-                "(consumer host stalled?)") from None
+                f"{self.name}: channel {chan} full for "
+                f"{self.recv_timeout_s}s (consumer host stalled?)") from None
 
     def recv(self, chan, ci: int):
-        deadline = _time.monotonic() + (_RECV_TIMEOUT_S if ci >= 0 else 1.0)
+        deadline = _time.monotonic() + (self.recv_timeout_s if ci >= 0
+                                        else 1.0)
         while True:
             try:
                 ep, got_ci, value = self._queues[chan].get(
@@ -293,7 +366,7 @@ class _QueueTransport(ChannelTransport):
             except queue.Empty:
                 raise TransportError(
                     f"{self.name}: channel {chan} empty for "
-                    f"{_RECV_TIMEOUT_S}s (producer host died?)") from None
+                    f"{self.recv_timeout_s}s (producer host died?)") from None
             if ci < 0:  # draining: any record at any epoch
                 if isinstance(value, str) and value == EOS:
                     return EOS
@@ -395,7 +468,9 @@ class MultiProcessPipe(_QueueTransport):
 
     def endpoint(self, host: int):
         # mp.Queues are inheritable through Process args; ship only the dict
-        return _PipeEndpoint(self._queues)
+        ep = _PipeEndpoint(self._queues)
+        ep.recv_timeout_s = self.recv_timeout_s  # keep any override
+        return ep
 
     def _pack(self, value):
         # contiguous numpy leaves cross as raw header+buffer records — the
@@ -505,11 +580,11 @@ class _ShmOps:
                              (self.epoch, ci, ("inline", pack_raw(arrs))))
             return
         try:
-            idx = ring.free_q.get(timeout=_RECV_TIMEOUT_S)
+            idx = ring.free_q.get(timeout=self.recv_timeout_s)
         except queue.Empty:
             raise TransportError(
                 f"{self.name}: channel {chan} has no free slot for "
-                f"{_RECV_TIMEOUT_S}s (consumer host stalled?)") from None
+                f"{self.recv_timeout_s}s (consumer host stalled?)") from None
         buf = self._slot(ring, idx).buf
         offset = 0
 
@@ -530,11 +605,11 @@ class _ShmOps:
 
     def _put_header(self, ring: _ShmRing, chan, item) -> None:
         try:
-            ring.data_q.put(item, timeout=_RECV_TIMEOUT_S)
+            ring.data_q.put(item, timeout=self.recv_timeout_s)
         except queue.Full:
             raise TransportError(
-                f"{self.name}: channel {chan} full for {_RECV_TIMEOUT_S}s "
-                "(consumer host stalled?)") from None
+                f"{self.name}: channel {chan} full for "
+                f"{self.recv_timeout_s}s (consumer host stalled?)") from None
 
     def _discard_header(self, ring: _ShmRing, header) -> None:
         """Drop a header, recycling its slot (the ring invariant is that
@@ -567,7 +642,8 @@ class _ShmOps:
 
     def recv(self, chan, ci: int):
         ring = self._rings[chan]
-        deadline = _time.monotonic() + (_RECV_TIMEOUT_S if ci >= 0 else 1.0)
+        deadline = _time.monotonic() + (self.recv_timeout_s if ci >= 0
+                                        else 1.0)
         while True:
             try:
                 ep, got_ci, header = ring.data_q.get(
@@ -575,7 +651,7 @@ class _ShmOps:
             except queue.Empty:
                 raise TransportError(
                     f"{self.name}: channel {chan} empty for "
-                    f"{_RECV_TIMEOUT_S}s (producer host died?)") from None
+                    f"{self.recv_timeout_s}s (producer host died?)") from None
             is_eos = header[0] == "marker" and header[1] == EOS
             if ci < 0:  # draining: any record at any epoch
                 return EOS if is_eos else self._consume_header(ring, header)
@@ -628,6 +704,7 @@ class SharedMemoryRing(_ShmOps, ChannelTransport):
         self.ctx = ctx
         self.slot_bytes = slot_bytes
         self._rings: dict = {}
+        self._caps: dict = {}   # chan -> capacity, kept for rebuilds
         self._owned: dict = {}  # chan -> created segments; we unlink them
         self._atexit_armed = False
 
@@ -647,6 +724,7 @@ class SharedMemoryRing(_ShmOps, ChannelTransport):
                         free_q, data_q)
 
     def setup(self, cut_channels, capacities) -> None:
+        self._caps.update(capacities)
         for chan in cut_channels:
             self._rings[chan] = self._make_ring(chan, capacities)
         # a process that dies without a clean close() must not strand the
@@ -657,6 +735,7 @@ class SharedMemoryRing(_ShmOps, ChannelTransport):
             self._atexit_armed = True
 
     def reconfigure(self, cut_channels, capacities) -> None:
+        self._caps.update(capacities)
         keep = set(cut_channels)
         for chan in list(self._rings):
             if chan not in keep:
@@ -664,6 +743,51 @@ class SharedMemoryRing(_ShmOps, ChannelTransport):
         for chan in cut_channels:
             if chan not in self._rings:
                 self._rings[chan] = self._make_ring(chan, capacities)
+
+    def bricked_channels(self, channels=None) -> set:
+        """A ring has TWO reader locks a corpse can hold: the header queue's
+        (consumer killed mid-``recv``) and the free-slot queue's (producer
+        killed waiting for a slot).  Either one wedges the channel."""
+        out = set()
+        for chan in (list(self._rings) if channels is None else channels):
+            ring = self._rings.get(chan)
+            if ring is None:
+                continue
+            for q in (ring.data_q, ring.free_q):
+                rlock = getattr(q, "_rlock", None)
+                if rlock is None:
+                    continue
+                if rlock.acquire(True, _BRICK_PROBE_S):
+                    rlock.release()
+                else:
+                    out.add(chan)
+                    break
+        return out
+
+    def rebuild_channel(self, chan) -> bool:
+        if chan not in self._rings:
+            return False
+        self.forget_channel(chan)
+        self._rings[chan] = self._make_ring(chan, self._caps)
+        return True
+
+    def forget_channel(self, chan) -> None:
+        if chan not in self._rings:
+            return
+        try:  # release slots + queues of the bricked ring; best effort —
+            self._release_ring(chan)  # the corpse may hold its locks
+        except Exception:
+            # a wedged queue close must not strand the segments: they are
+            # only ever unlinked through _owned, so walk it here too
+            self._rings.pop(chan, None)
+            cache = self._attached()
+            for shm in self._owned.pop(chan, ()):
+                cache.pop(shm.name, None)
+                try:
+                    shm.close()
+                    shm.unlink()
+                except Exception:
+                    pass
 
     def _release_ring(self, chan) -> None:
         ring = self._rings.pop(chan)
@@ -716,7 +840,9 @@ class SharedMemoryRing(_ShmOps, ChannelTransport):
             return False
 
     def endpoint(self, host: int):
-        return _ShmEndpoint(self._rings)
+        ep = _ShmEndpoint(self._rings)
+        ep.recv_timeout_s = self.recv_timeout_s  # keep any override
+        return ep
 
     def _unlink_owned(self) -> None:
         for slots in self._owned.values():

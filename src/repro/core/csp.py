@@ -39,7 +39,7 @@ from typing import Any, Hashable, Optional
 from .dataflow import Distribution, Kind, Network
 
 __all__ = ["CSPModel", "ExplorationResult", "check", "trace_equivalent",
-           "trace_refines"]
+           "trace_refines", "trace_chain_refines"]
 
 UT = "UT"
 DONE = ("done",)
@@ -439,3 +439,41 @@ def trace_refines(spec: Network, impl: Network, instances: int = 3,
     rs = check(spec, instances, collect_traces=True, **kw)
     ri = check(impl, instances, collect_traces=True, **kw)
     return ri.traces <= rs.traces
+
+
+def trace_chain_refines(spec: Network, impls, instances: int = 3,
+                        **kw) -> bool:
+    """The elastic control plane's §6.1.1 obligation over the WHOLE life of
+    a deployment: ``spec`` is the original network, ``impls`` the partitioned
+    models of every plan epoch it ran (epoch 1, then one per recovery).
+    Each state space is explored exactly once, then — mechanically:
+
+    1. the spec and every epoch model are deadlock-free and terminating,
+    2. every epoch model's final-outcome set equals the spec's (singleton:
+       the same result on every interleaving),
+    3. every epoch model's observable trace set is contained in the spec's
+       (``spec [T= model``), and *consecutive* epochs' trace sets are equal
+       — epoch N and N+1 are observably the same deployment, not merely
+       both valid ones.
+
+    :func:`repro.cluster.partition.check_redeployment` is the pairwise
+    (N, N+1) instance of this; the fault-injection simulator
+    (:mod:`repro.cluster.sim`) calls the chained form once per scenario
+    over every epoch its fault schedule produced — calling
+    :func:`trace_refines` pairwise instead would re-explore each epoch's
+    state space up to three times."""
+    rs = check(spec, instances, collect_traces=True, **kw)
+    if not (rs.deadlock_free and rs.all_paths_terminate
+            and len(rs.outcomes) == 1):
+        return False
+    prev_traces = None
+    for impl in impls:
+        ri = check(impl, instances, collect_traces=True, **kw)
+        if not (ri.deadlock_free and ri.all_paths_terminate):
+            return False
+        if ri.outcomes != rs.outcomes or not ri.traces <= rs.traces:
+            return False
+        if prev_traces is not None and ri.traces != prev_traces:
+            return False
+        prev_traces = ri.traces
+    return True

@@ -68,10 +68,15 @@ def cluster_report(plan, reports, events=None) -> str:
     ``plan`` is a :class:`repro.cluster.partition.PartitionPlan`; ``reports``
     a list of :class:`repro.cluster.runtime.HostReport`; ``events`` an
     optional list of :class:`repro.cluster.control.RecoveryEvent`.  Pure
-    formatting — no cluster imports, so the core stays dependency-free."""
+    formatting — no cluster imports, so the core stays dependency-free.
+
+    The rendering is DETERMINISTIC in the report/event *content*: hosts are
+    sorted, capacity merges walk reports in host order, and per-event dicts
+    render sorted — so the fault-injection simulator can assert golden
+    report snapshots regardless of which host thread reported first."""
     chosen: dict = {}  # "src->dst" -> FIFO depth actually deployed
     epoch = 1
-    for r in reports:
+    for r in sorted(reports, key=lambda r: r.host):
         chosen.update(getattr(r, "capacities", None) or {})
         epoch = max(epoch, getattr(r, "epoch", 1))
     lines = [f"== cluster: {plan.net.name} over {len(reports)} host(s), "

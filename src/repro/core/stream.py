@@ -663,6 +663,13 @@ class StreamExecutor:
                      for p in self._local_collects() if not p.jit_combine}
         return self._drive(plan, batch, start_ci, jit_accs, host_accs)
 
+    def reset_run_state(self) -> None:
+        """Forget any interrupted run (a controller is starting a fresh
+        batch or a replay-from-scratch): resume state and COMBINE carries
+        all go.  Subclasses clear whatever per-run buffers they add."""
+        self.replay_state = None
+        self._combine_carry = {}
+
     def resume_plan(self, batch=None):
         """Resume the interrupted run captured in :attr:`replay_state`:
         chunks already folded stay folded, only the lost tail streams."""

@@ -1,0 +1,87 @@
+"""Satellite: `netlog.cluster_report` renders DETERMINISTICALLY in the
+report/event content — hosts sorted, capacity merges in host order,
+per-event collections sorted — so the fault-injection simulator can assert
+golden snapshots regardless of which host thread reported first."""
+
+import jax.numpy as jnp
+
+from repro.cluster import partition
+from repro.cluster.control import RecoveryEvent
+from repro.cluster.runtime import HostReport
+from repro.core import OnePipelineCollect, netlog
+
+
+def _plan():
+    net = OnePipelineCollect(
+        create=lambda i: jnp.asarray(float(i)),
+        stage_ops=[lambda x: x * x, lambda x: x + 1.0],
+        collector=lambda a, x: a + x, init=jnp.asarray(0.0),
+        jit_combine=True)
+    return partition(net, assignment={"emit": 0, "stage0": 0,
+                                      "stage1": 1, "collect": 1})
+
+
+def _reports(order):
+    by_host = {
+        0: HostReport(host=0, procs=["emit", "stage0"], ok=True,
+                      stats_summary="stream: 4 chunks", epoch=2,
+                      capacities={"stage0->stage1": 3}),
+        1: HostReport(host=1, procs=["stage1", "collect"], ok=True,
+                      stats_summary="stream: 4 chunks", epoch=2,
+                      capacities={"stage0->stage1": 3}),
+    }
+    return [by_host[h] for h in order]
+
+
+def _event():
+    return RecoveryEvent(
+        epoch_from=1, epoch_to=2, mode="restart",
+        dead=[1, 0], erred=[], stalled={1: 2, 0: 1},
+        restarted=[1, 0], moved={},
+        requeued={"stage0->stage1": [2, 3]}, discarded=1,
+        replay_from={1: 2, 0: 0}, refined=True, wall_s=0.25,
+        bricked=["stage0->stage1"])
+
+
+class TestClusterReportDeterminism:
+    def test_report_independent_of_report_order(self):
+        plan = _plan()
+        ev = _event()
+        a = netlog.cluster_report(plan, _reports([0, 1]), events=[ev])
+        b = netlog.cluster_report(plan, _reports([1, 0]), events=[ev])
+        assert a == b
+
+    def test_event_collections_render_sorted(self):
+        line = _event().describe()
+        assert "dead hosts [0, 1]" in line          # input was [1, 0]
+        assert "restarted [0, 1]" in line
+        assert ("stalled host 0 at chunk 1, host 1 at chunk 2"
+                in line)
+        assert ("replayed host 0 from chunk 0, host 1 from chunk 2"
+                in line)
+
+    def test_golden_snapshot(self):
+        """Full golden render — the stability contract the sim harness
+        relies on.  An intentional formatting change must update this
+        snapshot consciously."""
+        plan = _plan()
+        got = netlog.cluster_report(plan, _reports([1, 0]),
+                                    events=[_event()])
+        want = "\n".join([
+            "== cluster: pipeline over 2 host(s), plan epoch 2 ==",
+            "  channel stage0 -> stage1: host 0 -> 1 (capacity=3)",
+            "-- host 0 [ok]: emit, stage0",
+            "   stream: 4 chunks",
+            "-- host 1 [ok]: stage1, collect",
+            "   stream: 4 chunks",
+            "-- recovery --",
+            "   epoch 1 -> 2 (restart); dead hosts [0, 1]; "
+            "stalled host 0 at chunk 1, host 1 at chunk 2; "
+            "bricked ingress FIFO stage0->stage1; "
+            "restarted [0, 1]; "
+            "requeued 2 [stage0->stage1:[2, 3]] / discarded 1 "
+            "in-flight chunks; "
+            "replayed host 0 from chunk 0, host 1 from chunk 2; "
+            "refinement(epoch 2)=True; wall 0.25s",
+        ])
+        assert got == want
