@@ -1,9 +1,9 @@
 """Regenerate the §Perf tables from the recorded artifacts
 (results/dryrun + results/perf) — the EXPERIMENTS.md tables are derived,
 never hand-maintained.  Also renders the runtime benchmark artifacts
-(BENCH_stream.json + BENCH_cluster.json) as one table, so the cluster
-cold-vs-warm trajectory sits next to the streaming rows it is measured
-against.
+(BENCH_stream.json + BENCH_cluster.json + BENCH_serve.json) as one table,
+so the cluster cold-vs-warm trajectory and the serving latency rows sit
+next to the streaming rows they are measured against.
 
     PYTHONPATH=src python -m benchmarks.perf_report
 """
@@ -89,12 +89,13 @@ def markdown() -> str:
 
 
 def bench_rows() -> list[dict]:
-    """Stream + cluster benchmark rows, one flat list.  A fresh clone has
+    """Stream + cluster + serve benchmark rows, one flat list.  A fresh clone has
     no ``BENCH_*.json`` artifacts (and an interrupted benchmark may leave a
     truncated one): those surface as explicit ``not run`` rows instead of
     crashing the report — the table always renders, exit code 0."""
     out = []
-    for fname in ("BENCH_stream.json", "BENCH_cluster.json"):
+    for fname in ("BENCH_stream.json", "BENCH_cluster.json",
+                  "BENCH_serve.json"):
         path = os.path.join(REPO_DIR, fname)
         suite = fname.replace("BENCH_", "").replace(".json", "")
         if not os.path.exists(path):

@@ -1,0 +1,195 @@
+"""``serve`` benchmark: request-level continuous batching under load.
+
+The serving engine's promise is that batching is a *throughput* transform,
+never a numerical one — so every row here is gated on the engine's token
+streams being bit-identical to sequential per-request generation, and the
+latency distributions are what the batching actually buys:
+
+* ``serve_steady_tpot``      — closed loop (every request queued up front),
+  the steady decode regime: µs per generated token through the warm
+  slot batch, plus the per-step latency spread,
+* ``serve_ttft_r<R>`` /
+  ``serve_tpot_r<R>``        — open loop: a seeded Poisson arrival trace at
+  R requests/s replayed against the live engine; TTFT (queue wait +
+  chunked prefill + first decode) and per-token latency, p50/p99 over
+  the completed responses,
+* ``serve_cluster_steady``   — the same closed loop with the decode farm
+  parked warm on a 2-host :class:`ClusterDeployment` (inprocess
+  transport): what request-level batching costs when every decode chunk
+  crosses the cut channels.
+
+    PYTHONPATH=src python -m benchmarks.serve --smoke   # BENCH_serve.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import random
+import sys
+import time
+
+
+def _pct(xs: list, q: float) -> float:
+    ys = sorted(xs)
+    return ys[min(len(ys) - 1, int(len(ys) * q / 100.0))]
+
+
+def _mk_reqs(n: int, vocab: int, seed: int, max_new: int) -> list:
+    from repro.serve import Request
+    rng = random.Random(seed)
+    return [Request(rid=i,
+                    prompt=tuple(rng.randrange(1, vocab)
+                                 for _ in range(rng.randrange(1, 9))),
+                    max_new=rng.randrange(max(max_new // 2, 1), max_new + 1))
+            for i in range(n)]
+
+
+def _oracle(model, params, reqs, max_len: int) -> dict:
+    """Sequential per-request token streams: one request at a time through
+    a single-slot engine — the bit-identity reference for every row."""
+    from repro.serve import LocalDecodeBackend, ServeEngine
+    expect = {}
+    for r in reqs:
+        eng = ServeEngine(LocalDecodeBackend(model, params, n_slots=1,
+                                             max_len=max_len))
+        eng.submit(r)
+        eng.run_until_drained()
+        expect[r.rid] = eng.poll(r.rid).tokens
+    return expect
+
+
+def _identical(eng, reqs, expect) -> bool:
+    return all(eng.poll(r.rid) is not None
+               and eng.poll(r.rid).tokens == expect[r.rid] for r in reqs)
+
+
+def _closed_loop(backend, reqs):
+    """All requests queued up front; returns (engine, per-step walls)."""
+    from repro.serve import ServeEngine
+    eng = ServeEngine(backend)
+    for r in reqs:
+        eng.submit(r)
+    walls = []
+    while eng.pending or eng._live:
+        t0 = time.perf_counter()
+        eng.step()
+        walls.append(time.perf_counter() - t0)
+    return eng, walls
+
+
+def _open_loop(backend, reqs, rate: float, seed: int):
+    """Replay a seeded Poisson arrival trace at ``rate`` req/s."""
+    from repro.serve import ServeEngine
+    rng = random.Random(seed)
+    due, t = [], 0.0
+    for _ in reqs:
+        t += rng.expovariate(rate)
+        due.append(t)
+    eng = ServeEngine(backend)
+    t0 = time.monotonic()
+    i = 0
+    while i < len(reqs) or eng.pending or eng._live:
+        now = time.monotonic() - t0
+        while i < len(reqs) and due[i] <= now:
+            eng.submit(reqs[i])
+            i += 1
+        if eng.pending or eng._live:
+            eng.step()
+        elif i < len(reqs):
+            time.sleep(max(0.0, due[i] - (time.monotonic() - t0)))
+    return eng
+
+
+def run(*, smoke: bool = False, hosts: int = 2) -> list:
+    from repro.serve import ClusterDecodeBackend, LocalDecodeBackend
+    from repro.serve.engine import build_decode_model
+
+    spec = ("toy", 32, 8)
+    n_slots, max_len = 4, 64
+    if smoke:
+        n_req, max_new, rates = 10, 8, (50.0, 200.0)
+    else:
+        n_req, max_new, rates = 48, 16, (20.0, 100.0, 400.0)
+    model, params = build_decode_model(spec)
+    reqs = _mk_reqs(n_req, spec[1], seed=0, max_new=max_new)
+    expect = _oracle(model, params, reqs, max_len)
+    total_toks = sum(len(v) for v in expect.values())
+
+    backend = LocalDecodeBackend(model, params, n_slots=n_slots,
+                                 max_len=max_len)
+    # warm the jits so the steady rows measure the regime, not compilation
+    _closed_loop(backend, _mk_reqs(4, spec[1], seed=99, max_new=4))
+
+    rows = []
+    eng, walls = _closed_loop(backend, reqs)
+    same = _identical(eng, reqs, expect)
+    decode_s = sum(walls)
+    rows.append(("serve_steady_tpot", decode_s / total_toks * 1e6,
+                 f"identical={same} slots={n_slots} toks={total_toks} "
+                 f"tok_s={total_toks / decode_s:.0f} "
+                 f"occupancy={total_toks / max(eng.steps_run, 1):.2f} "
+                 f"step_p50_us={_pct(walls, 50) * 1e6:.0f} "
+                 f"step_p99_us={_pct(walls, 99) * 1e6:.0f}"))
+
+    for rate in rates:
+        eng = _open_loop(backend, reqs, rate, seed=1)
+        same = _identical(eng, reqs, expect)
+        done = list(eng.completed)
+        ttfts = [r.ttft * 1e6 for r in done]
+        tpots = [r.tpot * 1e6 for r in done if len(r.tokens) > 1]
+        tag = f"{rate:g}"
+        rows.append((f"serve_ttft_r{tag}", _pct(ttfts, 50),
+                     f"identical={same} rate={tag}/s n={len(done)} "
+                     f"p50_us={_pct(ttfts, 50):.0f} "
+                     f"p99_us={_pct(ttfts, 99):.0f}"))
+        rows.append((f"serve_tpot_r{tag}", _pct(tpots, 50),
+                     f"identical={same} rate={tag}/s n={len(tpots)} "
+                     f"p50_us={_pct(tpots, 50):.0f} "
+                     f"p99_us={_pct(tpots, 99):.0f}"))
+
+    cbackend = ClusterDecodeBackend(spec, n_slots=n_slots, shards=2,
+                                    hosts=hosts, transport="inprocess",
+                                    max_len=max_len)
+    try:
+        # cold pass pays host spawn + stage jits; the timed pass is warm
+        _closed_loop(cbackend, _mk_reqs(4, spec[1], seed=99, max_new=4))
+        eng, walls = _closed_loop(cbackend, reqs)
+        same = _identical(eng, reqs, expect)
+        decode_s = sum(walls)
+        rows.append(("serve_cluster_steady", decode_s / total_toks * 1e6,
+                     f"identical={same} hosts={hosts} slots={n_slots} "
+                     f"toks={total_toks} "
+                     f"tok_s={total_toks / decode_s:.0f} "
+                     f"step_p50_us={_pct(walls, 50) * 1e6:.0f} "
+                     f"step_p99_us={_pct(walls, 99) * 1e6:.0f} "
+                     f"recoveries={cbackend.recoveries}"))
+    finally:
+        cbackend.close()
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--hosts", type=int, default=2)
+    args = ap.parse_args()
+    rows = run(smoke=args.smoke, hosts=args.hosts)
+    print("name,us_per_call,derived")
+    blob = []
+    for name, us, derived in rows:
+        print(f"{name},{us:.2f},{derived}")
+        blob.append({"name": name, "us_per_call": us, "derived": derived})
+    if any("identical=False" in r["derived"] for r in blob):
+        print("serve benchmark: token streams diverged from the "
+              "sequential oracle", file=sys.stderr)
+        sys.exit(1)
+    with open("BENCH_serve.json", "w") as f:
+        json.dump({"benchmark": "serve",
+                   "mode": "smoke" if args.smoke else "full",
+                   "hosts": args.hosts, "rows": blob}, f, indent=2)
+    print("wrote BENCH_serve.json", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -133,6 +133,14 @@ def _has_real_emit(sub: Network) -> bool:
     return any(not is_shim(e.name) for e in sub.emits())
 
 
+def _host_shape(plan, h) -> tuple:
+    """What a host's worker is wired to: its processes and cut channels.
+    A replan only restarts hosts whose shape changed."""
+    return (tuple(plan.procs_of(h)),
+            tuple((c.src, c.dst) for c in plan.ingress_of(h)),
+            tuple((c.src, c.dst) for c in plan.egress_of(h)))
+
+
 def _serve_host(sub, ex, plan, host, endpoint, work_q, result_q,
                 encode=False) -> None:
     """The warm-host loop: park on the work queue, stream each batch through
@@ -728,6 +736,19 @@ class ClusterController:
             if replay and pending_batch is not None:
                 result = self._replay(pending_batch, stalled, ok_cache,
                                       requeued_map, ev)
+                # a resumed consumer consumes fewer records than the
+                # replaying producer re-sends: whatever it had already
+                # folded before the failure arrives again and lingers in
+                # the FIFO after its stream ends.  Those leftovers carry
+                # the CURRENT epoch, so the next batch would misread them
+                # as its own chunks — harmless when every batch carries
+                # identical payloads (the PR 5 scenarios), silently wrong
+                # the moment batches differ (found by the serving
+                # simulator: a stale decode shard aliasing the next
+                # step's).  Every host is idle once the replay's results
+                # are in, so sweep the cut channels clean here.
+                for chan, (kept, dropped) in self.transport.drain().items():
+                    ev.discarded += dropped + len(kept)
         finally:
             ev.wall_s = time.monotonic() - t0
             self.events.append(ev)
@@ -744,15 +765,9 @@ class ClusterController:
                     for p in new_assign
                     if old_plan.assignment[p] != new_assign[p]}
         new_caps = derive_cut_capacities(new_plan, self.cfg)
-
-        def _shape(plan, h):  # what a host's worker is wired to
-            return (tuple(plan.procs_of(h)),
-                    tuple((c.src, c.dst) for c in plan.ingress_of(h)),
-                    tuple((c.src, c.dst) for c in plan.egress_of(h)))
-
         changed = [h for h in new_plan.hosts()
                    if h in old_plan.hosts()
-                   and _shape(old_plan, h) != _shape(new_plan, h)]
+                   and _host_shape(old_plan, h) != _host_shape(new_plan, h)]
         dropped = [h for h in old_plan.hosts()
                    if h not in new_plan.hosts()]
         self.plan = new_plan
@@ -774,6 +789,91 @@ class ClusterController:
             if h not in changed:
                 self.restart_host(h)
                 ev.restarted.append(h)
+
+    # -- elasticity for capacity (not failure) ------------------------------
+    def reconfigure(self, *, hosts: Optional[int] = None,
+                    plan: Optional[PartitionPlan] = None) -> RecoveryEvent:
+        """Re-fit the SAME network to a different host count — scale-out or
+        scale-in of a live deployment, between batches, as an epoch bump
+        rather than a restart.
+
+        This is :meth:`recover`'s machinery applied to a capacity change:
+        drain the transports (leftover records of the old epoch are
+        discarded), swap in the new plan, reconfigure the cut channels,
+        stop hosts the plan dropped / restart hosts whose wiring changed /
+        spawn hosts the plan added, bump the epoch so stale records are
+        invisible, and re-prove the §6.1.1 refinement
+        (:func:`check_redeployment`) for the new mapping.  Hosts whose
+        shape is unchanged keep their warm executors and compiled jits.
+
+        Returns the :class:`RecoveryEvent` (``mode="reconfigure"``).  Call
+        between batches; a pending failure is auto-recovered (without
+        replay) first, exactly as :meth:`run_batch` would."""
+        if self._closed:
+            raise NetworkError("ClusterDeployment: already closed")
+        if (hosts is None) == (plan is None):
+            raise NetworkError(
+                "reconfigure: need exactly one of hosts= or plan=")
+        self.start()
+        if self._needs_recovery:
+            self.recover(replay=False)
+        t0 = time.monotonic()
+        old_plan = self.plan
+        new_plan = (plan if plan is not None
+                    else partition(self.net, hosts=hosts))
+        added = [h for h in new_plan.hosts() if h not in old_plan.hosts()]
+        if added and isinstance(self.transport, JaxMesh):
+            # submesh slots are assigned once at start() and survive every
+            # replan (a live host's compiled jits are pinned to its
+            # devices) — a jaxmesh deployment can shrink but not grow
+            raise NetworkError(
+                f"reconfigure: the jaxmesh transport cannot add hosts "
+                f"{added} to a live deployment (device submeshes are "
+                "fixed at start); deploy with the final host count or "
+                "use a queue transport")
+        ev = RecoveryEvent(
+            epoch_from=self.epoch, epoch_to=self.epoch + 1,
+            mode="reconfigure", dead=[], erred=[], stalled={},
+            restarted=[], moved={}, requeued={}, discarded=0,
+            replay_from={})
+        # nothing is in flight between batches, but a failed earlier batch
+        # may have left records behind: sweep them under the old epoch
+        for chan, (kept, dropped) in self.transport.drain().items():
+            ev.discarded += dropped + len(kept)
+        self._kept = {}
+        ev.moved = {p: (old_plan.assignment[p], new_plan.assignment[p])
+                    for p in new_plan.assignment
+                    if old_plan.assignment.get(p) != new_plan.assignment[p]}
+        new_caps = derive_cut_capacities(new_plan, self.cfg)
+        changed = [h for h in new_plan.hosts()
+                   if h in old_plan.hosts()
+                   and _host_shape(old_plan, h) != _host_shape(new_plan, h)]
+        dropped_hosts = [h for h in old_plan.hosts()
+                         if h not in new_plan.hosts()]
+        self.plan = new_plan
+        self.capacities = new_caps
+        self._live = new_plan.hosts()
+        self.transport.reconfigure(
+            [(c.src, c.dst) for c in new_plan.cut], new_caps)
+        self._bind_meshes()
+        for h in dropped_hosts:
+            self.stop_host(h)
+            self._work_qs.pop(h, None)
+        for h in changed:
+            self.restart_host(h)
+            ev.restarted.append(h)
+        for h in added:
+            self.spawn_host(h)
+            ev.restarted.append(h)
+        self.epoch += 1
+        self.transport.set_epoch(self.epoch)
+        try:
+            ev.refined = check_redeployment(self.net, old_plan, self.plan)
+        except Exception:
+            ev.refined = False
+        ev.wall_s = time.monotonic() - t0
+        self.events.append(ev)
+        return ev
 
     def _host_stateful(self, h: int) -> bool:
         """A host whose partition folds state across chunks (a real Collect

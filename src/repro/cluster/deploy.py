@@ -170,6 +170,15 @@ class ClusterDeployment:
         """Respawn one host's worker against the warm transport."""
         self.controller.restart_host(host)
 
+    def reconfigure(self, *, hosts: Optional[int] = None, plan=None):
+        """Re-fit the same network to a different host count between
+        batches — scale-out/in as an epoch-bumped replan, not a restart
+        (see :meth:`ClusterController.reconfigure`).  Hosts whose wiring
+        is unchanged keep their warm compiled jits.  Returns the
+        :class:`~repro.cluster.control.RecoveryEvent`
+        (``mode="reconfigure"``, ``refined`` = the §6.1.1 re-proof)."""
+        return self.controller.reconfigure(hosts=hosts, plan=plan)
+
     # -- execution ---------------------------------------------------------
     def run(self, instances: Optional[int] = None, *,
             batch=None) -> ClusterResult:

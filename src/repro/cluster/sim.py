@@ -41,7 +41,12 @@ controlled failure schedules; this module is that harness:
 ``python -m repro.cluster.sim --seeds 50`` sweeps 50 seeded schedules;
 ``--pipe-brick`` runs the once-bricked mid-``recv`` SIGKILL scenario on the
 real ``pipe`` transport (the ROADMAP open item this harness reproduced and
-closed).  Both are CI gates (the ``sim-fuzz`` step of the cluster lane).
+closed); ``--serve-kill N`` runs N seeded kill-during-serving scenarios —
+a live :class:`~repro.serve.ServeEngine` over the clustered decode farm,
+hosts dying between decode chunks, asserting every accepted request is
+answered exactly once and bit-identical to the sequential oracle.  All are
+CI gates (the ``sim-fuzz`` step of the cluster lane, the serving kill in
+the serve lane).
 """
 
 from __future__ import annotations
@@ -75,6 +80,7 @@ __all__ = [
     "ScenarioResult",
     "run_scenario",
     "run_pipe_brick_scenario",
+    "run_serve_kill_scenario",
     "main",
 ]
 
@@ -876,6 +882,133 @@ def run_pipe_brick_scenario(timeout_s: float = 30.0,
 
 
 # ==========================================================================
+# Kill-during-serving: faults under a live ServeEngine (PR 6)
+# ==========================================================================
+
+def run_serve_kill_scenario(seed: int, *, clock_budget: int = 2_000_000,
+                            timeout_s: float = 60.0) -> ScenarioResult:
+    """One seeded fault schedule against a live :class:`~repro.serve
+    .ServeEngine` over the clustered decode farm.
+
+    The engine streams a seeded request trace (arrival pattern, prompt
+    lengths, token budgets all fixed by the seed) through a
+    :class:`~repro.serve.ClusterDecodeBackend` whose deployment rides this
+    module's :class:`SimTransport`; the schedule kills or stalls hosts at
+    exact protocol steps *between decode chunks* — mid-prefill, mid-decode,
+    while parked, or during the recovery the first kill provoked.  The
+    serving guarantee under fire: every accepted request is answered
+    **exactly once**, each token stream bit-identical to the sequential
+    per-request oracle, no ``(epoch, ci)`` record delivered twice within
+    any farm step (recovery replays included), and every epoch bump
+    re-proves the §6.1.1 refinement."""
+    from repro.serve import (ClusterDecodeBackend, LocalDecodeBackend,
+                             Request, ServeEngine)
+    from repro.serve.engine import build_decode_model, make_decode_farm
+
+    rng = random.Random(seed)
+    spec = ("toy", 32, 8)
+    n_slots, shards, max_len, pchunk = 4, 2, 32, 4
+    hosts = rng.choice((2, 3))
+    reqs = [Request(rid=i,
+                    prompt=tuple(rng.randrange(1, 32)
+                                 for _ in range(rng.randrange(1, 7))),
+                    max_new=rng.randrange(1, 7))
+            for i in range(rng.randrange(5, 9))]
+
+    # sequential oracle: each request alone through a single-slot engine
+    model, params = build_decode_model(spec)
+    expect = {}
+    for r in reqs:
+        oeng = ServeEngine(LocalDecodeBackend(
+            model, params, n_slots=1, max_len=max_len,
+            prefill_chunk=pchunk))
+        oeng.submit(r)
+        oeng.run_until_drained()
+        expect[r.rid] = oeng.poll(r.rid).tokens
+
+    net = make_decode_farm(spec, n_slots, shards, max_len, pchunk)
+    plan = partition(net, hosts=hosts)
+    schedule = FaultSchedule.random(rng, plan)
+    clock = SimClock(clock_budget)
+    transport = SimTransport(schedule, clock, rebuildable=True)
+
+    failures: list = []
+    be = None
+    events: list = []
+    eng = None
+    try:
+        be = ClusterDecodeBackend(
+            spec, n_slots=n_slots, shards=shards, hosts=hosts,
+            transport=transport, max_len=max_len, prefill_chunk=pchunk,
+            timeout_s=timeout_s, max_recover_attempts=8)
+        ctrl = be.dep.controller
+        ctrl.poll_s = 0.05
+        transport.track_hosts(ctrl._procs)
+
+        # every farm step opens a fresh duplicate-monitor window: within
+        # one step (and all its recovery replays, each at a bumped epoch)
+        # (epoch, ci) must be unique per channel; across steps the same
+        # epoch legitimately reuses them
+        inner = be._run
+
+        def run_stream(batch):
+            transport.begin_stream()
+            return inner(batch)
+
+        be._run = run_stream
+        eng = ServeEngine(be)
+        # cold step first (spawn + stage jits = the warm baseline), then
+        # arm the schedule so `at` counts protocol steps deterministically
+        eng.submit(reqs[0])
+        eng.step()
+        schedule.arm()
+        i = 1
+        while i < len(reqs) or eng.pending or eng._live:
+            # seeded arrival trickle; always admit when the farm is idle
+            while i < len(reqs) and (rng.random() < 0.5
+                                     or not (eng.pending or eng._live)):
+                eng.submit(reqs[i])
+                i += 1
+            eng.step()
+        events = list(ctrl.events)
+    except (NetworkError, SimLivelock, RuntimeError) as e:
+        failures.append(f"{type(e).__name__}: {e}")
+        if be is not None:
+            events = list(be.dep.controller.events)
+    finally:
+        if be is not None:
+            try:
+                be.close()
+            except Exception:
+                pass
+
+    # -- the serving invariants --------------------------------------------
+    if eng is not None:
+        answered = [resp.rid for resp in eng.completed]
+        for r in reqs:
+            n = answered.count(r.rid)
+            if n != 1:
+                failures.append(
+                    f"request {r.rid} answered {n} times (want exactly 1)")
+                continue
+            got = eng.poll(r.rid).tokens
+            if got != expect[r.rid]:
+                failures.append(
+                    f"request {r.rid}: tokens {got} != sequential oracle "
+                    f"{expect[r.rid]}")
+    failures.extend(transport.violations)  # duplicate (epoch, ci) records
+    for ev in events:
+        if ev.refined is not True:
+            failures.append(
+                f"epoch {ev.epoch_to}: check_redeployment failed")
+    return ScenarioResult(
+        seed=seed, kind=f"serve/{schedule.kind}", topology="decode-farm",
+        hosts=hosts, schedule=schedule.describe(),
+        fired=sum(ev.fired for ev in schedule.events),
+        recoveries=len(events), ticks=clock.ticks, failures=failures)
+
+
+# ==========================================================================
 # CLI: python -m repro.cluster.sim --seeds 50
 # ==========================================================================
 
@@ -890,6 +1023,9 @@ def main(argv=None) -> int:
     ap.add_argument("--pipe-brick", action="store_true",
                     help="run ONLY the mid-recv SIGKILL scenario on the "
                          "real pipe transport (the closed ROADMAP item)")
+    ap.add_argument("--serve-kill", type=int, default=0, metavar="N",
+                    help="run ONLY N seeded kill-during-serving scenarios "
+                         "(live ServeEngine over the clustered decode farm)")
     ap.add_argument("--verbose", action="store_true")
     args = ap.parse_args(argv)
 
@@ -898,6 +1034,12 @@ def main(argv=None) -> int:
     if args.pipe_brick:
         results.append(run_pipe_brick_scenario(verbose=args.verbose))
         print(results[-1].describe())
+    elif args.serve_kill:
+        for seed in range(args.seed_start,
+                          args.seed_start + args.serve_kill):
+            r = run_serve_kill_scenario(seed)
+            results.append(r)
+            print(r.describe())
     else:
         for seed in range(args.seed_start, args.seed_start + args.seeds):
             r = run_scenario(seed)

@@ -57,6 +57,8 @@ __all__ = [
     "microbatch_plan",
     "slice_microbatch",
     "stack_microbatches",
+    "SlotEvent",
+    "SlotPlan",
     "fused_chains",
     "plan_depth_lanes",
     "EmitChunks",
@@ -113,6 +115,81 @@ def stack_microbatches(batch, n_micro: int):
         return leaf.reshape(n_micro, b // n_micro, *leaf.shape[1:])
 
     return jax.tree_util.tree_map(_one, batch)
+
+
+# ==========================================================================
+# Slot-batch plans (continuous batching: requests join/leave between chunks)
+# ==========================================================================
+
+@dataclasses.dataclass(frozen=True)
+class SlotEvent:
+    """One admission-queue transition: request ``rid`` joined or left slot
+    ``slot`` between decode chunks ``step - 1`` and ``step``."""
+
+    step: int
+    kind: str   # "join" | "leave"
+    slot: int
+    rid: int
+
+
+class SlotPlan:
+    """Which request owns which row of a slot-batched decode step.
+
+    The serving engine's counterpart of :func:`microbatch_plan`: where a
+    batch plan schedules a *fixed* item set into chunks, a slot plan
+    schedules an *open-ended* request stream into a fixed row set — requests
+    ``claim`` the lowest free slot when they join between decode chunks
+    (the OneFanAny any-channel at request level) and ``release`` it when
+    they finish, and every transition lands in :attr:`events` so an
+    admission trace can be replayed or audited."""
+
+    def __init__(self, n_slots: int):
+        if n_slots <= 0:
+            raise NetworkError(f"SlotPlan: n_slots must be > 0, got {n_slots}")
+        self.n_slots = n_slots
+        self.step = 0                       # decode chunks ticked so far
+        self.events: list[SlotEvent] = []
+        self._owner: list[Optional[int]] = [None] * n_slots
+
+    @property
+    def n_free(self) -> int:
+        return sum(o is None for o in self._owner)
+
+    def owner(self, slot: int) -> Optional[int]:
+        return self._owner[slot]
+
+    def claim(self, rid: int) -> int:
+        """Seat ``rid`` in the lowest free slot; raises when the batch is
+        full (admission must wait for a leave)."""
+        for s, owner in enumerate(self._owner):
+            if owner is None:
+                self._owner[s] = rid
+                self.events.append(SlotEvent(self.step, "join", s, rid))
+                return s
+        raise NetworkError(f"SlotPlan: no free slot for request {rid}")
+
+    def release(self, slot: int) -> int:
+        """Free ``slot``; returns the rid that held it."""
+        rid = self._owner[slot]
+        if rid is None:
+            raise NetworkError(f"SlotPlan: slot {slot} is already free")
+        self._owner[slot] = None
+        self.events.append(SlotEvent(self.step, "leave", slot, rid))
+        return rid
+
+    def active(self) -> list[tuple[int, int]]:
+        """``[(slot, rid), ...]`` for the occupied rows, slot order."""
+        return [(s, r) for s, r in enumerate(self._owner) if r is not None]
+
+    def mask(self):
+        """(n_slots,) bool advance mask for the batched decode step."""
+        import numpy as np
+        return np.array([o is not None for o in self._owner], bool)
+
+    def tick(self) -> None:
+        """One decode chunk retired; joins/leaves now belong to the gap
+        before the next chunk."""
+        self.step += 1
 
 
 # ==========================================================================

@@ -1,0 +1,36 @@
+"""Shared launcher flag surface.
+
+Every launcher that touches a model takes ``--arch/--reduced``; every one
+that can deploy across hosts takes ``--hosts/--transport``.  Factoring the
+definitions here keeps the CLIs mirror images of each other (the serve
+launcher's cluster flags mean exactly what the cluster launcher's do)
+instead of five argparse blocks drifting apart.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+TRANSPORTS = ["inprocess", "pipe", "shm", "jaxmesh"]
+
+
+def add_model_flags(ap: argparse.ArgumentParser, *,
+                    required: bool = True) -> argparse.ArgumentParser:
+    ap.add_argument("--arch", required=required,
+                    help="model architecture name (see repro.configs)")
+    ap.add_argument("--reduced", action="store_true",
+                    help="CI-sized config: same wiring, tiny dims")
+    return ap
+
+
+def add_cluster_flags(ap: argparse.ArgumentParser, *,
+                      default_hosts: int = 2,
+                      default_transport: str = "pipe") -> argparse.ArgumentParser:
+    ap.add_argument("--hosts", type=int, default=default_hosts,
+                    help="simulated host count"
+                         + (" (0 = stay in-process, no deployment)"
+                            if default_hosts == 0 else ""))
+    ap.add_argument("--transport", default=default_transport,
+                    choices=TRANSPORTS,
+                    help="cut-channel transport between hosts")
+    return ap

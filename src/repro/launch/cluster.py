@@ -13,6 +13,8 @@ from __future__ import annotations
 
 import argparse
 
+from ._common import add_cluster_flags
+
 
 # module-level factories: the pipe transport spawns fresh interpreters that
 # rebuild the network from a picklable (callable, args) recipe
@@ -53,9 +55,7 @@ def make_pipeline(scale: float):
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--hosts", type=int, default=2)
-    ap.add_argument("--transport", default="pipe",
-                    choices=["inprocess", "pipe", "shm", "jaxmesh"])
+    add_cluster_flags(ap, default_hosts=2, default_transport="pipe")
     ap.add_argument("--workload", default="mandelbrot",
                     choices=["mandelbrot", "pipeline"])
     ap.add_argument("--instances", type=int, default=8)

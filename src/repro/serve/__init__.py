@@ -1,3 +1,20 @@
-"""Serving substrate: continuous-batching farm scheduler + decode steps."""
+"""Serving: request-level continuous batching, single-host or clustered.
 
-from .scheduler import FarmScheduler, Request  # noqa: F401
+The API is :class:`Request` in, :class:`Response` out, through a
+:class:`ServeEngine` over a decode backend — :class:`LocalDecodeBackend`
+(one jitted slot-batched step in this process) or
+:class:`ClusterDecodeBackend` (the decode farm parked warm on a
+:class:`~repro.cluster.deploy.ClusterDeployment`, with epoch-bumped
+``scale()``).  :class:`FarmScheduler` is the deprecated PR 1 surface, kept
+as a shim.
+"""
+
+from .engine import (ClusterDecodeBackend, LocalDecodeBackend,  # noqa: F401
+                     Request, Response, ServeEngine,
+                     build_decode_model, make_decode_farm)
+from .scheduler import FarmScheduler  # noqa: F401
+from .toy import ToyLM  # noqa: F401
+
+__all__ = ["Request", "Response", "ServeEngine", "LocalDecodeBackend",
+           "ClusterDecodeBackend", "build_decode_model", "make_decode_farm",
+           "FarmScheduler", "ToyLM"]

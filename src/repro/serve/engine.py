@@ -1,0 +1,581 @@
+"""Request-level continuous batching over a warm cluster deployment.
+
+This is ROADMAP item 1 — the paper's §7 "millions of users" serving path —
+built from the pieces PRs 1–5 left on the table:
+
+* the **admission queue** coalesces live requests into a slot-batched
+  decode step (:class:`repro.core.stream.SlotPlan`): new requests join
+  between decode chunks by claiming the lowest free slot, finished ones
+  leave and free it — the OneFanAny any-channel at request level;
+* **chunked prefill** streams prompt context through the same
+  :func:`repro.core.stream.microbatch_plan` schedule as everything else in
+  the repo (one dispatch per chunk, not per token);
+* the decode step itself runs either in-process
+  (:class:`LocalDecodeBackend` — PR 1's single-host farm) or as a **parked
+  warm GPP farm** on a persistent :class:`~repro.cluster.deploy
+  .ClusterDeployment` (:class:`ClusterDecodeBackend`): each farm step is
+  one batch whose items are *decode shards* — a worker's slice of the slot
+  batch, cache included, flowing Emit → OneFanAny → decode workers →
+  AnyFanOne → Collect.  The farm processes are stateless; the serving
+  state rides the items, exactly the process-oriented discipline of the
+  paper (§4.4), which is also what makes recovery trivial to reason about:
+  a host failure mid-step raises, :meth:`ClusterDeployment.recover`
+  replays the lost chunks from the same input items, and the engine
+  observes a completed, bit-identical step — no request lost, none
+  duplicated;
+* **scale-out** of the decode farm is an epoch-bumped
+  :meth:`~repro.cluster.control.ClusterController.reconfigure` — PR 4's
+  drain + ``check_redeployment`` proof applied to a capacity change
+  instead of a failure — not a restart: the admission queue keeps its
+  state and in-flight requests keep their caches across the bump.
+
+The public API is deliberately small and immutable: :class:`Request` in,
+:class:`Response` out (tokens, timing, finish reason), via
+``submit() -> rid`` / ``poll(rid)`` / ``run_until_drained()``.  The PR 1
+``FarmScheduler`` survives as a deprecated shim over this engine
+(:mod:`repro.serve.scheduler`).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.dataflow import (Distribution, Kind, Network, NetworkError,
+                                 ProcessDef)
+from repro.core.processes import (AnyFanOne, Collect, Emit, OneFanAny,
+                                  Worker)
+from repro.core.stream import SlotPlan, microbatch_plan
+
+__all__ = ["Request", "Response", "ServeEngine", "LocalDecodeBackend",
+           "ClusterDecodeBackend", "build_decode_model", "make_decode_farm"]
+
+
+# ==========================================================================
+# The immutable request/response surface
+# ==========================================================================
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    """One generation request.  Immutable: the engine never writes into it
+    (the PR 1 contract of mutating ``Request.generated`` in place is gone —
+    results arrive as a :class:`Response`)."""
+
+    rid: int
+    prompt: tuple
+    max_new: int = 16
+
+    def __post_init__(self):
+        object.__setattr__(self, "prompt", tuple(self.prompt))
+
+
+@dataclasses.dataclass(frozen=True)
+class Response:
+    """The completed request: generated tokens, timing, finish reason.
+
+    ``finish_reason`` is ``"length"`` (``max_new`` reached, including the
+    degenerate ``max_new=0``) or ``"eos"``.  Timestamps come from the
+    engine's clock (``time_fn``): ``first_token_at`` is None only when no
+    token was generated."""
+
+    rid: int
+    prompt: tuple
+    tokens: tuple
+    finish_reason: str
+    submitted_at: float
+    first_token_at: Optional[float]
+    finished_at: float
+    steps: int            # engine decode steps this request was active for
+
+    @property
+    def ttft(self) -> float:
+        """Time to first token (queue wait + prefill + first decode)."""
+        at = (self.first_token_at if self.first_token_at is not None
+              else self.finished_at)
+        return at - self.submitted_at
+
+    @property
+    def latency(self) -> float:
+        return self.finished_at - self.submitted_at
+
+    @property
+    def tpot(self) -> float:
+        """Mean per-token latency after the first token."""
+        if self.first_token_at is None or len(self.tokens) <= 1:
+            return 0.0
+        return ((self.finished_at - self.first_token_at)
+                / (len(self.tokens) - 1))
+
+
+@dataclasses.dataclass
+class _Live:
+    """Engine-internal mutable state of an admitted request."""
+
+    req: Request
+    submitted_at: float
+    tokens: list
+    left: int
+    steps: int = 0
+    first_token_at: Optional[float] = None
+
+
+# ==========================================================================
+# Decode backends: where the slot-batched step actually runs
+# ==========================================================================
+
+class LocalDecodeBackend:
+    """The PR 1 single-host decode farm: one jitted SPMD step over the slot
+    batch in this process.  Numerically the reference for every other
+    backend (the cluster farm must match it bit for bit)."""
+
+    def __init__(self, model, params, *, n_slots: int, max_len: int,
+                 prefill_chunk: int = 8):
+        self.model = model
+        self.params = params
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.prefill_chunk = prefill_chunk
+        self.cache = model.init_cache(n_slots, max_len)
+
+        def _decode(params, cache, tokens, advance):
+            logits, new_cache = self.model.decode_step(
+                params, cache, tokens[:, None], advance=advance)
+            nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+            return nxt, new_cache
+
+        self._decode = jax.jit(_decode, donate_argnums=(1,))
+
+        def _prefill(params, cache, toks, active, slot):
+            """Feed a fixed-size chunk of prompt tokens into ``slot``'s
+            cache (others frozen).  ``active`` masks the padding of the
+            last chunk, so every prompt length reuses this one compiled
+            scan — the streaming runtime's microbatch schedule applied to
+            prefill."""
+
+            def body(cache, xs):
+                tok, act = xs
+                rows = jnp.zeros((n_slots,), jnp.int32).at[slot].set(tok)
+                adv = jnp.zeros((n_slots,), bool).at[slot].set(act)
+                _, cache = self.model.decode_step(
+                    params, cache, rows[:, None], advance=adv)
+                return cache, None
+
+            cache, _ = jax.lax.scan(body, cache, (toks, active))
+            return cache
+
+        self._prefill = jax.jit(_prefill, donate_argnums=(1,))
+        self._reset = jax.jit(self.model.reset_slot, static_argnums=(1,),
+                              donate_argnums=(0,))
+
+    def reset(self, slot: int) -> None:
+        self.cache = self._reset(self.cache, slot)
+
+    def prefill(self, slot: int, toks: np.ndarray, act: np.ndarray) -> None:
+        self.cache = self._prefill(self.params, self.cache,
+                                   jnp.asarray(toks), jnp.asarray(act),
+                                   jnp.asarray(slot, jnp.int32))
+
+    def decode(self, last: np.ndarray, adv: np.ndarray) -> np.ndarray:
+        nxt, self.cache = self._decode(self.params, self.cache,
+                                       jnp.asarray(last), jnp.asarray(adv))
+        return np.asarray(nxt)
+
+    def close(self) -> None:
+        pass
+
+
+def build_decode_model(spec: tuple):
+    """``(model, params)`` from a picklable spec — spawned farm hosts
+    rebuild the exact model the engine holds.  ``("toy", vocab, dim)``
+    builds :class:`repro.serve.toy.ToyLM`; ``("model", arch, reduced)``
+    builds the real :class:`repro.models.Model` facade.  Params always
+    come from ``PRNGKey(0)``: every host derives identical weights."""
+    kind = spec[0]
+    if kind == "toy":
+        from .toy import ToyLM
+        model = ToyLM(int(spec[1]), int(spec[2]))
+    elif kind == "model":
+        from repro.configs import get_config
+        from repro.models import Model
+        model = Model(get_config(spec[1], reduced=bool(spec[2])))
+    else:
+        raise NetworkError(f"build_decode_model: unknown spec kind "
+                           f"{kind!r} (want 'toy' or 'model')")
+    return model, model.init(jax.random.PRNGKey(0))
+
+
+def make_decode_farm(spec: tuple, n_slots: int, shards: int, max_len: int,
+                     prefill_chunk: int) -> Network:
+    """The decode farm as a GPP network (module-level and picklable: the
+    pipe/shm transports rebuild it in spawned interpreters).
+
+    Each *item* is one decode shard — ``n_slots // shards`` rows of the
+    slot batch, cache included — tagged with a mode: a decode item carries
+    last tokens + advance mask, a prefill item carries one prompt chunk
+    bound for one row.  Workers are identical and stateless (any shard can
+    land on any worker: OneFanAny work-stealing survives at farm level);
+    the Collect appends items in chunk order so the engine reads shard
+    outputs back positionally.
+
+    Each worker drains into a per-branch relay buffer (a 1-in/1-out MERGE
+    process — the transport's egress FIFO declared *in* the network) before
+    the AnyFanOne.  Declaring that buffering here, rather than letting it
+    appear only in ``abstract_partitioned_model``'s cut-channel relays,
+    keeps the §6.1.1 proof honest under ``reconfigure``: the unpartitioned
+    farm's trace set already contains every merge-arrival ordering the
+    buffered deployment can exhibit, so ``check_redeployment``'s
+    containment obligations hold for any host count."""
+    model, params = build_decode_model(spec)
+    if shards <= 0 or n_slots % shards:
+        raise NetworkError(f"make_decode_farm: n_slots={n_slots} not "
+                           f"divisible into {shards} shards")
+    s_rows = n_slots // shards
+
+    def zero_item(i):
+        """Emit is only exercised by ``run(instances=)`` probes; real
+        serving always supplies the item batch explicitly."""
+        return {"cache": model.init_cache(s_rows, max_len),
+                "last": jnp.zeros((s_rows,), jnp.int32),
+                "adv": jnp.zeros((s_rows,), bool),
+                "toks": jnp.zeros((prefill_chunk,), jnp.int32),
+                "act": jnp.zeros((prefill_chunk,), bool),
+                "pslot": jnp.zeros((), jnp.int32),
+                "mode": jnp.zeros((), jnp.int32)}
+
+    def shard_step(chunk):
+        # batched=True worker with microbatch_size=1: peel the chunk axis,
+        # so the mode predicate is a scalar and lax.cond executes ONE
+        # branch (under vmap it would pay for both)
+        item = jax.tree_util.tree_map(lambda l: l[0], chunk)
+
+        def decode(it):
+            logits, cache = model.decode_step(
+                params, it["cache"], it["last"][:, None], advance=it["adv"])
+            nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+            return {"cache": cache, "nxt": nxt}
+
+        def prefill(it):
+            def body(cache, xs):
+                tok, act = xs
+                rows = jnp.zeros((s_rows,), jnp.int32).at[it["pslot"]].set(
+                    tok)
+                adv = jnp.zeros((s_rows,), bool).at[it["pslot"]].set(act)
+                _, cache = model.decode_step(params, cache, rows[:, None],
+                                             advance=adv)
+                return cache, None
+
+            cache, _ = jax.lax.scan(body, it["cache"],
+                                    (it["toks"], it["act"]))
+            return {"cache": cache, "nxt": jnp.zeros((s_rows,), jnp.int32)}
+
+        out = jax.lax.cond(item["mode"] == 1, prefill, decode, item)
+        return jax.tree_util.tree_map(lambda l: l[None], out)
+
+    net = Network("decode-farm")
+    net.add(Emit(zero_item, name="emit"))
+    net.add(OneFanAny(destinations=shards, name="ofa"))
+    wnames = []
+    for w in range(shards):
+        wn = f"decode{w}"
+        net.procs[wn] = Worker(shard_step, batched=True, name=wn,
+                               tag="decode")
+        net.connect("ofa", wn)
+        bn = f"buf{w}"
+        net.procs[bn] = ProcessDef(name=bn, kind=Kind.REDUCER,
+                                   distribution=Distribution.MERGE)
+        net.connect(wn, bn)
+        wnames.append(bn)
+    net.procs["afo"] = AnyFanOne(sources=shards, name="afo")
+    for wn in wnames:
+        net.connect(wn, "afo")
+    net._tail = "afo"
+    net.add(Collect(lambda acc, item: acc + [item], init=[],
+                    jit_combine=False, name="collect"))
+    return net
+
+
+class ClusterDecodeBackend:
+    """The decode farm parked warm on a :class:`ClusterDeployment`.
+
+    Holds the canonical serving state (per-shard caches) host-side and
+    streams it through the farm each step: a decode step is one batch of
+    ``shards`` items, a prefill chunk is a one-item batch bound for the
+    owning shard.  A :class:`~repro.cluster.runtime.ClusterError` mid-step
+    triggers ``recover()`` — the replayed batch returns the completed,
+    bit-identical step result, so engine bookkeeping only ever advances on
+    full steps (exactly-once responses under host kills).  ``scale()``
+    re-fits the same farm to a new host count via the controller's
+    epoch-bumped :meth:`~repro.cluster.control.ClusterController
+    .reconfigure`."""
+
+    def __init__(self, spec: tuple, *, n_slots: int, shards: int = 2,
+                 hosts: int = 2, transport="inprocess", max_len: int = 64,
+                 prefill_chunk: int = 8, timeout_s: float = 60.0,
+                 max_recover_attempts: int = 4, recover_mode: str = "restart"):
+        from repro.cluster.deploy import ClusterDeployment
+        if shards <= 0 or n_slots % shards:
+            raise NetworkError(f"ClusterDecodeBackend: n_slots={n_slots} "
+                               f"not divisible into {shards} shards")
+        self.spec = spec
+        self.n_slots = n_slots
+        self.shards = shards
+        self.max_len = max_len
+        self.prefill_chunk = prefill_chunk
+        self.recover_mode = recover_mode
+        self.max_recover_attempts = max_recover_attempts
+        self.recoveries = 0
+        self._rows = n_slots // shards
+        self.model, self.params = build_decode_model(spec)
+        self._reset_jit = jax.jit(self.model.reset_slot,
+                                  static_argnums=(1,))
+        # canonical state: one cache pytree per shard (host numpy — it
+        # rides the items through the transport each step)
+        self.shard_cache = [
+            jax.tree_util.tree_map(np.asarray,
+                                   self.model.init_cache(self._rows,
+                                                         max_len))
+            for _ in range(shards)]
+        factory = (make_decode_farm,
+                   (spec, n_slots, shards, max_len, prefill_chunk))
+        self.dep = ClusterDeployment(
+            factory[0](*factory[1]), hosts=hosts, transport=transport,
+            microbatch_size=1, factory=factory, timeout_s=timeout_s)
+        self.dep.start()
+
+    # -- farm plumbing ------------------------------------------------------
+    def _run(self, batch) -> list:
+        """One batch through the warm farm, recovering as many times as
+        host failures demand; returns the per-item outputs in item order."""
+        from repro.cluster.runtime import ClusterError
+        try:
+            return self.dep.run(batch=batch)["collect"]
+        except ClusterError:
+            pass
+        for _ in range(self.max_recover_attempts):
+            self.recoveries += 1
+            try:
+                out = self.dep.recover(mode=self.recover_mode)
+            except ClusterError:
+                continue  # the replay was killed too — recover again
+            if out is not None:
+                return out["collect"]
+            try:  # recovery had no pending batch: re-run this one
+                return self.dep.run(batch=batch)["collect"]
+            except ClusterError:
+                continue
+        raise NetworkError(
+            f"ClusterDecodeBackend: step did not complete within "
+            f"{self.max_recover_attempts} recoveries")
+
+    def _item(self, w: int, *, last=None, adv=None, toks=None, act=None,
+              pslot=0, mode=0) -> dict:
+        pc, rows = self.prefill_chunk, self._rows
+        return {
+            "cache": self.shard_cache[w],
+            "last": (np.zeros((rows,), np.int32) if last is None
+                     else np.asarray(last, np.int32)),
+            "adv": (np.zeros((rows,), bool) if adv is None
+                    else np.asarray(adv, bool)),
+            "toks": (np.zeros((pc,), np.int32) if toks is None
+                     else np.asarray(toks, np.int32)),
+            "act": (np.zeros((pc,), bool) if act is None
+                    else np.asarray(act, bool)),
+            "pslot": np.asarray(pslot, np.int32),
+            "mode": np.asarray(mode, np.int32),
+        }
+
+    @staticmethod
+    def _stack(items: list):
+        return jax.tree_util.tree_map(
+            lambda *ls: np.stack([np.asarray(l) for l in ls]), *items)
+
+    # -- the DecodeBackend surface ------------------------------------------
+    def reset(self, slot: int) -> None:
+        w, ps = divmod(slot, self._rows)
+        self.shard_cache[w] = jax.tree_util.tree_map(
+            np.asarray, self._reset_jit(self.shard_cache[w], ps))
+
+    def prefill(self, slot: int, toks: np.ndarray, act: np.ndarray) -> None:
+        w, ps = divmod(slot, self._rows)
+        batch = self._stack([self._item(w, toks=toks, act=act, pslot=ps,
+                                        mode=1)])
+        (out,) = self._run(batch)
+        self.shard_cache[w] = jax.tree_util.tree_map(np.asarray,
+                                                     out["cache"])
+
+    def decode(self, last: np.ndarray, adv: np.ndarray) -> np.ndarray:
+        rows = self._rows
+        last = np.asarray(last, np.int32)
+        adv = np.asarray(adv, bool)
+        batch = self._stack([
+            self._item(w, last=last[w * rows:(w + 1) * rows],
+                       adv=adv[w * rows:(w + 1) * rows])
+            for w in range(self.shards)])
+        outs = self._run(batch)
+        for w, out in enumerate(outs):
+            self.shard_cache[w] = jax.tree_util.tree_map(np.asarray,
+                                                         out["cache"])
+        return np.concatenate([np.asarray(out["nxt"]) for out in outs])
+
+    # -- elasticity ---------------------------------------------------------
+    def scale(self, hosts: int):
+        """Re-fit the live farm to ``hosts`` — drain, replan, epoch bump,
+        §6.1.1 re-proof; serving state (caches, admission queue) is
+        untouched.  Returns the :class:`RecoveryEvent`."""
+        return self.dep.reconfigure(hosts=hosts)
+
+    def close(self) -> None:
+        self.dep.close()
+
+
+# ==========================================================================
+# The engine
+# ==========================================================================
+
+class ServeEngine:
+    """Request-level continuous batching over a decode backend.
+
+    ::
+
+        eng = ServeEngine(LocalDecodeBackend(model, params, n_slots=4,
+                                             max_len=64))
+        rid = eng.submit(Request(rid=0, prompt=(5, 7, 11), max_new=8))
+        for resp in eng.run_until_drained():
+            print(resp.rid, resp.tokens, f"{resp.ttft * 1e3:.1f}ms")
+
+    ``submit`` is non-blocking (the admission queue holds what the slot
+    batch can't seat yet); ``step()`` admits between decode chunks and
+    runs one batched decode; ``poll(rid)`` returns the :class:`Response`
+    once finished.  Token streams are bit-identical to sequential
+    per-request generation — the farm is a throughput transform, not a
+    numerical one."""
+
+    def __init__(self, backend, *, eos_id: int = -1,
+                 time_fn=time.monotonic):
+        self.backend = backend
+        self.eos_id = eos_id
+        self.time_fn = time_fn
+        self.n_slots = backend.n_slots
+        self.plan = SlotPlan(backend.n_slots)
+        self.pending: list[Request] = []
+        self.responses: dict[int, Response] = {}
+        self.completed: list[Response] = []   # completion order
+        self.steps_run = 0
+        self.last_tok = np.zeros(backend.n_slots, np.int32)
+        self._live: dict[int, _Live] = {}     # rid -> admitted state
+        self._known: set = set()
+        self._submit_times: dict[int, float] = {}
+
+    # -- the public surface --------------------------------------------------
+    def submit(self, req: Request) -> int:
+        """Enqueue ``req``; returns its rid (the poll handle).  Rejects
+        empty prompts and duplicate rids before any slot state is touched;
+        a ``max_new=0`` request completes immediately (zero tokens, reason
+        ``"length"``) without ever claiming a slot."""
+        if not req.prompt:
+            raise ValueError(f"request {req.rid}: empty prompt")
+        if req.rid in self._known:
+            raise ValueError(f"request {req.rid}: duplicate rid")
+        self._known.add(req.rid)
+        now = self.time_fn()
+        if req.max_new <= 0:
+            self._finish(Response(
+                rid=req.rid, prompt=req.prompt, tokens=(),
+                finish_reason="length", submitted_at=now,
+                first_token_at=None, finished_at=now, steps=0))
+            return req.rid
+        self.pending.append(req)
+        self._submit_times[req.rid] = now
+        return req.rid
+
+    def poll(self, rid: int) -> Optional[Response]:
+        """The response for ``rid``, or None while it is still queued or
+        decoding.  Unknown rids raise KeyError."""
+        if rid not in self._known:
+            raise KeyError(f"unknown request {rid}")
+        return self.responses.get(rid)
+
+    def step(self) -> int:
+        """One farm step: admit from the queue into free slots (join
+        between decode chunks), then decode every active slot once.
+        Returns the number of active slots (0 = drained)."""
+        self._fill_slots()
+        active = self.plan.active()
+        if not active:
+            return 0
+        nxt = self.backend.decode(self.last_tok, self.plan.mask())
+        now = self.time_fn()
+        self.steps_run += 1
+        self.plan.tick()
+        for slot, rid in active:
+            live = self._live[rid]
+            tok = int(nxt[slot])
+            live.tokens.append(tok)
+            live.steps += 1
+            if live.first_token_at is None:
+                live.first_token_at = now
+            self.last_tok[slot] = tok
+            live.left -= 1
+            if live.left <= 0 or tok == self.eos_id:
+                self.plan.release(slot)
+                del self._live[rid]
+                self._finish(Response(
+                    rid=rid, prompt=live.req.prompt,
+                    tokens=tuple(live.tokens),
+                    finish_reason=("eos" if tok == self.eos_id
+                                   else "length"),
+                    submitted_at=live.submitted_at,
+                    first_token_at=live.first_token_at,
+                    finished_at=now, steps=live.steps))
+        return len(active)
+
+    def run_until_drained(self) -> list[Response]:
+        """Step until the queue and every slot are empty; returns ALL
+        responses so far in completion order."""
+        while self.pending or self._live:
+            self.step()
+        return list(self.completed)
+
+    def close(self) -> None:
+        self.backend.close()
+
+    def __enter__(self) -> "ServeEngine":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- internals -----------------------------------------------------------
+    def _finish(self, resp: Response) -> None:
+        self.responses[resp.rid] = resp
+        self.completed.append(resp)
+
+    def _fill_slots(self) -> None:
+        """Admission: seat queued requests into free slots (lowest slot,
+        FIFO queue — the deterministic any-channel), reset the slot's
+        cache and stream the prompt context through chunked prefill."""
+        while self.pending and self.plan.n_free:
+            req = self.pending.pop(0)
+            slot = self.plan.claim(req.rid)
+            self.backend.reset(slot)
+            # chunked prefill: all but the last prompt token flow through
+            # the microbatch plan; a single-token prompt has no context —
+            # the plan is empty and no prefill dispatches at all
+            ctx = req.prompt[:-1]
+            pc = self.backend.prefill_chunk
+            for lo, hi in microbatch_plan(len(ctx), pc):
+                toks = np.zeros(pc, np.int32)
+                act = np.zeros(pc, bool)
+                toks[:hi - lo] = ctx[lo:hi]
+                act[:hi - lo] = True
+                self.backend.prefill(slot, toks, act)
+            self.last_tok[slot] = req.prompt[-1]
+            self._live[req.rid] = _Live(
+                req=req,
+                submitted_at=self._submit_times.pop(req.rid),
+                tokens=[], left=req.max_new)

@@ -1,146 +1,134 @@
-"""Continuous-batching serving scheduler — the GPP farm at request level.
+"""Deprecated PR 1 serving surface, now a shim over :class:`ServeEngine`.
 
-This is where the paper's ``OneFanAny`` any-channel semantics survive
-verbatim on TPU: requests queue at the Emit side; the scheduler assigns each
-to the first *free slot* of the batched decode step (work-stealing ⇒
-straggler mitigation: a long generation never blocks new requests, they
-stream into slots as others finish); finished sequences flow to the Collect.
+``FarmScheduler`` was the repo's first continuous-batching farm: a mutable
+``Request.generated``-in-place contract over a single-host decode step.
+The serving API moved to :mod:`repro.serve.engine` (immutable
+:class:`~repro.serve.engine.Request` in, :class:`~repro.serve.engine
+.Response` out, pluggable local/cluster backends); this class keeps the old
+constructor, the legacy views (``queue`` / ``slot_req`` / ``done`` /
+``steps_run``) and the jit handles (``_prefill`` / ``_decode`` / ``_reset``
+— tests monkeypatch them) alive on top of the engine, and fills
+``generated`` on whatever objects were submitted when they complete.
 
-The decode step itself is one jitted SPMD program over the slot batch with a
-per-row cache index and an ``advance`` mask, so slots at different depths
-coexist in one program — the farm lives at the host boundary exactly as
-DESIGN.md's mapping prescribes.
+Behavioural fix over PR 1: a ``max_new=0`` request used to burn a slot and
+a decode step to generate one token it was never asked for; it now
+completes immediately at ``submit`` with zero tokens, without claiming a
+slot.
 """
 
 from __future__ import annotations
 
-import dataclasses
-from typing import Optional
+import warnings
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core.stream import microbatch_plan
-from repro.models import Model
+from .engine import LocalDecodeBackend, Request, ServeEngine
 
 __all__ = ["Request", "FarmScheduler"]
 
 
-@dataclasses.dataclass
-class Request:
-    rid: int
-    prompt: list[int]
-    max_new: int = 16
-    generated: Optional[list[int]] = None  # filled by the scheduler
-
-
 class FarmScheduler:
-    """Slot-based continuous batching over a fixed decode batch."""
+    """Slot-based continuous batching over a fixed decode batch
+    (deprecated: use :class:`repro.serve.ServeEngine`)."""
 
-    def __init__(self, model: Model, params, *, n_slots: int,
-                 max_len: int, eos_id: int = -1, prefill_chunk: int = 8):
+    def __init__(self, model, params, *, n_slots: int, max_len: int,
+                 eos_id: int = -1, prefill_chunk: int = 8):
+        warnings.warn(
+            "FarmScheduler is deprecated; use repro.serve.ServeEngine "
+            "with a LocalDecodeBackend (or ClusterDecodeBackend)",
+            DeprecationWarning, stacklevel=2)
         self.model = model
         self.params = params
         self.n_slots = n_slots
         self.max_len = max_len
         self.eos_id = eos_id
         self.prefill_chunk = prefill_chunk
-        self.cache = model.init_cache(n_slots, max_len)
-        self.slot_req: list[Optional[Request]] = [None] * n_slots
-        self.slot_left = np.zeros(n_slots, np.int32)
-        self.last_tok = np.zeros(n_slots, np.int32)
+        self._backend = LocalDecodeBackend(
+            model, params, n_slots=n_slots, max_len=max_len,
+            prefill_chunk=prefill_chunk)
+        self._engine = ServeEngine(self._backend, eos_id=eos_id)
+        self._by_rid: dict = {}
+        self.done: list = []
 
-        def _decode(params, cache, tokens, advance):
-            logits, new_cache = self.model.decode_step(
-                params, cache, tokens[:, None], advance=advance)
-            nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
-            return nxt, new_cache
+    # -- legacy views over the engine's state --------------------------------
+    @property
+    def queue(self) -> list:
+        return [self._by_rid[r.rid] for r in self._engine.pending]
 
-        self._decode = jax.jit(_decode, donate_argnums=(1,))
+    @property
+    def slot_req(self) -> list:
+        out = [None] * self.n_slots
+        for slot, rid in self._engine.plan.active():
+            out[slot] = self._by_rid[rid]
+        return out
 
-        def _prefill(params, cache, toks, active, slot):
-            """Feed a fixed-size chunk of prompt tokens into ``slot``'s cache
-            (others frozen).  ``active`` masks the padding of the last chunk,
-            so every prompt length reuses this one compiled scan — the
-            streaming runtime's microbatch schedule applied to prefill."""
+    @property
+    def last_tok(self):
+        return self._engine.last_tok
 
-            def body(cache, xs):
-                tok, act = xs
-                rows = jnp.zeros((n_slots,), jnp.int32).at[slot].set(tok)
-                adv = jnp.zeros((n_slots,), bool).at[slot].set(act)
-                _, cache = self.model.decode_step(
-                    params, cache, rows[:, None], advance=adv)
-                return cache, None
+    @property
+    def steps_run(self) -> int:
+        return self._engine.steps_run
 
-            cache, _ = jax.lax.scan(body, cache, (toks, active))
-            return cache
+    @property
+    def cache(self):
+        return self._backend.cache
 
-        self._prefill = jax.jit(_prefill, donate_argnums=(1,))
-        self._reset = jax.jit(self.model.reset_slot, static_argnums=(1,),
-                              donate_argnums=(0,))
-        self.queue: list[Request] = []
-        self.done: list[Request] = []
-        self.steps_run = 0
+    @cache.setter
+    def cache(self, value) -> None:
+        self._backend.cache = value
+
+    # -- the jit handles (monkeypatched by tests) ----------------------------
+    @property
+    def _prefill(self):
+        return self._backend._prefill
+
+    @_prefill.setter
+    def _prefill(self, fn) -> None:
+        self._backend._prefill = fn
+
+    @property
+    def _decode(self):
+        return self._backend._decode
+
+    @_decode.setter
+    def _decode(self, fn) -> None:
+        self._backend._decode = fn
+
+    @property
+    def _reset(self):
+        return self._backend._reset
+
+    @_reset.setter
+    def _reset(self, fn) -> None:
+        self._backend._reset = fn
 
     # -- host-side farm ------------------------------------------------------
-    def submit(self, req: Request) -> None:
-        # reject before a slot is claimed: an empty prompt discovered inside
-        # _fill_slots would leave the slot half-initialised (cache reset,
-        # no last token) and hang the farm
-        if not req.prompt:
-            raise ValueError(f"request {req.rid}: empty prompt")
-        req.generated = []
-        self.queue.append(req)
-
-    def _fill_slots(self) -> None:
-        for s in range(self.n_slots):
-            if self.slot_req[s] is None and self.queue:
-                req = self.queue.pop(0)  # OneFanAny: first free slot takes it
-                self.slot_req[s] = req
-                self.cache = self._reset(self.cache, s)
-                # chunked prefill: prompt context flows through the streaming
-                # microbatch plan, one async dispatch per chunk (not per
-                # token).  A single-token prompt has no context: the plan is
-                # empty, no prefill dispatches, and the slot goes straight to
-                # decoding from the (reset) cache and that one token.
-                ctx = req.prompt[:-1]
-                for lo, hi in microbatch_plan(len(ctx), self.prefill_chunk):
-                    toks = np.zeros(self.prefill_chunk, np.int32)
-                    act = np.zeros(self.prefill_chunk, bool)
-                    toks[:hi - lo] = ctx[lo:hi]
-                    act[:hi - lo] = True
-                    self.cache = self._prefill(
-                        self.params, self.cache, jnp.asarray(toks),
-                        jnp.asarray(act), jnp.asarray(s, jnp.int32))
-                self.last_tok[s] = req.prompt[-1]
-                self.slot_left[s] = req.max_new
+    def submit(self, req) -> None:
+        """Accepts the immutable :class:`Request` or any object with
+        ``rid`` / ``prompt`` / ``max_new``; ``generated`` is written onto
+        the submitted object when the request completes."""
+        eng_req = (req if isinstance(req, Request)
+                   else Request(rid=req.rid, prompt=tuple(req.prompt),
+                                max_new=req.max_new))
+        before = len(self._engine.completed)
+        self._engine.submit(eng_req)   # empty prompt raises untouched
+        self._by_rid[req.rid] = req
+        object.__setattr__(req, "generated", [])
+        self._sync_done(before)
 
     def step(self) -> int:
         """One farm step: fill free slots, decode all active ones."""
-        self._fill_slots()
-        active = [s for s in range(self.n_slots)
-                  if self.slot_req[s] is not None]
-        if not active:
-            return 0
-        adv = jnp.asarray(
-            np.array([r is not None for r in self.slot_req], bool))
-        nxt, self.cache = self._decode(
-            self.params, self.cache, jnp.asarray(self.last_tok), adv)
-        nxt = np.asarray(nxt)
-        self.steps_run += 1
-        for s in active:
-            tok = int(nxt[s])
-            req = self.slot_req[s]
-            req.generated.append(tok)
-            self.last_tok[s] = tok
-            self.slot_left[s] -= 1
-            if self.slot_left[s] <= 0 or tok == self.eos_id:
-                self.done.append(req)  # AnyFanOne → Collect
-                self.slot_req[s] = None
-        return len(active)
+        before = len(self._engine.completed)
+        n = self._engine.step()
+        self._sync_done(before)
+        return n
 
-    def run(self) -> list[Request]:
-        while self.queue or any(r is not None for r in self.slot_req):
+    def run(self) -> list:
+        while self._engine.pending or self._engine._live:
             self.step()
         return self.done
+
+    def _sync_done(self, before: int) -> None:
+        for resp in self._engine.completed[before:]:
+            legacy = self._by_rid[resp.rid]
+            object.__setattr__(legacy, "generated", list(resp.tokens))
+            self.done.append(legacy)

@@ -1,0 +1,73 @@
+"""A deterministic toy LM with the serving decode interface.
+
+The serving engine, the open-loop latency benchmark and the fault-injection
+serve scenario all need a model whose ``decode_step`` is cheap enough to run
+hundreds of farm steps in CI seconds, yet exercises the exact contract the
+real :class:`repro.models.Model` facade exposes to the scheduler:
+
+* ``init_cache(batch, max_len)`` — per-slot recurrent state,
+* ``decode_step(params, cache, tokens, advance=)`` — one batched step whose
+  ``advance`` mask freezes non-active rows (the continuous-batching
+  invariant: a parked slot's cache must not move),
+* ``reset_slot(cache, slot)`` — zero one row for slot reuse.
+
+:class:`ToyLM` is a tanh recurrence over token embeddings with tied
+input/output embeddings — a genuine (if tiny) autoregressive LM: the next
+token depends on the whole prefix through the hidden state, so prefill
+order, advance masking and slot-reset bugs all change its argmax outputs.
+Every operation is per-row, which keeps generation bit-identical across
+batch shapes (slot counts, shard widths) — the property the serving oracle
+tests lean on.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ToyLM"]
+
+
+class ToyLM:
+    """Tiny deterministic autoregressive LM (tanh recurrence, tied embed)."""
+
+    def __init__(self, vocab: int = 32, dim: int = 8):
+        self.vocab = vocab
+        self.dim = dim
+
+    def init(self, key):
+        k1, k2, k3 = jax.random.split(key, 3)
+        s = 1.0 / jnp.sqrt(self.dim)
+        return {
+            "emb": jax.random.normal(k1, (self.vocab, self.dim)) * s,
+            "w": jax.random.normal(k2, (self.dim, self.dim)) * s,
+            "b": jax.random.normal(k3, (self.dim,)) * 0.1,
+        }
+
+    def init_cache(self, batch: int, max_len: int) -> dict:
+        del max_len  # the recurrence carries fixed-size state per slot
+        return {"h": jnp.zeros((batch, self.dim)),
+                "step": jnp.zeros((batch,), jnp.int32)}
+
+    def decode_step(self, params, cache, tokens, *, advance=None):
+        """``tokens (B, S) -> (logits (B, 1, V), new_cache)``; rows where
+        ``advance`` is False keep their cache (and their logits are
+        ignored by the caller, as in the real models)."""
+        b, s = tokens.shape
+        adv = (jnp.ones((b,), bool) if advance is None else advance)
+
+        def body(h, toks_t):
+            h2 = jnp.tanh(h @ params["w"] + params["emb"][toks_t]
+                          + params["b"])
+            return jnp.where(adv[:, None], h2, h), None
+
+        h, _ = jax.lax.scan(body, cache["h"], tokens.T)
+        logits = (h @ params["emb"].T)[:, None, :]
+        new_cache = {"h": h,
+                     "step": cache["step"]
+                     + jnp.where(adv, s, 0).astype(jnp.int32)}
+        return logits, new_cache
+
+    def reset_slot(self, cache, slot):
+        return {"h": cache["h"].at[slot].set(0.0),
+                "step": cache["step"].at[slot].set(0)}
