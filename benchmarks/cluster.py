@@ -109,6 +109,20 @@ def _caps(out) -> str:
     return ",".join(f"{k}={v}" for k, v in sorted(caps.items())) or "none"
 
 
+def _bytes_rate(out) -> str:
+    """Per-channel sender-side bytes/s from the hosts' metrics samples
+    (always-on transport byte counters; see PartitionExecutor)."""
+    rates: dict = {}
+    for r in out.reports:
+        m = getattr(r, "metrics", None) or {}
+        wall = m.get("wall_s") or 0.0
+        for chan, nbytes in (m.get("sent_bytes") or {}).items():
+            if wall:
+                rates[chan] = nbytes / wall
+    return ",".join(f"{k}={v:.0f}B/s"
+                    for k, v in sorted(rates.items())) or "none"
+
+
 def run(*, smoke: bool = False, hosts: int = 2,
         warm_batches: int = 3) -> list:
     from repro.cluster import (ClusterDeployment, ClusterError,
@@ -176,7 +190,7 @@ def run(*, smoke: bool = False, hosts: int = 2,
                      f"cold_us={cold * 1e6:.0f} warm_us={warm * 1e6:.0f} "
                      f"cold_vs_warm={cold / warm:.1f}x "
                      f"warm_jit_builds={builds} stalls={_stalls(wout)} "
-                     f"caps={_caps(wout)}"))
+                     f"caps={_caps(wout)} bytes_per_s={_bytes_rate(wout)}"))
 
         # -- recovery: transient host failure on a warm deployment ---------
         # batch 1 pays the cold bill, batch 2 is the warm reference, batch 3

@@ -145,6 +145,36 @@ def bench_markdown() -> str:
     return "\n".join(lines)
 
 
+def obs_markdown() -> str:
+    """Observability summary pulled out of the benchmark artifacts: the
+    ``*_trace_overhead`` rows (the tracing plane's ≤3% recording-cost gate)
+    and the per-channel ``bytes_per_s`` tokens of the cluster steady rows.
+    Renders ``(not run)`` lines when the artifacts lack them — same
+    contract as the main table, exit code 0 always."""
+    rows = bench_rows()
+    lines = ["### observability (tracing overhead + channel bytes/s)", "",
+             "| suite | row | value |", "|---|---|---|"]
+    over = [r for r in rows if str(r.get("name", "")
+                                   ).endswith("_trace_overhead")]
+    if over:
+        for r in over:
+            lines.append(f"| {r.get('suite', '?')} | {r['name']} | "
+                         f"{r.get('derived', '')} |")
+    else:
+        lines.append("| stream | trace overhead | (not run) — "
+                     "`python -m benchmarks.stream --smoke` |")
+    rate = [r for r in rows if "bytes_per_s=" in str(r.get("derived", ""))]
+    if rate:
+        for r in rate:
+            token = r["derived"].split("bytes_per_s=")[1].split(" ")[0]
+            lines.append(f"| {r.get('suite', '?')} | {r['name']} "
+                         f"bytes/s | {token} |")
+    else:
+        lines.append("| cluster | channel bytes/s | (not run) — "
+                     "`python -m benchmarks.cluster --smoke` |")
+    return "\n".join(lines)
+
+
 if __name__ == "__main__":
     try:
         print(markdown())
@@ -153,3 +183,5 @@ if __name__ == "__main__":
         print(f"(skipping §Perf roofline tables: {e})")
     print()
     print(bench_markdown())
+    print()
+    print(obs_markdown())

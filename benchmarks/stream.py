@@ -17,11 +17,13 @@ instead of blocking at every stage.
 
 from __future__ import annotations
 
+import time
+
 import jax
 import jax.numpy as jnp
 
 from repro.core import (Collect, DataParallelCollect, Emit, Network,
-                        StencilEngine, build)
+                        StencilEngine, build, trace)
 from ._timing import row, time_fn
 
 EDGE3 = jnp.asarray([[-1, -1, -1], [-1, 8, -1], [-1, -1, -1]], jnp.float32)
@@ -81,6 +83,32 @@ def _image_net(images: int, size: int):
     return net, images
 
 
+def _trace_overhead(cn, batch, microbatch_size: int) -> tuple:
+    """Interleaved min-of-5 streaming timings with the process trace
+    recorder off (the production default) and on.  The gate is the tracing
+    plane's near-zero-cost claim: recording ON must stay within 3% of OFF
+    (+2ms absolute slack for sub-ms smoke workloads), which bounds the
+    disabled-path cost — strictly less work — from above too."""
+
+    def one() -> float:
+        t0 = time.perf_counter()
+        jax.block_until_ready(cn.run_streaming(
+            batch=batch, microbatch_size=microbatch_size))
+        return time.perf_counter() - t0
+
+    one()  # warm (stage jits already built by the earlier modes)
+    t_off, t_on, n_events = float("inf"), float("inf"), 0
+    for _ in range(5):
+        t_off = min(t_off, one())
+        rec = trace.enable(host="bench")
+        t_on = min(t_on, one())
+        n_events = len(rec)
+        trace.disable()
+    ok = t_on <= t_off * 1.03 + 2e-3
+    return t_on, (f"on_vs_off={t_on / t_off:.3f}x overhead_ok={ok} "
+                  f"off_us={t_off * 1e6:.0f} events={n_events}")
+
+
 def _bench_one(tag: str, net, instances: int, microbatch_size: int) -> list:
     cn = build(net)
     batch = cn.make_batch(instances)
@@ -100,6 +128,9 @@ def _bench_one(tag: str, net, instances: int, microbatch_size: int) -> list:
                    f"identical={same} {cn.stream_stats.summary()}"))
     # donation telemetry (ROADMAP): which stage jits actually reused buffers
     out.append(row(f"{tag}_donation", 0.0, cn.stream_stats.donation_summary()))
+    # tracing-plane cost (core/trace.py): recording on vs off, gated ≤ 3%
+    t_on, derived = _trace_overhead(cn, batch, microbatch_size)
+    out.append((f"{tag}_trace_overhead", t_on * 1e6, derived))
     return out
 
 

@@ -40,10 +40,12 @@ import queue as _queue
 import threading
 import time
 import traceback
+from multiprocessing.connection import wait as _mp_wait
 from typing import Any, Optional
 
 import numpy as np
 
+from repro.core import trace as _trace
 from repro.core.dataflow import Distribution, Kind, Network, NetworkError
 from repro.core.stream import microbatch_plan
 
@@ -141,6 +143,17 @@ def _host_shape(plan, h) -> tuple:
             tuple((c.src, c.dst) for c in plan.egress_of(h)))
 
 
+def _host_stats(ex, before: int, t0: float) -> tuple:
+    """The per-batch telemetry tuple shipped with every host result:
+    summaries, new jit traces, the :class:`MetricsSnapshot` sample, and the
+    drained trace ring (raw event tuples — picklable across process
+    transports; ``None`` when the host's recorder is disabled)."""
+    payload = ex.rec.drain() if ex.rec.enabled else None
+    return (ex.stats.summary(), ex.stats.donation_summary(),
+            ex.new_traces() - before,
+            ex.metrics_sample(time.monotonic() - t0), payload)
+
+
 def _serve_host(sub, ex, plan, host, endpoint, work_q, result_q,
                 encode=False) -> None:
     """The warm-host loop: park on the work queue, stream each batch through
@@ -159,6 +172,7 @@ def _serve_host(sub, ex, plan, host, endpoint, work_q, result_q,
         kind, batch_id, epoch, bounds, instances, batch, start_ci = msg
         endpoint.epoch = epoch
         before = ex.new_traces()  # builds AND shape-driven retraces
+        t0 = time.monotonic()
         try:
             if batch is None or not _has_real_emit(sub):
                 batch = _emit_batch(sub, instances)
@@ -170,11 +184,9 @@ def _serve_host(sub, ex, plan, host, endpoint, work_q, result_q,
                                        start_ci=start_ci)
             result_q.put(("ok", host, batch_id,
                           _encode_result(out) if encode else out,
-                          (ex.stats.summary(), ex.stats.donation_summary(),
-                           ex.new_traces() - before)))
+                          _host_stats(ex, before, t0)))
         except Exception:
-            stats = (ex.stats.summary(), ex.stats.donation_summary(),
-                     ex.new_traces() - before)
+            stats = _host_stats(ex, before, t0)
             if ex.replay_state is not None:
                 # a PEER died mid-stream: this host is a healthy survivor
                 # holding a resumable fold — report where it stopped
@@ -235,7 +247,12 @@ class ClusterController:
         self._threads: dict = {}
         self._procs: dict = {}
         self._work_qs: dict = {}
-        self._result_q: Any = None
+        # thread hosts share one result queue (threads can't be SIGKILLed);
+        # process hosts get one EACH — a host killed mid-report dies holding
+        # its queue's cross-process writer lock, and a shared queue would
+        # leave every survivor's feeder thread deadlocked on that corpse
+        self._result_q: Any = None    # thread hosts only
+        self._result_qs: dict = {}    # process hosts: host -> own queue
         self._meshes: dict = {}       # JaxMesh: per-host submesh (stable)
         self._host_index: dict = {}   # JaxMesh: host -> submesh slot
         self.executors: dict = {}     # thread hosts only: live executors
@@ -247,6 +264,15 @@ class ClusterController:
         self._last_batch: Optional[tuple] = None   # descriptor, for replay
         self._ok_cache: dict = {}     # completed hosts' results of a failed
         self._kept: dict = {}         # chan -> drained records to requeue
+        # observability (core/trace.py): the controller's own recorder spans
+        # the control verbs; worker rings arrive with each result and merge
+        # by per-host clock offset (fixed at FIRST receipt so a host's own
+        # monotonic order survives re-ships; 0 for virtual clocks and for
+        # thread hosts, which share this process's clock)
+        self.recorder = _trace.new_recorder(host="ctrl", enabled=cfg.trace)
+        self._trace_events: dict = {}   # host -> accumulated raw events
+        self._trace_offsets: dict = {}  # host -> clock offset onto ours
+        self._last_reports: dict = {}   # host -> HostReport of last batch
 
     # -- lifecycle ---------------------------------------------------------
     def start(self) -> None:
@@ -271,8 +297,8 @@ class ClusterController:
         self._transport_up = True
         try:
             self._bind_meshes()
-            self._result_q = (t.ctx.Queue() if t.process_hosts
-                              else _queue.Queue())
+            if not t.process_hosts:
+                self._result_q = _queue.Queue()
             for h in self._live:
                 self.spawn_host(h)
         except Exception:
@@ -311,11 +337,13 @@ class ClusterController:
                                 if self.transport.process_hosts
                                 else _queue.Queue())
         if self.transport.process_hosts:
+            if h not in self._result_qs:
+                self._result_qs[h] = self.transport.ctx.Queue()
             p = self.transport.ctx.Process(
                 target=_process_host_entry,
                 args=(self.factory[0], tuple(self.factory[1]),
                       self.plan.assignment, h, self.transport.endpoint(h),
-                      self._work_qs[h], self._result_q, self.cfg),
+                      self._work_qs[h], self._result_qs[h], self.cfg),
                 name=f"gpp-host-{h}", daemon=True)
             self._procs[h] = p
             p.start()
@@ -391,8 +419,12 @@ class ClusterController:
             # a SIGKILLed worker parked on its queue died HOLDING the
             # queue's reader lock — the corpse's queue is unreadable
             # forever, so the respawned worker gets a fresh one (only the
-            # controller writes it; pending messages were stale anyway)
+            # controller writes it; pending messages were stale anyway).
+            # Same for its result queue: a worker killed mid-report dies
+            # holding the writer lock, bricking the queue for any later
+            # incarnation (reports pending in it were stale too).
             self._work_qs.pop(h, None)
+            self._result_qs.pop(h, None)
         else:
             self._drain_work_q(h)
         self.spawn_host(h)
@@ -464,8 +496,11 @@ class ClusterController:
             self._work_qs[h].put(
                 ("batch", batch_id, self.epoch, bounds, instances,
                  batch if h in emit_hosts else None, 0))
-        reports = self._fresh_reports()
-        results = self._await_results(batch_id, reports, set(self._live))
+        with self.recorder.span("batch", "control", batch_id=batch_id,
+                                epoch=self.epoch):
+            reports = self._fresh_reports()
+            results = self._await_results(batch_id, reports,
+                                          set(self._live))
         return self._finish_batch(batch_id, bounds, instances, batch,
                                   reports, results)
 
@@ -480,15 +515,21 @@ class ClusterController:
 
     def _finish_batch(self, batch_id, bounds, instances, batch,
                       reports: dict, results: dict) -> ClusterResult:
+        self._last_reports = dict(reports)  # metrics() reads the last batch
         report_list = [reports[h] for h in self._live]
         if not all(r.ok for r in report_list):
             self._needs_recovery = True
             self._last_batch = (batch_id, bounds, instances, batch)
             self._ok_cache = results
             from repro.core import netlog
+            try:
+                depths = {f"{s}->{d}": n for (s, d), n
+                          in self.transport.channel_depths().items()}
+            except Exception:
+                depths = None
             raise ClusterError(
                 netlog.cluster_report(self.plan, report_list,
-                                      events=self.events),
+                                      events=self.events, depths=depths),
                 report_list)
         merged = ClusterResult()
         for h in self._live:
@@ -496,6 +537,109 @@ class ClusterController:
         merged.reports = report_list
         merged.epoch = self.epoch
         return merged
+
+    # -- observability (core/trace.py) -------------------------------------
+    def _absorb_trace(self, host, payload) -> None:
+        """Bank one host's drained ring.  The clock offset aligning that
+        host onto the controller clock is computed ONCE (first payload) and
+        reused, so the host's own monotonic event order is stable across
+        every later ship."""
+        if payload is None:
+            return
+        raw, host_now, virtual = payload
+        if host not in self._trace_offsets:
+            if virtual or not self.transport.process_hosts:
+                offset = 0.0  # shared (or virtual) clock: already aligned
+            else:
+                offset = time.perf_counter() - host_now
+            self._trace_offsets[host] = offset
+        if raw:
+            self._trace_events.setdefault(host, []).extend(raw)
+
+    def merged_trace(self) -> list:
+        """Every host's events (plus the controller's own), offset-aligned
+        onto one timeline — :class:`repro.core.trace.TraceEvent` rows."""
+        groups = []
+        if len(self.recorder):
+            groups.append(("ctrl", 0.0, list(self.recorder._buf)))
+        for h in sorted(self._trace_events, key=str):
+            groups.append((h, self._trace_offsets.get(h, 0.0),
+                           self._trace_events[h]))
+        return _trace.merge_events(groups)
+
+    def export_trace(self, path: Optional[str] = None) -> str:
+        """Chrome trace-event / Perfetto JSON of the merged timeline."""
+        return _trace.export_chrome(self.merged_trace(), path)
+
+    def clear_trace(self) -> None:
+        """Drop banked events (keep clock offsets): per-batch trace tests
+        isolate batches with this."""
+        self._trace_events = {}
+        self.recorder.clear()
+
+    def metrics(self) -> "_trace.MetricsSnapshot":
+        """A point-in-time :class:`repro.core.trace.MetricsSnapshot`: live
+        cut-channel queue depths/occupancy from the transport, plus each
+        host's last-batch throughput / stall-rate / bytes-per-second sample
+        — the polling feed a scaling policy consumes (ROADMAP item 1)."""
+        snap = _trace.MetricsSnapshot(epoch=self.epoch)
+        caps = self.transport.channel_capacities()
+        for chan, depth in self.transport.channel_depths().items():
+            key = f"{chan[0]}->{chan[1]}"
+            snap.queue_depths[key] = depth
+            cap = caps.get(chan, 0)
+            if cap and depth >= 0:
+                snap.occupancy[key] = depth / cap
+        for h, rep in self._last_reports.items():
+            m = rep.metrics
+            if not m:
+                continue
+            snap.throughput[h] = m.get("items_per_s", 0.0)
+            snap.stall_rate[h] = m.get("stalls_per_chunk", 0.0)
+            wall = m.get("wall_s", 0.0)
+            if wall > 0:
+                for chan_key, nbytes in m.get("sent_bytes", {}).items():
+                    snap.bytes_per_s[chan_key] = nbytes / wall
+        return snap
+
+    def _poll_results(self, pending: set, timeout: float) -> list:
+        """Whatever results the pending hosts have delivered, waiting up to
+        ``timeout`` for the first.  Thread hosts share one queue; process
+        hosts are polled via ``connection.wait`` on their own queues, so a
+        host SIGKILLed mid-report can never wedge a survivor's delivery."""
+        if not self.transport.process_hosts:
+            try:
+                return [self._result_q.get(timeout=timeout)]
+            except _queue.Empty:
+                return []
+        qs = [self._result_qs[h] for h in sorted(pending)
+              if h in self._result_qs]
+        if not qs:
+            time.sleep(timeout)
+            return []
+        if all(hasattr(q, "_reader") for q in qs):
+            ready = set(_mp_wait([q._reader for q in qs], timeout))
+            out = []
+            for q in qs:
+                if q._reader in ready:
+                    try:
+                        out.append(q.get_nowait())
+                    except _queue.Empty:
+                        pass
+            return out
+        # sim transport: thread-backed fake processes hand out plain
+        # queue.Queue stand-ins with no waitable pipe — sweep them
+        deadline = time.monotonic() + timeout
+        while True:
+            out = []
+            for q in qs:
+                try:
+                    out.append(q.get_nowait())
+                except _queue.Empty:
+                    pass
+            if out or time.monotonic() >= deadline:
+                return out
+            time.sleep(0.005)
 
     def _await_results(self, batch_id: int, reports: dict,
                        pending: set) -> dict:
@@ -511,11 +655,11 @@ class ClusterController:
         deadline = time.monotonic() + self.timeout_s
         dead_strikes: dict = {}
         failed_hosts: set = set()
+        backlog: list = []
         while pending and time.monotonic() < deadline:
-            try:
-                status, h, bid, payload, stats = self._result_q.get(
-                    timeout=self.poll_s)
-            except _queue.Empty:
+            if not backlog:
+                backlog = self._poll_results(pending, self.poll_s)
+            if not backlog:
                 for h in sorted(pending):
                     p = self._procs.get(h)
                     if p is not None and not p.is_alive():
@@ -529,11 +673,15 @@ class ClusterController:
                             pending.discard(h)
                 self._quiesce(failed_hosts)
                 continue
+            status, h, bid, payload, stats = backlog.pop(0)
             if h not in pending:
                 continue
             if stats is not None:
                 (reports[h].stats_summary, reports[h].donation_summary,
-                 reports[h].jit_builds) = stats
+                 reports[h].jit_builds) = stats[:3]
+                if len(stats) > 3:
+                    reports[h].metrics = stats[3] or {}
+                    self._absorb_trace(h, stats[4])
             if status == "ok":
                 if bid != batch_id:
                     continue  # stale success from an abandoned batch
@@ -602,6 +750,9 @@ class ClusterController:
                                "batch completed")
         t0 = time.monotonic()
         old_plan = self.plan
+        self.recorder.instant("recover", "control", mode=mode,
+                              dead=sorted(self._dead),
+                              erred=sorted(self._erred))
         ev = RecoveryEvent(
             epoch_from=self.epoch, epoch_to=self.epoch + 1, mode=mode,
             dead=sorted(self._dead), erred=sorted(self._erred),
@@ -611,11 +762,12 @@ class ClusterController:
         #    partial passes; this is the full sweep)
         keep = {(c.src, c.dst) for c in self.plan.cut
                 if self.plan.assignment[c.dst] in self._stalled}
-        for chan, (kept, dropped) in self.transport.drain(
-                keep=keep).items():
-            if kept:
-                self._kept.setdefault(chan, []).extend(kept)
-            ev.discarded += dropped
+        with self.recorder.span("drain", "control", epoch=self.epoch):
+            for chan, (kept, dropped) in self.transport.drain(
+                    keep=keep).items():
+                if kept:
+                    self._kept.setdefault(chan, []).extend(kept)
+                ev.discarded += dropped
         # 1b. a host SIGKILLed while blocked in recv died HOLDING its
         #     ingress FIFO's reader lock — the restarted worker (and every
         #     later drain) would block on the bricked queue forever.  Probe
@@ -627,8 +779,9 @@ class ClusterController:
         if self._dead:
             ingress = [(c.src, c.dst) for h in sorted(self._dead)
                        for c in self.plan.ingress_of(h)]
-            bricked = (self.transport.bricked_channels(ingress)
-                       if ingress else set())
+            with self.recorder.span("brick_probe", "control"):
+                bricked = (self.transport.bricked_channels(ingress)
+                           if ingress else set())
             ev.bricked = sorted(f"{a}->{b}" for a, b in bricked)
             if bricked:
                 if all(self.transport.rebuild_channel(chan)
@@ -678,48 +831,53 @@ class ClusterController:
                                         "bricked FIFO not rebuildable")
                         mode = ev.mode = "rebalance"
         # 2. restart or rebalance the failed hosts
-        if mode == "rebalance" and (self._dead or self._erred):
-            self._rebalance(ev)
-            for h in sorted(force_restart):  # stale endpoints onto a
-                # rebuilt FIFO still in the new cut: respawn those too
-                if h in self._live and h not in ev.restarted:
-                    self._stalled.pop(h, None)
+        with self.recorder.span(f"recover_{mode}", "control"):
+            if mode == "rebalance" and (self._dead or self._erred):
+                self._rebalance(ev)
+                for h in sorted(force_restart):  # stale endpoints onto a
+                    # rebuilt FIFO still in the new cut: respawn those too
+                    if h in self._live and h not in ev.restarted:
+                        self._stalled.pop(h, None)
+                        self.restart_host(h)
+                        ev.restarted.append(h)
+            else:
+                for h in sorted(set(self._dead) | force_restart):
+                    if h not in self._dead:
+                        # a force-restarted survivor loses any stalled fold
+                        # state with its worker — it replays from scratch
+                        self._stalled.pop(h, None)
                     self.restart_host(h)
                     ev.restarted.append(h)
-        else:
-            for h in sorted(set(self._dead) | force_restart):
-                if h not in self._dead:
-                    # a force-restarted survivor loses any stalled fold
-                    # state with its worker — it replays from scratch
-                    self._stalled.pop(h, None)
-                self.restart_host(h)
-                ev.restarted.append(h)
         # 3. new epoch: stale records become invisible
         self.epoch += 1
         self.transport.set_epoch(self.epoch)
+        self.recorder.instant("epoch_bump", "control", epoch=self.epoch)
         # 4. requeue undelivered chunks for the stalled survivors (at most
         #    one FIFO's worth — the replay covers the rest).  They belong to
         #    the FAILED batch, so they only go back when that batch is about
         #    to be replayed; a recover(replay=False) that moves on to fresh
         #    batches must discard them (a fresh consumer expects chunk 0)
         requeued_map: dict = {}
-        for chan, records in sorted(self._kept.items()):
-            if (replay and self._last_batch is not None
-                    and chan in {(c.src, c.dst) for c in self.plan.cut}
-                    and self.plan.assignment[chan[1]] in self._stalled):
-                n = self.transport.requeue(chan, records)
-                requeued_map[chan] = [ci for ci, _ in records[:n]]
-                ev.requeued[f"{chan[0]}->{chan[1]}"] = requeued_map[chan]
-                ev.discarded += len(records) - n
-            else:
-                ev.discarded += len(records)
+        with self.recorder.span("requeue", "control", epoch=self.epoch):
+            for chan, records in sorted(self._kept.items()):
+                if (replay and self._last_batch is not None
+                        and chan in {(c.src, c.dst) for c in self.plan.cut}
+                        and self.plan.assignment[chan[1]] in self._stalled):
+                    n = self.transport.requeue(chan, records)
+                    requeued_map[chan] = [ci for ci, _ in records[:n]]
+                    ev.requeued[f"{chan[0]}->{chan[1]}"] = requeued_map[chan]
+                    ev.discarded += len(records) - n
+                else:
+                    ev.discarded += len(records)
         self._kept = {}
         # 5. re-prove the paper's §6.1.1 refinement for the new epoch's
         #    plan (re-deployment must still trace-refine the original net)
-        try:
-            ev.refined = check_redeployment(self.net, old_plan, self.plan)
-        except Exception:
-            ev.refined = False
+        with self.recorder.span("reproof", "control", epoch=self.epoch):
+            try:
+                ev.refined = check_redeployment(self.net, old_plan,
+                                                self.plan)
+            except Exception:
+                ev.refined = False
         # 6. replay only the lost chunks of the failed batch.  Snapshot and
         #    clear the failure state first: if the replay fails TOO, the
         #    await loop repopulates it fresh for the next recover()
@@ -734,8 +892,10 @@ class ClusterController:
         self._needs_recovery = False
         try:
             if replay and pending_batch is not None:
-                result = self._replay(pending_batch, stalled, ok_cache,
-                                      requeued_map, ev)
+                with self.recorder.span("replay", "control",
+                                        epoch=self.epoch):
+                    result = self._replay(pending_batch, stalled, ok_cache,
+                                          requeued_map, ev)
                 # a resumed consumer consumes fewer records than the
                 # replaying producer re-sends: whatever it had already
                 # folded before the failure arrives again and lingers in
@@ -818,6 +978,8 @@ class ClusterController:
         if self._needs_recovery:
             self.recover(replay=False)
         t0 = time.monotonic()
+        self.recorder.instant("reconfigure", "control",
+                              hosts=hosts, epoch=self.epoch)
         old_plan = self.plan
         new_plan = (plan if plan is not None
                     else partition(self.net, hosts=hosts))
@@ -867,6 +1029,7 @@ class ClusterController:
             ev.restarted.append(h)
         self.epoch += 1
         self.transport.set_epoch(self.epoch)
+        self.recorder.instant("epoch_bump", "control", epoch=self.epoch)
         try:
             ev.refined = check_redeployment(self.net, old_plan, self.plan)
         except Exception:

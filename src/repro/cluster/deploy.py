@@ -84,7 +84,8 @@ class ClusterDeployment:
                  lanes: Optional[int] = None,
                  fuse: bool = True,
                  factory: Optional[tuple] = None,
-                 timeout_s: float = 300.0):
+                 timeout_s: float = 300.0,
+                 trace: bool = False):
         if net is None:
             if factory is None:
                 raise NetworkError("ClusterDeployment: need net= or factory=")
@@ -94,7 +95,8 @@ class ClusterDeployment:
                 raise NetworkError("ClusterDeployment: need hosts= or plan=")
             plan = partition(net, hosts=hosts)
         self.net = net
-        cfg = ExecConfig(microbatch_size, max_in_flight, lanes, fuse)
+        cfg = ExecConfig(microbatch_size, max_in_flight, lanes, fuse,
+                         trace=trace)
         t: ChannelTransport = (make_transport(transport)
                                if isinstance(transport, str) else transport)
         self.controller = ClusterController(net, plan, cfg, t, factory,
@@ -201,3 +203,25 @@ class ClusterDeployment:
         moves the failed hosts' processes onto survivors via the planner.
         Returns the replayed batch's completed result."""
         return self.controller.recover(mode=mode, replay=True)
+
+    # -- observability (deploy with ``trace=True``) --------------------------
+    def merged_trace(self) -> list:
+        """All trace events recorded so far — controller spans plus every
+        host's shipped ring buffer — merged onto the controller clock."""
+        return self.controller.merged_trace()
+
+    def export_trace(self, path: Optional[str] = None):
+        """Export the merged trace as Chrome trace-event JSON (open in
+        ``chrome://tracing`` or https://ui.perfetto.dev).  Returns the JSON
+        string; also writes it to ``path`` when given."""
+        return self.controller.export_trace(path)
+
+    def clear_trace(self) -> None:
+        """Drop all recorded events (batch isolation for conformance)."""
+        self.controller.clear_trace()
+
+    def metrics(self):
+        """A :class:`~repro.core.trace.MetricsSnapshot` of the live
+        deployment: queue depths/occupancy now, plus per-host throughput,
+        stall rates and channel bytes/s from the last completed batch."""
+        return self.controller.metrics()

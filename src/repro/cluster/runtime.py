@@ -36,6 +36,7 @@ from typing import Optional
 
 import numpy as np
 
+from repro.core import trace as _trace
 from repro.core.builder import build, make_emit_batch
 from repro.core.dataflow import Kind, Network, NetworkError
 from repro.core.stream import (EmitChunks, StreamExecutor, _SKIP,
@@ -65,6 +66,10 @@ class ExecConfig:
     max_in_flight: Optional[int] = None
     lanes: Optional[int] = None
     fuse: bool = True  # intra-partition chain fusion (core/stream.py)
+    # observability: give each host its own TraceRecorder (core/trace.py) —
+    # spans/instants ship back with every batch result and merge on the
+    # controller; False = recorders stay disabled (near-zero cost)
+    trace: bool = False
 
 
 @dataclasses.dataclass
@@ -90,6 +95,9 @@ class HostReport:
     stalled: bool = False
     resume_ci: Optional[int] = None
     epoch: int = 1  # plan epoch this report was produced under
+    # telemetry sample for MetricsSnapshot (core/trace.py): items/s,
+    # stalls/chunk, per-cut-channel sent/recv byte counters, wall seconds
+    metrics: dict = dataclasses.field(default_factory=dict)
 
 
 class ClusterResult(dict):
@@ -124,12 +132,19 @@ class PartitionExecutor(StreamExecutor):
     def __init__(self, compiled, *, plan: PartitionPlan, host: int,
                  endpoint: ChannelTransport, microbatch_size: int,
                  max_in_flight: Optional[int] = None,
-                 lanes: Optional[int] = None, fuse: bool = True):
+                 lanes: Optional[int] = None, fuse: bool = True,
+                 recorder=None):
         super().__init__(compiled, microbatch_size=microbatch_size,
-                         max_in_flight=max_in_flight, lanes=lanes, fuse=fuse)
+                         max_in_flight=max_in_flight, lanes=lanes, fuse=fuse,
+                         recorder=recorder)
         self.host = host
         self.ep = endpoint
         self._ingress_buf: dict = {}  # ci -> {shim: received value}
+        # always-on per-cut-channel byte counters ("src->dst" -> bytes this
+        # batch): the bytes/s feed of MetricsSnapshot / cluster_report —
+        # counting is a tree_leaves sum, negligible next to the send itself
+        self.sent_bytes: dict = {}
+        self.recv_bytes: dict = {}
         self.ingress = [(ingress_shim(c.src, c.dst), (c.src, c.dst))
                         for c in plan.ingress_of(host)]
         self.egress = [(egress_shim(c.src, c.dst), (c.src, c.dst))
@@ -178,7 +193,15 @@ class PartitionExecutor(StreamExecutor):
             if shim in buf:  # received before a mid-chunk interruption
                 chunk[shim] = buf[shim]
                 continue
-            v = self.ep.recv(chan, ci)
+            key = f"{chan[0]}->{chan[1]}"
+            with self.rec.span("recv", "transport", chan=key, ci=ci) as sp:
+                v = self.ep.recv(chan, ci)
+                nbytes = _payload_bytes(v)
+                sp.set(nbytes=nbytes)
+            self.recv_bytes[key] = self.recv_bytes.get(key, 0) + nbytes
+            if self.rec.enabled:
+                self.rec.counter(f"recv_bytes:{key}",
+                                 self.recv_bytes[key], "transport")
             if isinstance(v, str):
                 if v == SKIP:
                     v = _SKIP
@@ -197,7 +220,16 @@ class PartitionExecutor(StreamExecutor):
     def _forward_egress(self, ci: int, host_streams: dict) -> None:
         for shim, chan in self.egress:
             v = host_streams.pop(shim, _SKIP)
-            self.ep.send(chan, ci, SKIP if v is _SKIP else v)
+            payload = SKIP if v is _SKIP else v
+            key = f"{chan[0]}->{chan[1]}"
+            nbytes = _payload_bytes(payload)
+            with self.rec.span("send", "transport", chan=key, ci=ci,
+                               nbytes=nbytes):
+                self.ep.send(chan, ci, payload)
+            self.sent_bytes[key] = self.sent_bytes.get(key, 0) + nbytes
+            if self.rec.enabled:
+                self.rec.counter(f"sent_bytes:{key}",
+                                 self.sent_bytes[key], "transport")
 
     def _local_collects(self) -> list:
         return [p for p in self.net.collects() if not is_shim(p.name)]
@@ -212,16 +244,44 @@ class PartitionExecutor(StreamExecutor):
                       start_ci: int = 0) -> dict:
         """Stream chunks ``bounds[start_ci:]`` through this partition
         (``start_ci`` > 0: a replay of only the lost tail of a batch)."""
+        # fresh batch: byte counters restart (a resume keeps accumulating —
+        # the replayed tail belongs to the same batch)
+        self.sent_bytes = {}
+        self.recv_bytes = {}
         return self._run_plan(list(bounds), batch, start_ci=start_ci)
 
     def resume_partition(self, batch=None) -> dict:
         """Resume an interrupted batch from the saved replay state."""
         return self.resume_plan(batch)
 
+    def metrics_sample(self, wall_s: float) -> dict:
+        """The per-batch telemetry sample shipped in
+        :attr:`HostReport.metrics` — one host's row of the controller's
+        :class:`repro.core.trace.MetricsSnapshot`."""
+        st = self.stats
+        wall = max(wall_s, 1e-9)
+        return {
+            "wall_s": wall_s,
+            "items_per_s": st.n_items / wall,
+            "stalls_per_chunk": (st.stalls / st.n_chunks
+                                 if st.n_chunks else 0.0),
+            "sent_bytes": dict(self.sent_bytes),
+            "recv_bytes": dict(self.recv_bytes),
+        }
+
 
 # ==========================================================================
 # Per-host execution (shared by thread and process hosts)
 # ==========================================================================
+
+def _payload_bytes(value) -> int:
+    """Transport payload size: leaf nbytes summed (markers count 0)."""
+    if isinstance(value, str):
+        return 0
+    import jax
+    return sum(int(getattr(leaf, "nbytes", 0))
+               for leaf in jax.tree_util.tree_leaves(value))
+
 
 def _emit_batch(net: Network, instances: int):
     """Batch the host's *real* Emit (ignores boundary shims) — delegates to
@@ -244,10 +304,13 @@ def make_host_executor(plan: PartitionPlan, host: int,
     once."""
     sub = plan.subnetwork(host)
     cn = build(sub, mesh=mesh)
+    # cfg.trace: each host OWNS a recorder (correct attribution even when
+    # hosts are threads sharing this process); spans ship back per batch
+    rec = _trace.new_recorder(host=host) if cfg.trace else None
     return PartitionExecutor(cn, plan=plan, host=host, endpoint=endpoint,
                              microbatch_size=cfg.microbatch_size,
                              max_in_flight=cfg.max_in_flight, lanes=cfg.lanes,
-                             fuse=cfg.fuse)
+                             fuse=cfg.fuse, recorder=rec)
 
 
 def derive_cut_capacities(plan: PartitionPlan, cfg: ExecConfig) -> dict:

@@ -62,6 +62,7 @@ from typing import Optional
 import numpy as np
 
 from repro.core import csp
+from repro.core import trace as _trace
 from repro.core.dataflow import Network, NetworkError
 
 from .control import ClusterController
@@ -727,7 +728,12 @@ def run_scenario(seed: int, *, batches: int = 3,
     from repro.core import run_sequential
     oracle = float(run_sequential(net, instances)["collect"])
 
-    ctrl = ClusterController(net, plan, ExecConfig(microbatch_size=2),
+    # every scenario runs traced: per-host counting clocks keep the merged
+    # trace deterministic, and the CSP conformance projection below checks
+    # the OBSERVED run — faults, replays and all — against the model
+    _trace.configure(clock="counting")
+    ctrl = ClusterController(net, plan,
+                             ExecConfig(microbatch_size=2, trace=True),
                              transport, factory, timeout_s)
     ctrl.poll_s = 0.05
     failures: list = []
@@ -763,12 +769,27 @@ def run_scenario(seed: int, *, batches: int = 3,
     except (SimLivelock, RuntimeError) as e:
         failures.append(f"{type(e).__name__}: {e}")
     finally:
+        merged = ctrl.merged_trace()
         try:
             ctrl.close()
         except Exception:
             pass
+        _trace.configure(clock=None)
 
     # -- invariants --------------------------------------------------------
+    if outs:
+        # trace conformance (§6.1.1, dynamically): the merged multi-host
+        # trace — survivors' pre-stall events shipped with their error
+        # payloads, replayed chunks re-recorded by restarted hosts —
+        # projects onto the CSP event alphabet and must be a trace of the
+        # unpartitioned model.  Only meaningful once a batch completed.
+        try:
+            conf = _trace.check_conformance(net, merged)
+            if not conf.ok:
+                failures.append(f"trace conformance: {conf.detail} "
+                                f"(coverage {conf.coverage:.2f})")
+        except NetworkError as e:
+            failures.append(f"trace conformance: {e}")
     for i, out in enumerate(outs):
         got = float(np.asarray(out["collect"]))
         if got != oracle:

@@ -275,6 +275,19 @@ class ChannelTransport:
         channel whose (src, dst) pair survives the rebalance would hand the
         relocated consumer the same dead queue.  Default: nothing to do."""
 
+    def channel_depths(self) -> dict:
+        """``{(src, dst): records waiting right now}`` — the live queue-depth
+        probe behind :class:`repro.core.trace.MetricsSnapshot`.  Best effort
+        (mp ``qsize`` is approximate; -1 where the platform cannot say) and
+        zero-cost unless polled.  Default: no visibility."""
+        return {}
+
+    def channel_capacities(self) -> dict:
+        """``{(src, dst): FIFO bound}`` for the channels this transport
+        carries — depth/capacity is the occupancy a scaling policy watches
+        (1.0 = the cut channel is exerting backpressure)."""
+        return {}
+
     def close(self) -> None:
         pass
 
@@ -415,6 +428,20 @@ class _QueueTransport(ChannelTransport):
 
     def _requeue_limit(self, chan) -> int:
         return self._queues[chan].maxsize or DEFAULT_CAPACITY
+
+    def channel_depths(self) -> dict:
+        out = {}
+        for chan, q in self._queues.items():
+            try:
+                out[chan] = q.qsize()
+            except (NotImplementedError, OSError):
+                out[chan] = -1  # platform without sem_getvalue (macOS mp)
+        return out
+
+    def channel_capacities(self) -> dict:
+        return {chan: (getattr(q, "maxsize", 0)
+                       or getattr(q, "_maxsize", 0) or DEFAULT_CAPACITY)
+                for chan, q in self._queues.items()}
 
     def inject_eos(self, chan) -> bool:
         try:
@@ -675,6 +702,19 @@ class _ShmOps:
                     f"{self.name}: channel {chan} out of order: expected "
                     f"chunk {ci}, got {got_ci}")
             return self._consume_header(ring, header)
+
+    def channel_depths(self) -> dict:
+        out = {}
+        for chan, ring in self._rings.items():
+            try:
+                out[chan] = ring.data_q.qsize()
+            except (NotImplementedError, OSError):
+                out[chan] = -1
+        return out
+
+    def channel_capacities(self) -> dict:
+        return {chan: len(ring.slot_names)
+                for chan, ring in self._rings.items()}
 
 
 class SharedMemoryRing(_ShmOps, ChannelTransport):

@@ -46,6 +46,7 @@ from .processes import (
     Worker,
 )
 from . import netlog
+from . import trace
 from . import stream
 from .stream import (StreamExecutor, StreamStats, microbatch_plan,
                      slice_microbatch, stack_microbatches)
@@ -71,6 +72,6 @@ __all__ = [
     # streaming microbatch runtime
     "stream", "StreamExecutor", "StreamStats", "microbatch_plan",
     "slice_microbatch", "stack_microbatches",
-    # visualisation (paper §13 future work)
-    "netlog",
+    # visualisation (paper §13 future work) + unified tracing/metrics plane
+    "netlog", "trace",
 ]

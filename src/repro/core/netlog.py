@@ -23,6 +23,13 @@ def timeline(logs: Sequence[StageLog], width: int = 48) -> str:
     """ASCII Gantt of per-stage wall time (longest bar = bottleneck)."""
     if not logs:
         return "(no logged stages — run with logged=True)"
+    if not any(l.wall_s for l in logs):
+        # a run too fast for the clock: full-width bars would scream
+        # "bottleneck everywhere" about nothing — say what happened instead
+        lines = ["stage                     time      share  timeline"]
+        lines.extend(f"{l.stage:<24} {0.0:8.2f}ms    -  (no measurable time)"
+                     for l in logs)
+        return "\n".join(lines)
     total = sum(l.wall_s for l in logs) or 1e-12
     peak = max(l.wall_s for l in logs) or 1e-12
     lines = ["stage                     time      share  timeline"]
@@ -59,16 +66,27 @@ def report(cn: CompiledNetwork) -> str:
     return topology(cn.net) + "\n\n" + timeline(cn.logs)
 
 
-def cluster_report(plan, reports, events=None) -> str:
+def _fmt_rate(bps: float) -> str:
+    for unit in ("B/s", "KB/s", "MB/s", "GB/s"):
+        if abs(bps) < 1024.0 or unit == "GB/s":
+            return f"{bps:.1f}{unit}"
+        bps /= 1024.0
+    return f"{bps:.1f}GB/s"
+
+
+def cluster_report(plan, reports, events=None, depths=None) -> str:
     """Cross-host §8 report: per-host partition, streaming telemetry,
+    per-channel bytes/s (when the hosts sampled transport byte counters),
     captured failures (the paper's error-capture mechanism at cluster
     scale), and — when the elastic control plane has recovered the
     deployment — one ``recovery`` line per plan-epoch swap.
 
     ``plan`` is a :class:`repro.cluster.partition.PartitionPlan`; ``reports``
     a list of :class:`repro.cluster.runtime.HostReport`; ``events`` an
-    optional list of :class:`repro.cluster.control.RecoveryEvent`.  Pure
-    formatting — no cluster imports, so the core stays dependency-free.
+    optional list of :class:`repro.cluster.control.RecoveryEvent`;
+    ``depths`` an optional live ``{"src->dst": queue depth}`` sample
+    (:meth:`ChannelTransport.channel_depths`).  Pure formatting — no
+    cluster imports, so the core stays dependency-free.
 
     The rendering is DETERMINISTIC in the report/event *content*: hosts are
     sorted, capacity merges walk reports in host order, and per-event dicts
@@ -76,16 +94,28 @@ def cluster_report(plan, reports, events=None) -> str:
     report snapshots regardless of which host thread reported first."""
     chosen: dict = {}  # "src->dst" -> FIFO depth actually deployed
     epoch = 1
+    sent: dict = {}    # "src->dst" -> (bytes, wall_s) from the sender host
     for r in sorted(reports, key=lambda r: r.host):
         chosen.update(getattr(r, "capacities", None) or {})
         epoch = max(epoch, getattr(r, "epoch", 1))
+        m = getattr(r, "metrics", None) or {}
+        for chan, nbytes in (m.get("sent_bytes") or {}).items():
+            sent[chan] = (nbytes, m.get("wall_s") or 0.0)
     lines = [f"== cluster: {plan.net.name} over {len(reports)} host(s), "
              f"plan epoch {epoch} =="]
     for c in plan.cut:
-        cap = c.capacity or chosen.get(f"{c.src}->{c.dst}") or "default"
+        key = f"{c.src}->{c.dst}"
+        cap = c.capacity or chosen.get(key) or "default"
+        extra = ""
+        if key in sent:
+            nbytes, wall = sent[key]
+            extra += (f", {_fmt_rate(nbytes / wall)}" if wall
+                      else f", {nbytes}B")
+        if depths and key in depths and depths[key] >= 0:
+            extra += f", depth={depths[key]}"
         lines.append(f"  channel {c.src} -> {c.dst}: host "
                      f"{plan.assignment[c.src]} -> {plan.assignment[c.dst]} "
-                     f"(capacity={cap})")
+                     f"(capacity={cap}{extra})")
     for r in sorted(reports, key=lambda r: r.host):
         state = "ok" if r.ok else (
             "STALLED" if getattr(r, "stalled", False) else "FAILED")

@@ -49,6 +49,7 @@ from typing import Any, Optional
 
 import jax
 
+from . import trace as _trace
 from .builder import CompiledNetwork, _fan_merge, _fan_split
 from .dataflow import Distribution, Kind, Network, NetworkError
 from .processes import (AnyFanOne, Collect, Emit, OneFanAny, Worker)
@@ -340,11 +341,17 @@ class StreamExecutor:
 
     def __init__(self, compiled: CompiledNetwork, *, microbatch_size: int,
                  max_in_flight: Optional[int] = None,
-                 lanes: Optional[int] = None, fuse: bool = True):
+                 lanes: Optional[int] = None, fuse: bool = True,
+                 recorder: Optional[_trace.TraceRecorder] = None):
         self.cn = compiled
         self.net = compiled.net
         self.order = compiled.order
         self.mb = microbatch_size
+        # observability: every executor records through a TraceRecorder —
+        # the process-default (disabled unless trace.enable()) or an
+        # explicitly owned one (cluster hosts get one each, so spans carry
+        # correct host attribution even for thread-backed hosts)
+        self.rec = recorder if recorder is not None else _trace.current()
         # depth: bounded in-flight chunks; lanes: work-stealing lane count
         # (explicit OneFanAny branches define it, otherwise as many lanes as
         # chunks can be in flight)
@@ -448,7 +455,10 @@ class StreamExecutor:
         a truthful definition of a warm executor."""
         def counted(*args, _fn=fn, _label=label):
             self.trace_counts[_label] = self.trace_counts.get(_label, 0) + 1
-            return _fn(*args)
+            # this body runs only while jax traces, so the span brackets
+            # exactly the trace/compile work (builds AND shape retraces)
+            with self.rec.span("jit_trace", "compile", stage=_label):
+                return _fn(*args)
         return counted
 
     def _carry_jit(self, name: str):
@@ -634,6 +644,9 @@ class StreamExecutor:
                                          *collect_streams.values(),
                                          *host_streams.values()))
                     out = self._stage_jit(name, donate)(x)
+                    # conformance vocabulary: chunk ci traversed this stage
+                    # (fused chains report "a+b" — every member applied)
+                    self.rec.instant("stage", "csp", stage=label, ci=ci)
                     if donate:
                         rec = self.stats.donation.setdefault(label, [0, 0])
                         rec[0] += 1
@@ -683,20 +696,23 @@ class StreamExecutor:
     # -- retirement (the only synchronisation point) -------------------------
     def _retire(self, entry, host_accs) -> None:
         ci, lanes_used, host_streams, watermark = entry
-        # Collect is the CSP sink: block on this chunk's folded accumulators
-        # (snapshots — later chunks' folds keep streaming behind them)
-        for acc in watermark.values():
-            jax.block_until_ready(acc)
-        for name, stream in host_streams.items():
-            p = self.net.procs[name]
-            stream = jax.block_until_ready(stream)
-            leaves = jax.tree_util.tree_leaves(stream)
-            n = leaves[0].shape[0] if leaves else 0
-            acc = host_accs[name]
-            for i in range(n):
-                item = jax.tree_util.tree_map(lambda a: a[i], stream)
-                acc = p.fn(acc, item)
-            host_accs[name] = acc
+        with self.rec.span("retire", "stream", ci=ci):
+            # Collect is the CSP sink: block on this chunk's folded
+            # accumulators (snapshots — later chunks' folds keep streaming
+            # behind them)
+            for acc in watermark.values():
+                jax.block_until_ready(acc)
+            for name, stream in host_streams.items():
+                p = self.net.procs[name]
+                stream = jax.block_until_ready(stream)
+                self.rec.instant("collect", "csp", collect=name, ci=ci)
+                leaves = jax.tree_util.tree_leaves(stream)
+                n = leaves[0].shape[0] if leaves else 0
+                acc = host_accs[name]
+                for i in range(n):
+                    item = jax.tree_util.tree_map(lambda a: a[i], stream)
+                    acc = p.fn(acc, item)
+                host_accs[name] = acc
         for lane in lanes_used:
             self._outstanding[lane] -= 1
 
@@ -764,12 +780,14 @@ class StreamExecutor:
                            st.host_accs)
 
     def _drive(self, plan, batch, start_ci, jit_accs, host_accs):
+        rec = self.rec
         in_flight: deque = deque()
         for ci in range(start_ci, len(plan)):
             lo, hi = plan[ci]
             if len(in_flight) >= self.depth:  # backpressure BEFORE dispatch:
                 self.stats.stalls += 1       # ≤ `depth` chunks unretired
-                self._retire(in_flight.popleft(), host_accs)
+                with rec.span("stall", "stream", ci=ci):
+                    self._retire(in_flight.popleft(), host_accs)
             try:
                 chunk = self._chunk_inputs(ci, lo, hi, batch)
             except Exception as e:
@@ -784,19 +802,23 @@ class StreamExecutor:
                         ci, list(plan), jit_accs, host_accs,
                         dict(self._combine_carry), self.stats)
                 raise
-            streams, host_streams, lanes_used = self._dispatch_chunk(
-                ci, chunk, final=ci == len(plan) - 1)
-            self._forward_egress(ci, host_streams)
-            for name, x in streams.items():
-                if name not in jit_accs:  # first chunk: fused fold w/ init
-                    jit_accs[name] = self._stage_jit(name, False)(x)
-                else:  # later chunks: carry fold — same linear item order
-                    jit_accs[name] = self._carry_jit(name)(jit_accs[name], x)
+            with rec.span("dispatch", "stream", ci=ci):
+                streams, host_streams, lanes_used = self._dispatch_chunk(
+                    ci, chunk, final=ci == len(plan) - 1)
+                self._forward_egress(ci, host_streams)
+                for name, x in streams.items():
+                    rec.instant("collect", "csp", collect=name, ci=ci)
+                    if name not in jit_accs:  # first chunk: fold with init
+                        jit_accs[name] = self._stage_jit(name, False)(x)
+                    else:  # later chunks: carry fold — linear item order
+                        jit_accs[name] = self._carry_jit(name)(
+                            jit_accs[name], x)
             watermark = {name: jit_accs[name] for name in streams}
             # COMBINE accumulators throttle too (collect may see nothing yet)
             for cname, acc in self._combine_carry.items():
                 watermark[f"combine:{cname}"] = acc
             in_flight.append((ci, lanes_used, host_streams, watermark))
+            rec.counter("in_flight", len(in_flight), "stream")
         while in_flight:
             self._retire(in_flight.popleft(), host_accs)
 

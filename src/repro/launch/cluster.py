@@ -66,6 +66,10 @@ def main():
     ap.add_argument("--batches", type=int, default=1,
                     help="batches through ONE warm deployment (batch 0 "
                          "pays spawn+compile; the rest are steady-state)")
+    ap.add_argument("--trace", metavar="PATH", default=None,
+                    help="record per-host trace rings, merge them on the "
+                         "controller and export Chrome trace-event JSON "
+                         "to PATH (open in chrome://tracing or Perfetto)")
     args = ap.parse_args()
 
     import time
@@ -90,7 +94,7 @@ def main():
     same = True
     with ClusterDeployment(net, plan=plan, transport=args.transport,
                            microbatch_size=args.microbatch,
-                           factory=factory) as dep:
+                           factory=factory, trace=bool(args.trace)) as dep:
         for b in range(max(args.batches, 1)):
             t0 = time.perf_counter()
             out = dep.run(instances=instances)
@@ -102,9 +106,17 @@ def main():
                 print(f"[cluster] batch {b} "
                       f"({'cold' if b == 0 else 'warm'}): "
                       f"{wall * 1e3:.1f}ms identical={same}")
+        depths = {f"{s}->{d}": n for (s, d), n
+                  in dep.transport.channel_depths().items()}
+        if args.trace:
+            dep.export_trace(args.trace)
+            merged = dep.merged_trace()
+            print(f"[cluster] trace: {len(merged)} events from "
+                  f"{len({e.host for e in merged})} host(s) -> {args.trace}")
+            print(dep.metrics().describe())
     print(f"[cluster] {args.transport} over {args.hosts} hosts == "
           f"sequential oracle: {same}")
-    print(netlog.cluster_report(plan, out.reports))
+    print(netlog.cluster_report(plan, out.reports, depths=depths))
     if not same:
         raise SystemExit(1)
 

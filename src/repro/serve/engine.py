@@ -46,6 +46,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import trace as _trace
 from repro.core.dataflow import (Distribution, Kind, Network, NetworkError,
                                  ProcessDef)
 from repro.core.processes import (AnyFanOne, Collect, Emit, OneFanAny,
@@ -91,6 +92,10 @@ class Response:
     first_token_at: Optional[float]
     finished_at: float
     steps: int            # engine decode steps this request was active for
+    # the request's audited admission-queue transitions, straight from
+    # :class:`repro.core.stream.SlotPlan.events`: exactly one join and one
+    # leave for any request that decoded (empty for ``max_new=0``)
+    slot_events: tuple = ()
 
     @property
     def ttft(self) -> float:
@@ -316,7 +321,8 @@ class ClusterDecodeBackend:
     def __init__(self, spec: tuple, *, n_slots: int, shards: int = 2,
                  hosts: int = 2, transport="inprocess", max_len: int = 64,
                  prefill_chunk: int = 8, timeout_s: float = 60.0,
-                 max_recover_attempts: int = 4, recover_mode: str = "restart"):
+                 max_recover_attempts: int = 4, recover_mode: str = "restart",
+                 trace: bool = False):
         from repro.cluster.deploy import ClusterDeployment
         if shards <= 0 or n_slots % shards:
             raise NetworkError(f"ClusterDecodeBackend: n_slots={n_slots} "
@@ -344,7 +350,8 @@ class ClusterDecodeBackend:
                    (spec, n_slots, shards, max_len, prefill_chunk))
         self.dep = ClusterDeployment(
             factory[0](*factory[1]), hosts=hosts, transport=transport,
-            microbatch_size=1, factory=factory, timeout_s=timeout_s)
+            microbatch_size=1, factory=factory, timeout_s=timeout_s,
+            trace=trace)
         self.dep.start()
 
     # -- farm plumbing ------------------------------------------------------
@@ -456,10 +463,12 @@ class ServeEngine:
     numerical one."""
 
     def __init__(self, backend, *, eos_id: int = -1,
-                 time_fn=time.monotonic):
+                 time_fn=time.monotonic,
+                 recorder: Optional[_trace.TraceRecorder] = None):
         self.backend = backend
         self.eos_id = eos_id
         self.time_fn = time_fn
+        self.rec = recorder if recorder is not None else _trace.current()
         self.n_slots = backend.n_slots
         self.plan = SlotPlan(backend.n_slots)
         self.pending: list[Request] = []
@@ -483,6 +492,8 @@ class ServeEngine:
             raise ValueError(f"request {req.rid}: duplicate rid")
         self._known.add(req.rid)
         now = self.time_fn()
+        self.rec.instant("submit", "serve", rid=req.rid,
+                         prompt_len=len(req.prompt), max_new=req.max_new)
         if req.max_new <= 0:
             self._finish(Response(
                 rid=req.rid, prompt=req.prompt, tokens=(),
@@ -508,7 +519,9 @@ class ServeEngine:
         active = self.plan.active()
         if not active:
             return 0
-        nxt = self.backend.decode(self.last_tok, self.plan.mask())
+        with self.rec.span("decode_chunk", "serve", step=self.steps_run,
+                           active=len(active)):
+            nxt = self.backend.decode(self.last_tok, self.plan.mask())
         now = self.time_fn()
         self.steps_run += 1
         self.plan.tick()
@@ -519,6 +532,7 @@ class ServeEngine:
             live.steps += 1
             if live.first_token_at is None:
                 live.first_token_at = now
+                self.rec.instant("first_token", "serve", rid=rid, slot=slot)
             self.last_tok[slot] = tok
             live.left -= 1
             if live.left <= 0 or tok == self.eos_id:
@@ -531,7 +545,9 @@ class ServeEngine:
                                    else "length"),
                     submitted_at=live.submitted_at,
                     first_token_at=live.first_token_at,
-                    finished_at=now, steps=live.steps))
+                    finished_at=now, steps=live.steps,
+                    slot_events=tuple(e for e in self.plan.events
+                                      if e.rid == rid)))
         return len(active)
 
     def run_until_drained(self) -> list[Response]:
@@ -550,10 +566,19 @@ class ServeEngine:
     def __exit__(self, *exc) -> None:
         self.close()
 
+    @property
+    def slot_events(self) -> list:
+        """The full audited admission trace (`SlotEvent` per join/leave),
+        across every request, in transition order."""
+        return list(self.plan.events)
+
     # -- internals -----------------------------------------------------------
     def _finish(self, resp: Response) -> None:
         self.responses[resp.rid] = resp
         self.completed.append(resp)
+        self.rec.instant("done", "serve", rid=resp.rid,
+                         reason=resp.finish_reason,
+                         tokens=len(resp.tokens))
 
     def _fill_slots(self) -> None:
         """Admission: seat queued requests into free slots (lowest slot,
@@ -562,6 +587,8 @@ class ServeEngine:
         while self.pending and self.plan.n_free:
             req = self.pending.pop(0)
             slot = self.plan.claim(req.rid)
+            self.rec.instant("admit", "serve", rid=req.rid, slot=slot,
+                             step=self.plan.step)
             self.backend.reset(slot)
             # chunked prefill: all but the last prompt token flow through
             # the microbatch plan; a single-token prompt has no context —
@@ -573,7 +600,9 @@ class ServeEngine:
                 act = np.zeros(pc, bool)
                 toks[:hi - lo] = ctx[lo:hi]
                 act[:hi - lo] = True
-                self.backend.prefill(slot, toks, act)
+                with self.rec.span("prefill", "serve", rid=req.rid,
+                                   slot=slot, lo=lo, hi=hi):
+                    self.backend.prefill(slot, toks, act)
             self.last_tok[slot] = req.prompt[-1]
             self._live[req.rid] = _Live(
                 req=req,

@@ -918,6 +918,11 @@ class TestElasticRecovery:
             assert float(out["collect"]) == float(seq)
             victim = dep.plan.assignment["emit"]
             survivor = next(h for h in dep.plan.hosts() if h != victim)
+            # each process host reports on its OWN queue — a SIGKILL landing
+            # mid-report kills the corpse holding its queue's writer lock,
+            # and a shared queue would deadlock the survivor's next report
+            q_before = dict(dep.controller._result_qs)
+            assert len({id(q) for q in q_before.values()}) == len(q_before)
             dep.kill_host(victim)
             with pytest.raises(ClusterError) as ei:
                 dep.run(instances=10)
@@ -931,6 +936,10 @@ class TestElasticRecovery:
             (ev,) = dep.events
             assert ev.dead == [victim] and ev.restarted == [victim]
             assert ev.refined is True
+            # the corpse's (possibly lock-bricked) queues were replaced;
+            # the survivor still reports on its warm one
+            assert dep.controller._result_qs[victim] is not q_before[victim]
+            assert dep.controller._result_qs[survivor] is q_before[survivor]
             # and the deployment is warm again end-to-end
             out = dep.run(instances=10)
             assert float(out["collect"]) == float(seq)

@@ -85,3 +85,48 @@ class TestClusterReportDeterminism:
             "refinement(epoch 2)=True; wall 0.25s",
         ])
         assert got == want
+
+
+class TestTimelineZeroWall:
+    def test_all_zero_wall_renders_no_bars(self):
+        """Regression: a run faster than the clock's resolution used to
+        render every stage as a full-width bar (share 0/0), screaming
+        bottleneck about nothing."""
+        from repro.core.builder import StageLog
+
+        logs = [StageLog(stage="emit", kind="terminal", wall_s=0.0),
+                StageLog(stage="worker", kind="functional", wall_s=0.0)]
+        out = netlog.timeline(logs)
+        assert "(no measurable time)" in out
+        assert "█" not in out
+        assert "emit" in out and "worker" in out
+
+    def test_nonzero_wall_keeps_bars(self):
+        from repro.core.builder import StageLog
+
+        logs = [StageLog(stage="emit", kind="terminal", wall_s=0.001),
+                StageLog(stage="worker", kind="functional", wall_s=0.002)]
+        out = netlog.timeline(logs)
+        assert "█" in out and "(no measurable time)" not in out
+        assert "bottleneck: worker" in out
+
+
+class TestClusterReportChannelTelemetry:
+    def test_bytes_per_s_and_depth_columns(self):
+        plan = _plan()
+        reports = _reports([0, 1])
+        reports[0].metrics = {"wall_s": 2.0,
+                              "sent_bytes": {"stage0->stage1": 4096}}
+        out = netlog.cluster_report(plan, reports,
+                                    depths={"stage0->stage1": 3})
+        assert "(capacity=3, 2.0KB/s, depth=3)" in out
+
+    def test_unsampled_channels_render_unchanged(self):
+        out = netlog.cluster_report(_plan(), _reports([0, 1]))
+        assert "(capacity=3)" in out
+
+    def test_negative_depth_is_suppressed(self):
+        """qsize() unsupported (macOS mp) reports -1: no depth column."""
+        out = netlog.cluster_report(_plan(), _reports([0, 1]),
+                                    depths={"stage0->stage1": -1})
+        assert "depth=" not in out

@@ -144,6 +144,40 @@ def test_eos_truncates_and_reports_reason():
     assert resp.tokens == tuple(full[:full.index(eos) + 1])
 
 
+def test_slot_events_audit_matches_trace():
+    """The observability contract (ISSUE 7): every decoded request's
+    Response carries exactly its own join + leave SlotEvents, the engine
+    exposes the full audit trail, and that trail agrees with the trace
+    recorder's admit/done instants — the two views of slot occupancy can
+    never drift apart."""
+    from repro.core.trace import CountingClock, TraceRecorder
+
+    model, params = _toy()
+    rec = TraceRecorder(host="serve", clock=CountingClock())
+    eng = ServeEngine(LocalDecodeBackend(model, params, n_slots=2,
+                                         max_len=32), recorder=rec)
+    for i in range(3):  # 3 requests > 2 slots forces a slot hand-off
+        eng.submit(Request(rid=i, prompt=(2 + i,), max_new=4))
+    eng.run_until_drained()
+    for i in range(3):
+        r = eng.poll(i)
+        assert len(r.slot_events) == 2, r.slot_events
+        join, leave = r.slot_events
+        assert (join.kind, leave.kind) == ("join", "leave")
+        assert join.slot == leave.slot and join.step <= leave.step
+        assert all(e.rid == i for e in r.slot_events)
+    # the engine-level trail is the union of the per-response views
+    trail = eng.slot_events
+    assert sorted((e.rid, e.kind) for e in trail) == sorted(
+        (i, k) for i in range(3) for k in ("join", "leave"))
+    # ...and it matches the trace plane: one admit + one done per rid
+    admits = {e.args["rid"] for e in rec.events() if e.name == "admit"}
+    dones = {e.args["rid"] for e in rec.events() if e.name == "done"}
+    assert admits == dones == {0, 1, 2}
+    joined = {e.rid for e in trail if e.kind == "join"}
+    assert joined == admits
+
+
 # ==========================================================================
 # Continuous batching ≡ sequential generation
 # ==========================================================================
