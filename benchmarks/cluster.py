@@ -226,6 +226,85 @@ def run(*, smoke: bool = False, hosts: int = 2,
                      f"requeued={sum(len(v) for v in ev.requeued.values())} "
                      f"recovery_jit_builds="
                      f"{sum(r.jit_builds for r in rec.reports)}"))
+
+    # -- durability: what the snapshot stream costs, and what it buys ------
+    # overhead row: the same warm deployment with and without fold
+    # snapshots.  Snapshots exist for LONG batches (the batches worth
+    # replaying from a chunk boundary), so this row measures a ~150ms
+    # batch: the per-snapshot cost (drain to a retire-consistent boundary
+    # + async Checkpointer write + the controller's write-ahead meta
+    # record) is fixed, and the cadence amortises it below 5% (gated via
+    # overhead_ok)
+    import shutil
+    import tempfile
+
+    ofargs = (16, 96, 96, 12000)
+    ofactory = (make_farm, ofargs)
+    onet = ofactory[0](*ofargs)
+    oplan = partition(onet, hosts=hosts)
+    oseq = run_sequential(onet, ofargs[0])["collect"]
+
+    def _best_warm(dep) -> tuple:
+        dep.run(instances=ofargs[0])  # cold: spawn + compile
+        best = float("inf")
+        for _ in range(max(warm_batches, 3)):
+            t0 = time.perf_counter()
+            wout = dep.run(instances=ofargs[0])
+            best = min(best, time.perf_counter() - t0)
+        return best, wout
+
+    with ClusterDeployment(onet, plan=oplan, transport="inprocess",
+                           microbatch_size=mb, factory=ofactory) as dep:
+        base, bout = _best_warm(dep)
+    sdir = tempfile.mkdtemp(prefix="bench_durable_")
+    try:
+        with ClusterDeployment(onet, plan=oplan, transport="inprocess",
+                               microbatch_size=mb, factory=ofactory,
+                               snapshot_every=4, snapshot_dir=sdir) as dep:
+            snap, sout = _best_warm(dep)
+        same = bool(sout["collect"] == oseq and bout["collect"] == oseq)
+        pct = 100.0 * (snap - base) / base
+        rows.append(("cluster_inprocess_snapshot_overhead", snap * 1e6,
+                     f"identical={same} overhead={pct:+.1f}% "
+                     f"overhead_ok={pct <= 5.0} "
+                     f"base_us={base * 1e6:.0f} snap_us={snap * 1e6:.0f} "
+                     f"snapshot_every=4 hosts={hosts}"))
+    finally:
+        shutil.rmtree(sdir, ignore_errors=True)
+
+    # replay row: a host failure AFTER a fold snapshot — recover() resumes
+    # the stateful host from the snapshot chunk, not chunk 0 (gated via
+    # from_snap_ok: the replay must start past chunk 0 and stay identical)
+    _TRIP["n"] = 0
+    n_chunks = (instances + mb - 1) // mb
+    trip_at = instances + instances - mb  # batch 2, last chunk
+    rfactory = (make_recovery_farm, fargs + (trip_at,))
+    rnet = rfactory[0](*rfactory[1])
+    sdir = tempfile.mkdtemp(prefix="bench_replay_")
+    try:
+        with ClusterDeployment(rnet, hosts=hosts, transport="inprocess",
+                               microbatch_size=mb, factory=rfactory,
+                               snapshot_every=2, snapshot_dir=sdir) as dep:
+            dep.run(instances=instances)
+            failed = False
+            try:
+                dep.run(instances=instances)
+            except ClusterError:
+                failed = True
+            t0 = time.perf_counter()
+            rec = dep.recover()
+            rwall = time.perf_counter() - t0
+            (ev,) = dep.events
+            from_chunk = max(ev.replay_from.values(), default=0)
+            same = failed and bool(int(rec["collect"]) == int(seq))
+        rows.append(("cluster_replay_from_snapshot", rwall * 1e6,
+                     f"identical={same} from_chunk={from_chunk} "
+                     f"from_snap_ok={from_chunk > 0} "
+                     f"chunks={n_chunks} snapshot_every=2 "
+                     f"replayed_hosts={len(ev.replay_from)} "
+                     f"epoch={rec.epoch} refined={ev.refined}"))
+    finally:
+        shutil.rmtree(sdir, ignore_errors=True)
     return rows
 
 
@@ -242,10 +321,11 @@ def main() -> None:
     for name, us, derived in rows:
         print(f"{name},{us:.2f},{derived}")
         blob.append({"name": name, "us_per_call": us, "derived": derived})
-    if any("identical=False" in r["derived"] or "refines=False" in r["derived"]
-           for r in blob):
-        print("cluster benchmark: oracle divergence or refinement failure",
-              file=sys.stderr)
+    bad = ("identical=False", "refines=False", "overhead_ok=False",
+           "from_snap_ok=False")
+    if any(b in r["derived"] for r in blob for b in bad):
+        print("cluster benchmark: oracle divergence, refinement failure, "
+              "or durability gate miss", file=sys.stderr)
         sys.exit(1)
     with open("BENCH_cluster.json", "w") as f:
         json.dump({"benchmark": "cluster",

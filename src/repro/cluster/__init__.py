@@ -15,6 +15,7 @@ speed; :func:`run_cluster` is the one-shot convenience on top.
 
 from .control import ClusterController, RecoveryEvent
 from .deploy import ClusterDeployment
+from .durable import DeploymentStore, DurabilityEvent
 from .partition import (PartitionPlan, abstract_partitioned_model,
                         auto_assignment, check_redeployment,
                         check_refinement, partition, repartition_without)
@@ -22,7 +23,8 @@ from .runtime import (ClusterError, ClusterResult, ExecConfig, HostReport,
                       PartitionExecutor, derive_cut_capacities,
                       make_host_executor, run_cluster)
 from .sim import (FaultEvent, FaultSchedule, SimClock, SimTransport,
-                  run_pipe_brick_scenario, run_scenario)
+                  run_kill_controller_scenario, run_pipe_brick_scenario,
+                  run_scenario, run_stall_race_scenario)
 from .transport import (ChannelTransport, InProcess, JaxMesh,
                         MultiProcessPipe, SharedMemoryRing, TransportError,
                         make_transport)
@@ -36,6 +38,8 @@ __all__ = [
     "HostReport", "ExecConfig", "ClusterDeployment", "ClusterController",
     "RecoveryEvent",
     "derive_cut_capacities", "make_host_executor",
+    "DeploymentStore", "DurabilityEvent",
     "FaultEvent", "FaultSchedule", "SimClock", "SimTransport",
     "run_scenario", "run_pipe_brick_scenario",
+    "run_kill_controller_scenario", "run_stall_race_scenario",
 ]

@@ -49,6 +49,7 @@ from repro.core import trace as _trace
 from repro.core.dataflow import Distribution, Kind, Network, NetworkError
 from repro.core.stream import microbatch_plan
 
+from .durable import DeploymentStore, DurabilityEvent, to_host
 from .partition import (PartitionPlan, check_redeployment, is_shim,
                         partition, repartition_without)
 from .runtime import (ClusterError, ClusterResult, ExecConfig, HostReport,
@@ -169,8 +170,11 @@ def _serve_host(sub, ex, plan, host, endpoint, work_q, result_q,
         msg = work_q.get()
         if isinstance(msg, str) and msg == _SHUTDOWN:
             break
-        kind, batch_id, epoch, bounds, instances, batch, start_ci = msg
+        # "replay_snap" messages append the on-disk fold snapshot to resume
+        # from; every other kind is the bare 7-tuple
+        kind, batch_id, epoch, bounds, instances, batch, start_ci, *extra = msg
         endpoint.epoch = epoch
+        ex.snapshot_tag = (batch_id, epoch)  # stamps fold snapshots
         before = ex.new_traces()  # builds AND shape-driven retraces
         t0 = time.monotonic()
         try:
@@ -178,11 +182,16 @@ def _serve_host(sub, ex, plan, host, endpoint, work_q, result_q,
                 batch = _emit_batch(sub, instances)
             if kind == "replay" and ex.replay_state is not None:
                 out = ex.resume_partition(batch)  # only the lost chunks
+            elif kind == "replay_snap":
+                # replay from the last on-disk fold snapshot: accumulators
+                # restored as of start_ci, only the tail re-streams
+                ex.reset_run_state()
+                out = ex.resume_from_state(extra[0], batch)
             else:
                 ex.reset_run_state()
                 out = ex.run_partition(list(bounds), batch,
                                        start_ci=start_ci)
-            result_q.put(("ok", host, batch_id,
+            result_q.put(("ok", host, batch_id, epoch,
                           _encode_result(out) if encode else out,
                           _host_stats(ex, before, t0)))
         except Exception:
@@ -190,14 +199,14 @@ def _serve_host(sub, ex, plan, host, endpoint, work_q, result_q,
             if ex.replay_state is not None:
                 # a PEER died mid-stream: this host is a healthy survivor
                 # holding a resumable fold — report where it stopped
-                result_q.put(("stalled", host, batch_id,
+                result_q.put(("stalled", host, batch_id, epoch,
                               (ex.replay_state.next_ci,
                                traceback.format_exc()), stats))
             else:
                 # this host's own failure: capture it, reset, stay warm
                 ex.reset_run_state()
                 _signal_failure(plan, host, endpoint)
-                result_q.put(("err", host, batch_id,
+                result_q.put(("err", host, batch_id, epoch,
                               traceback.format_exc(), stats))
 
 
@@ -211,7 +220,7 @@ def _process_host_entry(factory, fargs, assignment: dict, host: int,
         ex = make_host_executor(plan, host, endpoint, cfg)
         sub = ex.net
     except Exception:
-        result_q.put(("err", host, None, traceback.format_exc(), None))
+        result_q.put(("err", host, None, -1, traceback.format_exc(), None))
         return
     _serve_host(sub, ex, plan, host, endpoint, work_q, result_q,
                 encode=True)
@@ -227,13 +236,20 @@ class ClusterController:
 
     def __init__(self, net: Network, plan: PartitionPlan, cfg: ExecConfig,
                  transport: ChannelTransport, factory: Optional[tuple],
-                 timeout_s: float):
+                 timeout_s: float,
+                 store: Optional[DeploymentStore] = None):
         self.net = net
         self.plan = plan
         self.cfg = cfg
         self.transport = transport
         self.factory = factory
         self.timeout_s = timeout_s
+        # durability (cluster/durable.py): controller meta persists through
+        # the store at batch boundaries and around every recovery, so a
+        # fresh controller can adopt() this deployment after a crash
+        self.store = store
+        self._meta_seq = 0
+        self.durable_events: list[DurabilityEvent] = []
         self.poll_s = 1.0  # result-queue poll (dead-host detection cadence;
         # the fault-injection simulator shrinks it to keep scenarios fast)
         self.epoch = 1
@@ -305,6 +321,7 @@ class ClusterController:
             self.close()
             raise
         self._started = True
+        self._persist_meta("started")
 
     def _bind_meshes(self) -> None:
         """Per-host submeshes (JaxMesh transport only) + channel binding.
@@ -356,7 +373,7 @@ class ClusterController:
                                         mesh=self._meshes.get(h))
                 self.executors[h] = ex
             except Exception:
-                self._result_q.put(("err", h, None,
+                self._result_q.put(("err", h, None, -1,
                                     traceback.format_exc(), None))
                 return
             _serve_host(ex.net, ex, self.plan, h, endpoint,
@@ -488,6 +505,12 @@ class ClusterController:
         bounds = microbatch_plan(instances, self.cfg.microbatch_size)
         batch_id = self._batch_seq
         self._batch_seq += 1
+        # durable write-ahead: record the batch BEFORE dispatch so a
+        # controller SIGKILLed mid-batch leaves a replayable descriptor —
+        # the adopter sees needs_recovery and resumes from the host
+        # snapshots; _finish_batch overwrites this with the real outcome
+        self._persist_meta(f"batch {batch_id} dispatched",
+                           pending=(batch_id, bounds, instances, batch))
         # an explicit batch feeds the real Emit only — don't pickle it
         # through every host's work queue when one host owns the Emit
         emit_hosts = {self.plan.assignment[e.name]
@@ -521,6 +544,7 @@ class ClusterController:
             self._needs_recovery = True
             self._last_batch = (batch_id, bounds, instances, batch)
             self._ok_cache = results
+            self._persist_meta(f"batch {batch_id} failed")
             from repro.core import netlog
             try:
                 depths = {f"{s}->{d}": n for (s, d), n
@@ -536,6 +560,7 @@ class ClusterController:
             merged.update(results[h])
         merged.reports = report_list
         merged.epoch = self.epoch
+        self._persist_meta(f"batch {batch_id} ok")
         return merged
 
     # -- observability (core/trace.py) -------------------------------------
@@ -673,8 +698,17 @@ class ClusterController:
                             pending.discard(h)
                 self._quiesce(failed_hosts)
                 continue
-            status, h, bid, payload, stats = backlog.pop(0)
+            status, h, bid, ep, payload, stats = backlog.pop(0)
             if h not in pending:
+                continue
+            if ep != -1 and ep != self.epoch:
+                # stale report from an abandoned epoch: a host that stalled
+                # past timeout_s eventually finishes the OLD attempt and
+                # reports under the old epoch — same batch id as the replay,
+                # so only the epoch tells them apart.  Accepting it would
+                # record a pre-recovery result (or re-quiesce healthy
+                # survivors) against the current attempt; the host still
+                # owes a current-epoch report for the queued message.
                 continue
             if stats is not None:
                 (reports[h].stats_summary, reports[h].donation_summary,
@@ -727,6 +761,62 @@ class ClusterController:
                                            keep=keep).items():
                 if kept:
                     self._kept.setdefault(chan, []).extend(kept)
+
+    # -- durability (cluster/durable.py) -----------------------------------
+    def _persist_meta(self, note: str = "",
+                      pending: Optional[tuple] = None) -> None:
+        """Write the controller's durable state through the store: the
+        epoch-stamped plan assignment, the undelivered-chunk ledger, the
+        pending-batch descriptor and cached per-host results.  Everything a
+        fresh controller needs to adopt() this deployment.
+
+        ``pending`` is the write-ahead form: the durable record carries the
+        just-dispatched batch with ``needs_recovery`` set (so an adopter of
+        a controller that died mid-batch replays it) WITHOUT flipping the
+        live controller's own flags — the batch is still running here."""
+        if self.store is None:
+            return
+        last = pending if pending is not None else self._last_batch
+        with self.recorder.span("persist", "durable", epoch=self.epoch,
+                                seq=self._meta_seq + 1):
+            state = {
+                "epoch": self.epoch,
+                "assignment": dict(self.plan.assignment),
+                "cfg": dataclasses.asdict(self.cfg),
+                "batch_seq": self._batch_seq,
+                "needs_recovery": (True if pending is not None
+                                   else self._needs_recovery),
+                "stalled": dict(self._stalled),
+                "dead": sorted(self._dead),
+                "erred": sorted(self._erred),
+                "last_batch": None if last is None else to_host(last),
+                "ok_cache": to_host(self._ok_cache),
+                "kept": {chan: to_host(records)
+                         for chan, records in self._kept.items()},
+            }
+            self._meta_seq += 1
+            self.store.save_meta(self._meta_seq, state)
+            if pending is None:
+                # batch outcomes / recovery / adoption must be on disk
+                # before anyone (a new controller, a test) reads the store;
+                # the write-ahead record alone may ride the async queue
+                self.store.flush()
+        self.durable_events.append(DurabilityEvent(
+            kind="snapshot", epoch=self.epoch, step=self._meta_seq,
+            note=note))
+
+    def _snapshot_ci(self, h: int, batch_id: int,
+                     bounds: list) -> tuple[int, Optional[dict]]:
+        """The chunk index host ``h``'s latest on-disk fold snapshot covers
+        for this batch (0 / None when there is none or it doesn't match)."""
+        if self.store is None:
+            return 0, None
+        snap = self.store.load_host_snapshot(h)
+        if (snap is None or snap.get("batch_id") != batch_id
+                or list(snap.get("bounds", [])) != [tuple(b) for b in bounds]
+                or not 0 < snap.get("next_ci", 0) <= len(bounds)):
+            return 0, None
+        return snap["next_ci"], snap
 
     # -- recovery ----------------------------------------------------------
     def recover(self, mode: str = "restart",
@@ -912,6 +1002,7 @@ class ClusterController:
         finally:
             ev.wall_s = time.monotonic() - t0
             self.events.append(ev)
+            self._persist_meta(f"recovered to epoch {self.epoch}")
         return result
 
     def _rebalance(self, ev: RecoveryEvent) -> None:
@@ -1036,6 +1127,94 @@ class ClusterController:
             ev.refined = False
         ev.wall_s = time.monotonic() - t0
         self.events.append(ev)
+        self._persist_meta(f"reconfigured to epoch {self.epoch}")
+        return ev
+
+    # -- controller-crash recovery: adopt a deployment's on-disk state ------
+    def adopt_state(self, meta: dict,
+                    salvage: Optional[dict] = None) -> RecoveryEvent:
+        """Take ownership of a previous deployment's durable state: restore
+        the ledger and pending-batch descriptor, bump the epoch so anything
+        the dead controller left in flight is invisible, and re-prove the
+        §6.1.1 refinement across the restart (:func:`check_redeployment`).
+
+        Without ``salvage`` every host worker spawns fresh (a full-cluster
+        loss: fold state comes back from the on-disk snapshots at the next
+        ``recover()``).  With ``salvage`` — the previous controller's live
+        wiring (``transport``/``work_qs``/``procs``/...) — surviving
+        workers are re-parked under the new controller with their warm
+        executors and compiled jits intact: 0 new jits on survivors."""
+        if self._started:
+            raise NetworkError("adopt_state: controller already started")
+        t0 = time.monotonic()
+        old_epoch = meta["epoch"]
+        old_plan = partition(self.net, assignment=meta["assignment"])
+        self._batch_seq = meta["batch_seq"]
+        if self.store is not None:
+            self._meta_seq = self.store.meta_step() or 0
+        self.recorder.instant("adopt", "control", epoch=old_epoch)
+        ev = RecoveryEvent(
+            epoch_from=old_epoch, epoch_to=old_epoch + 1, mode="adopt",
+            dead=[], erred=[], stalled={}, restarted=[], moved={},
+            requeued={}, discarded=0, replay_from={})
+        if salvage is not None:
+            self.transport = salvage["transport"]
+            self._procs = salvage.get("procs", {})
+            self._threads = salvage.get("threads", {})
+            self._work_qs = salvage["work_qs"]
+            self._result_q = salvage.get("result_q")
+            self._result_qs = salvage.get("result_qs", {})
+            self.executors = salvage.get("executors", {})
+            self._meshes = salvage.get("meshes",
+                                       {h: None for h in self._live})
+            self._started = True
+            self._transport_up = True
+
+            def _alive(h):
+                th = self._threads.get(h)
+                p = self._procs.get(h)
+                return ((th is not None and th.is_alive())
+                        or (p is not None and p.is_alive()))
+
+            # survivors keep warm executors + any in-memory stalled fold;
+            # hosts that died with the controller are marked dead so the
+            # pending recover() restarts them (fold from disk snapshots)
+            self._dead = {h for h in self._live if not _alive(h)}
+            self._dead |= set(meta["dead"]) & set(self._live)
+            self._stalled = {h: ci for h, ci in meta["stalled"].items()
+                             if h in self._live and h not in self._dead}
+            self._erred = set(meta["erred"]) & set(self._live) - self._dead
+        else:
+            # full-cluster loss: every worker spawns fresh, so nobody holds
+            # in-memory fold state — the previous dead/stalled/erred sets
+            # are moot (replay restores stateful folds from the snapshots)
+            self.start()
+        self._needs_recovery = bool(meta["needs_recovery"])
+        self._last_batch = meta["last_batch"]
+        # completed hosts' cached results are plain data — epoch-independent,
+        # so hosts the replay doesn't touch can still sit out and reuse them
+        self._ok_cache = dict(meta["ok_cache"])
+        self._kept = {tuple(chan): list(records)
+                      for chan, records in meta["kept"].items()}
+        self.epoch = old_epoch + 1
+        self.transport.set_epoch(self.epoch)
+        self.recorder.instant("epoch_bump", "control", epoch=self.epoch)
+        ev.dead = sorted(self._dead)
+        ev.erred = sorted(self._erred)
+        ev.stalled = dict(self._stalled)
+        with self.recorder.span("reproof", "control", epoch=self.epoch):
+            try:
+                ev.refined = check_redeployment(self.net, old_plan,
+                                                self.plan)
+            except Exception:
+                ev.refined = False
+        ev.wall_s = time.monotonic() - t0
+        self.events.append(ev)
+        self.durable_events.append(DurabilityEvent(
+            kind="adopt", epoch=self.epoch,
+            step=(self.store.meta_step() or 0) if self.store else 0,
+            note=f"batch_seq={self._batch_seq}"))
+        self._persist_meta("adopted")
         return ev
 
     def _host_stateful(self, h: int) -> bool:
@@ -1085,12 +1264,10 @@ class ClusterController:
         requeued_next = {chan: max(cis) + 1
                          for chan, cis in requeued_map.items() if cis}
         from_ci: dict = {}
+        snap_state: dict = {}  # host -> on-disk fold snapshot to resume from
         for h in reversed(self._host_order()):
             if h in stalled:
                 from_ci[h] = stalled[h]
-                continue
-            if self._host_stateful(h):
-                from_ci[h] = 0
                 continue
             needs = []
             for c in plan.egress_of(h):
@@ -1100,7 +1277,20 @@ class ClusterController:
                 if dst_h in stalled:
                     need = max(need, requeued_next.get(chan, 0))
                 needs.append(need)
-            from_ci[h] = min(needs) if needs else n
+            limit = min(needs) if needs else n
+            if self._host_stateful(h):
+                # a stateful partition that lost its in-memory fold re-runs
+                # from chunk 0 — unless a durable snapshot covers a prefix
+                # AND no downstream consumer needs chunks before it (the
+                # snapshot holds fold state only at its own boundary)
+                ci, snap = self._snapshot_ci(h, batch_id, bounds)
+                if snap is not None and ci <= limit:
+                    from_ci[h] = ci
+                    snap_state[h] = snap
+                else:
+                    from_ci[h] = 0
+                continue
+            from_ci[h] = limit
         participants = [
             h for h in self._live
             if h in stalled or from_ci[h] < n
@@ -1108,10 +1298,21 @@ class ClusterController:
         emit_hosts = {plan.assignment[e.name] for e in self.net.emits()}
         for h in participants:
             start = from_ci[h] if h not in stalled else 0
-            ev.replay_from[h] = stalled[h] if h in stalled else start
-            self._work_qs[h].put(
-                ("replay", batch_id, self.epoch, bounds, instances,
-                 batch if h in emit_hosts else None, start))
+            ev.replay_from[h] = stalled[h] if h in stalled else from_ci[h]
+            if h in snap_state and from_ci[h] > 0:
+                self._work_qs[h].put(
+                    ("replay_snap", batch_id, self.epoch, bounds, instances,
+                     batch if h in emit_hosts else None, from_ci[h],
+                     snap_state[h]))
+            else:
+                self._work_qs[h].put(
+                    ("replay", batch_id, self.epoch, bounds, instances,
+                     batch if h in emit_hosts else None, start))
+        restored = {h: from_ci[h] for h in snap_state if from_ci[h] > 0}
+        if restored:
+            self.durable_events.append(DurabilityEvent(
+                kind="restore", epoch=self.epoch,
+                step=self.store.meta_step() or 0, hosts=restored))
         reports = self._fresh_reports()
         results = self._await_results(batch_id, reports, set(participants))
         for h in self._live:  # hosts that sat the replay out reuse their

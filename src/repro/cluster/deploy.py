@@ -42,6 +42,7 @@ from typing import Optional
 from repro.core.dataflow import Network, NetworkError
 
 from .control import ClusterController
+from .durable import DeploymentStore
 from .partition import PartitionPlan, partition
 from .runtime import ClusterResult, ExecConfig
 from .transport import ChannelTransport, make_transport
@@ -85,7 +86,9 @@ class ClusterDeployment:
                  fuse: bool = True,
                  factory: Optional[tuple] = None,
                  timeout_s: float = 300.0,
-                 trace: bool = False):
+                 trace: bool = False,
+                 snapshot_every: int = 0,
+                 snapshot_dir: Optional[str] = None):
         if net is None:
             if factory is None:
                 raise NetworkError("ClusterDeployment: need net= or factory=")
@@ -94,13 +97,69 @@ class ClusterDeployment:
             if hosts is None:
                 raise NetworkError("ClusterDeployment: need hosts= or plan=")
             plan = partition(net, hosts=hosts)
+        if snapshot_every and not snapshot_dir:
+            raise NetworkError(
+                "ClusterDeployment: snapshot_every needs snapshot_dir=")
         self.net = net
         cfg = ExecConfig(microbatch_size, max_in_flight, lanes, fuse,
-                         trace=trace)
+                         trace=trace, snapshot_every=snapshot_every,
+                         snapshot_dir=snapshot_dir)
         t: ChannelTransport = (make_transport(transport)
                                if isinstance(transport, str) else transport)
+        store = DeploymentStore(snapshot_dir) if snapshot_dir else None
         self.controller = ClusterController(net, plan, cfg, t, factory,
-                                            timeout_s)
+                                            timeout_s, store=store)
+
+    @classmethod
+    def adopt(cls, snapshot_dir: str, *, factory: tuple,
+              transport="inprocess", timeout_s: float = 300.0,
+              trace: bool = False,
+              salvage: Optional[dict] = None) -> "ClusterDeployment":
+        """Stand up a brand-new controller over a previous deployment's
+        on-disk state (``snapshot_dir``) — the controller-crash recovery
+        path.  The epoch is bumped across the adopt, the §6.1.1 refinement
+        is re-proved (``dep.events[-1].refined``), and any pending failed
+        batch replays from the durable fold snapshots at the next
+        :meth:`recover`.
+
+        ``factory=(picklable_callable, args)`` rebuilds the network (the
+        declarative half that doesn't live on disk).  ``salvage`` hands
+        over a dead controller's still-live wiring (its ``transport``,
+        ``work_qs``, ``procs``/``threads``, ``executors``, ...) so
+        surviving warm workers are re-parked with 0 new jits; without it
+        every host spawns fresh.
+        """
+        store = DeploymentStore(snapshot_dir)
+        meta = store.load_meta()
+        if meta is None:
+            raise NetworkError(
+                f"adopt: no deployment meta under {snapshot_dir!r}")
+        net = factory[0](*factory[1])
+        cfgd = dict(meta["cfg"])
+        cfgd["snapshot_dir"] = snapshot_dir
+        dep = cls(net, plan=partition(net, assignment=meta["assignment"]),
+                  transport=transport,
+                  microbatch_size=cfgd["microbatch_size"],
+                  max_in_flight=cfgd["max_in_flight"],
+                  lanes=cfgd["lanes"], fuse=cfgd["fuse"], factory=factory,
+                  timeout_s=timeout_s, trace=trace or cfgd["trace"],
+                  snapshot_every=cfgd["snapshot_every"],
+                  snapshot_dir=snapshot_dir)
+        dep.controller.adopt_state(meta, salvage=salvage)
+        return dep
+
+    def salvageable(self) -> dict:
+        """The live wiring another controller needs to adopt this
+        deployment's surviving workers in-process (the ``salvage=`` value
+        for :meth:`adopt`).  Meaningful only while the workers are alive —
+        a real controller crash takes thread-backed hosts with it, so this
+        models the hosts-outlive-controller topology (and drives the
+        simulator's kill-controller scenarios)."""
+        c = self.controller
+        return {"transport": c.transport, "procs": c._procs,
+                "threads": c._threads, "work_qs": c._work_qs,
+                "result_q": c._result_q, "result_qs": c._result_qs,
+                "executors": c.executors, "meshes": c._meshes}
 
     # -- the control plane, surfaced ---------------------------------------
     @property

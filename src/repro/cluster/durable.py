@@ -1,0 +1,158 @@
+"""Durable deployments: on-disk state for a :class:`ClusterDeployment`.
+
+A deployment's durable state has two halves, both written through
+:class:`repro.train.checkpoint.Checkpointer` (manifest + async write +
+crash-atomic ``os.replace`` rename-last semantics, ``keep=N`` GC):
+
+* **controller meta** (``<root>/meta``) — the epoch-stamped plan
+  assignment, the picklable ``ExecConfig``, the undelivered-chunk ledger
+  (``_kept``), the pending-batch descriptor and cached per-host results.
+  Written by the controller at batch boundaries and around every
+  recovery/reconfigure, so a brand-new controller process can
+  :meth:`ClusterDeployment.adopt` the deployment.
+* **per-host fold snapshots** (``<root>/host_<h>``) — each executor's
+  accumulator/fold state (``jit_accs``/``host_accs``/``_combine_carry``)
+  plus the chunk index it covers, written by the *host* at the stream's
+  snapshot cadence.  ``recover()`` replays a long batch from the last
+  snapshot instead of chunk 0.
+
+Arbitrary host-side accumulators (ints, lists, nested pytrees) do not fit
+a fixed ``restore(like=...)`` structure, so state rides as a single
+pickled uint8 leaf — the Checkpointer still provides atomicity, the
+LATEST pointer, GC and the corrupt-latest fallback.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import pickle
+from typing import Any, Optional
+
+import numpy as np
+
+from ..train.checkpoint import Checkpointer
+
+__all__ = ["DeploymentStore", "DurabilityEvent"]
+
+_BLOB_LIKE = {"blob": np.zeros((0,), np.uint8)}
+
+
+def _to_blob(obj: Any) -> dict:
+    return {"blob": np.frombuffer(pickle.dumps(obj), np.uint8).copy()}
+
+
+def _from_blob(tree: dict) -> Any:
+    return pickle.loads(np.asarray(tree["blob"]).tobytes())
+
+
+def to_host(tree: Any) -> Any:
+    """Device arrays → numpy so fold state pickles portably; host-side
+    accumulator leaves (ints, lists, ...) pass through untouched."""
+    import jax
+
+    def conv(leaf):
+        if isinstance(leaf, jax.Array):
+            return np.asarray(leaf)
+        return leaf
+
+    return jax.tree_util.tree_map(conv, tree)
+
+
+@dataclasses.dataclass
+class DurabilityEvent:
+    """One snapshot / restore / adopt action, rendered by
+    :func:`repro.core.netlog.cluster_report` next to recovery events."""
+
+    kind: str                 # "snapshot" | "restore" | "adopt"
+    epoch: int
+    step: int                 # checkpointer step the action wrote/read
+    hosts: dict = dataclasses.field(default_factory=dict)  # host -> chunk
+    note: str = ""
+
+    def describe(self) -> str:
+        bits = [f"{self.kind} (epoch {self.epoch}, step {self.step})"]
+        if self.hosts:
+            at = ", ".join(f"host {h}@chunk {self.hosts[h]}"
+                           for h in sorted(self.hosts))
+            bits.append(at)
+        if self.note:
+            bits.append(self.note)
+        return "; ".join(bits)
+
+
+class DeploymentStore:
+    """Filesystem layout + (de)serialisation for one deployment's state."""
+
+    def __init__(self, root: str, *, keep: int = 3):
+        self.root = root
+        self.keep = keep
+        os.makedirs(root, exist_ok=True)
+        self._meta = Checkpointer(os.path.join(root, "meta"), keep=keep,
+                                  async_save=True)
+
+    # -- controller meta ------------------------------------------------------
+    def save_meta(self, step: int, state: dict) -> None:
+        """Enqueue a meta write (async).  Call :meth:`flush` afterwards
+        when a reader in another store instance must observe it — the
+        write-ahead batch record skips that (losing it to a crash only
+        costs the replay, never correctness)."""
+        self._meta.save(step, _to_blob(state))
+
+    def flush(self) -> None:
+        """Block until every enqueued meta write is durably renamed."""
+        self._meta.wait()
+
+    def load_meta(self) -> Optional[dict]:
+        self._meta.wait()  # same-instance readers see their own writes
+        try:
+            _, tree = self._meta.restore(_BLOB_LIKE)
+        except FileNotFoundError:
+            return None
+        return _from_blob(tree)
+
+    def meta_step(self) -> Optional[int]:
+        self._meta.wait()
+        return self._meta.latest_step()
+
+    # -- per-host fold snapshots ----------------------------------------------
+    def host_dir(self, host: int) -> str:
+        return os.path.join(self.root, f"host_{host}")
+
+    def host_checkpointer(self, host: int, *,
+                          async_save: bool = True) -> Checkpointer:
+        return Checkpointer(self.host_dir(host), keep=2,
+                            async_save=async_save)
+
+    def load_host_snapshot(self, host: int) -> Optional[dict]:
+        """Latest complete fold snapshot for ``host`` (corrupt-latest falls
+        back to the previous step via the Checkpointer), or None."""
+        if not os.path.isdir(self.host_dir(host)):
+            return None
+        ckpt = Checkpointer(self.host_dir(host), keep=2)
+        try:
+            _, tree = ckpt.restore(_BLOB_LIKE)
+        except (FileNotFoundError, OSError):
+            return None
+        return _from_blob(tree)
+
+    # -- serve-engine request table -------------------------------------------
+    def serve_checkpointer(self) -> Checkpointer:
+        # cached: the Checkpointer serialises its async writes internally
+        if getattr(self, "_serve", None) is None:
+            self._serve = Checkpointer(os.path.join(self.root, "serve"),
+                                       keep=self.keep)
+        return self._serve
+
+    def save_serve(self, step: int, state: dict) -> None:
+        self.serve_checkpointer().save(step, _to_blob(state))
+
+    def load_serve(self) -> Optional[dict]:
+        try:
+            _, tree = self.serve_checkpointer().restore(_BLOB_LIKE)
+        except FileNotFoundError:
+            return None
+        return _from_blob(tree)
+
+    def serve_step(self) -> Optional[int]:
+        return self.serve_checkpointer().latest_step()

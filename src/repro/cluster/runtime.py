@@ -70,6 +70,14 @@ class ExecConfig:
     # spans/instants ship back with every batch result and merge on the
     # controller; False = recorders stay disabled (near-zero cost)
     trace: bool = False
+    # durability (cluster/durable.py): when snapshot_dir is set, each host
+    # persists its fold accumulators every snapshot_every chunks through a
+    # crash-atomic Checkpointer under <snapshot_dir>/host_<h>, and the
+    # controller writes its meta (plan, epoch, ledger) under /meta — so
+    # recover() replays from the last snapshot and a fresh controller can
+    # adopt() the deployment.  0 / None = durability off.
+    snapshot_every: int = 0
+    snapshot_dir: Optional[str] = None
 
 
 @dataclasses.dataclass
@@ -307,10 +315,20 @@ def make_host_executor(plan: PartitionPlan, host: int,
     # cfg.trace: each host OWNS a recorder (correct attribution even when
     # hosts are threads sharing this process); spans ship back per batch
     rec = _trace.new_recorder(host=host) if cfg.trace else None
-    return PartitionExecutor(cn, plan=plan, host=host, endpoint=endpoint,
-                             microbatch_size=cfg.microbatch_size,
-                             max_in_flight=cfg.max_in_flight, lanes=cfg.lanes,
-                             fuse=cfg.fuse, recorder=rec)
+    ex = PartitionExecutor(cn, plan=plan, host=host, endpoint=endpoint,
+                           microbatch_size=cfg.microbatch_size,
+                           max_in_flight=cfg.max_in_flight, lanes=cfg.lanes,
+                           fuse=cfg.fuse, recorder=rec)
+    if cfg.snapshot_every and cfg.snapshot_dir:
+        from .durable import DeploymentStore
+        store = DeploymentStore(cfg.snapshot_dir)
+        ex.snapshotter = store.host_checkpointer(host)
+        ex.snapshot_every = cfg.snapshot_every
+        # fault sim injects mid-snapshot-write kills via the endpoint
+        hook = getattr(endpoint, "snapshot_step", None)
+        if hook is not None:
+            ex.on_snapshot = hook
+    return ex
 
 
 def derive_cut_capacities(plan: PartitionPlan, cfg: ExecConfig) -> dict:

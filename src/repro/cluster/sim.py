@@ -81,6 +81,8 @@ __all__ = [
     "ScenarioResult",
     "run_scenario",
     "run_pipe_brick_scenario",
+    "run_kill_controller_scenario",
+    "run_stall_race_scenario",
     "run_serve_kill_scenario",
     "main",
 ]
@@ -300,11 +302,12 @@ class FaultEvent:
     during the epoch bump, the interleavings the issue names."""
 
     host: int
-    op: str          # "recv" | "send" | "park" | "drain" | "requeue" | "epoch"
+    op: str          # "recv" | "send" | "park" | "snap" | "drain" | ...
     at: int          # fire on the at-th matching op (0-based, post-arming)
     action: str      # "kill" | "stall"
     min_epoch: int = 1
     brick: bool = True   # a kill mid-recv bricks the channel's FIFO
+    stall_s: float = 0.0  # stall duration; > timeout_s pins controller races
     fired: bool = dataclasses.field(default=False, compare=False)
 
 
@@ -442,7 +445,7 @@ class _SimOps:
             return
         if ev.action == "stall":
             self._sim.clock.tick(5)
-            time.sleep(0.05)
+            time.sleep(ev.stall_s or 0.05)
             return
         p = _current_fake()  # kill: this host dies HERE
         if p is not None:
@@ -454,6 +457,14 @@ class _SimOps:
             # it), exactly like a SIGKILL landing mid-``recv``
             return
         raise _SimKilled()
+
+    def snapshot_step(self, ci: int) -> None:
+        """Fault hook the executor calls INSIDE ``_save_snapshot`` — after
+        capturing the fold state, before the durable write.  A ``snap``
+        kill here is death mid-snapshot-write: the latest on-disk snapshot
+        stays the previous complete one, which recovery must fall back
+        to."""
+        self._step("snap")
 
     def send(self, chan, ci: int, value) -> None:
         self._step("send")
@@ -903,6 +914,252 @@ def run_pipe_brick_scenario(timeout_s: float = 30.0,
 
 
 # ==========================================================================
+# Controller-crash durability scenarios (checkpointed streams + adopt)
+# ==========================================================================
+
+_KILL_CTRL_VARIANTS = ("idle-salvage", "idle-fresh", "midbatch",
+                       "kill-all-hosts", "snap-kill")
+
+
+def run_kill_controller_scenario(seed: int, *, variant: Optional[str] = None,
+                                 clock_budget: int = 2_000_000,
+                                 timeout_s: float = 60.0) -> ScenarioResult:
+    """Kill the *controller* (and optionally every host) at a seeded step
+    and prove the durability layer brings the deployment back.
+
+    A fresh :class:`~repro.cluster.control.ClusterController` ``adopt``\\ s
+    the dead one's on-disk state (epoch-stamped plan, undelivered-chunk
+    ledger, pending-batch descriptor, per-host fold snapshots) and the full
+    §6.1.1 invariant set must hold ACROSS the restart: results bit-identical
+    to the sequential oracle, ``check_redeployment`` re-proved over the
+    adopt's epoch bump, no ``(chan, epoch, ci)`` record delivered twice,
+    replay length bounded by chunks-since-last-snapshot, and 0 new stage
+    jits on warm salvaged survivors.  Variants (``seed`` picks one unless
+    pinned): ``idle-salvage`` / ``idle-fresh`` crash the controller between
+    batches (hosts outliving it / dying with it), ``midbatch`` crashes it
+    with a failed batch pending, ``kill-all-hosts`` loses controller *and*
+    every host, ``snap-kill`` kills a host mid-snapshot-write so recovery
+    must fall back to the previous complete snapshot."""
+    import shutil
+    import tempfile
+
+    from repro.core import run_sequential
+
+    from .deploy import ClusterDeployment
+    from .durable import DeploymentStore
+
+    rng = random.Random(seed)
+    if variant is None:
+        variant = _KILL_CTRL_VARIANTS[seed % len(_KILL_CTRL_VARIANTS)]
+    instances = 12
+    factory = (sim_farm, (instances, rng.choice((2, 3))))
+    net = factory[0](*factory[1])
+    plan = partition(net, hosts=2)
+    victim = plan.assignment["collect"]  # the stateful (fold-carrying) host
+    oracle = float(run_sequential(net, instances)["collect"])
+
+    # mb=2 -> 6 chunks; snapshot_every=2 -> fold snapshots at ci=2, ci=4
+    if variant in ("midbatch", "kill-all-hosts"):
+        events = [FaultEvent(host=victim, op="recv", at=3 + (seed % 2),
+                             action="kill", brick=False)]
+    elif variant == "snap-kill":
+        # second armed snapshot (ci=4) dies mid-write: the ci=2 snapshot
+        # stays the latest COMPLETE one on disk
+        events = [FaultEvent(host=victim, op="snap", at=1, action="kill")]
+    else:
+        events = []
+    schedule = FaultSchedule(events)
+    schedule.kind = f"ctrl-crash/{variant}"
+    clock = SimClock(clock_budget)
+    transport = SimTransport(schedule, clock, rebuildable=True)
+
+    failures: list = []
+    sdir = tempfile.mkdtemp(prefix="sim_durable_")
+    dep = ClusterDeployment(net, plan=plan, transport=transport,
+                            microbatch_size=2, factory=factory,
+                            timeout_s=timeout_s, snapshot_every=2,
+                            snapshot_dir=sdir)
+    dep.controller.poll_s = 0.05
+    dep2 = None
+    recoveries = 0
+    try:
+        dep.start()
+        transport.track_hosts(dep.controller._procs)
+        cold = dep.run(instances=instances)
+        if float(np.asarray(cold["collect"])) != oracle:
+            failures.append("cold batch diverged from the oracle")
+        schedule.arm()
+        transport.begin_stream()
+
+        if variant in ("midbatch", "kill-all-hosts", "snap-kill"):
+            try:
+                dep.run(instances=instances)
+                failures.append("fault did not fire: killed batch succeeded")
+            except ClusterError:
+                pass
+        if variant in ("idle-fresh", "kill-all-hosts"):
+            # the hosts die WITH the controller (full-cluster loss)
+            for p in dep.controller._procs.values():
+                p.kill()
+            for p in dep.controller._procs.values():
+                p.join(3.0)
+
+        # what the replay is ALLOWED to skip: everything the last complete
+        # on-disk snapshot covers (None -> replays from chunk 0)
+        snap = DeploymentStore(sdir).load_host_snapshot(victim)
+        expect_from = snap["next_ci"] if snap is not None else 0
+        if variant == "snap-kill" and expect_from != 2:
+            failures.append(
+                f"mid-write kill: expected the ci=2 snapshot to be the "
+                f"latest complete one, found next_ci={expect_from}")
+
+        # the controller is gone (never closed — a crash reports nothing);
+        # a brand-new one adopts the on-disk state
+        salvage = (dep.salvageable()
+                   if variant in ("idle-salvage", "midbatch") else None)
+        dep2 = ClusterDeployment.adopt(sdir, factory=factory,
+                                       transport=transport,
+                                       timeout_s=timeout_s, salvage=salvage)
+        dep2.controller.poll_s = 0.05
+        transport.track_hosts(dep2.controller._procs)
+        adopt_ev = dep2.events[-1]
+        if adopt_ev.mode != "adopt" or adopt_ev.refined is not True:
+            failures.append("check_redeployment not re-proved across adopt")
+        if dep2.epoch != dep.epoch + 1:
+            failures.append(
+                f"adopt must bump the epoch: {dep.epoch} -> {dep2.epoch}")
+
+        if variant in ("midbatch", "kill-all-hosts", "snap-kill"):
+            rec = dep2.recover()
+            recoveries += 1
+            if float(np.asarray(rec["collect"])) != oracle:
+                failures.append(
+                    f"replayed batch {float(np.asarray(rec['collect']))} "
+                    f"!= oracle {oracle}")
+            ev = dep2.events[-1]
+            if ev.refined is not True:
+                failures.append("post-adopt recovery refinement failed")
+            got_from = ev.replay_from.get(victim)
+            if got_from != expect_from:
+                failures.append(
+                    f"stateful host replayed from {got_from}, want the "
+                    f"snapshot chunk {expect_from} (replay bounded by "
+                    f"chunks-since-last-snapshot)")
+            if expect_from and not any(
+                    d.kind == "restore"
+                    for d in dep2.controller.durable_events):
+                failures.append("no restore DurabilityEvent recorded")
+            if variant == "midbatch":
+                # warm salvaged survivors must not rebuild stage jits
+                for r in rec.reports:
+                    if (r.host != victim and r.ok and r.jit_builds
+                            and r.host not in ev.restarted):
+                        failures.append(
+                            f"salvaged survivor {r.host} built "
+                            f"{r.jit_builds} new jits")
+        # the adopted deployment serves fresh batches, bit-identical
+        transport.begin_stream()
+        out = dep2.run(instances=instances)
+        if float(np.asarray(out["collect"])) != oracle:
+            failures.append("post-adopt batch diverged from the oracle")
+        if variant == "idle-salvage":
+            if sum(r.jit_builds for r in out.reports):
+                failures.append(
+                    "warm survivors rebuilt stage jits across the adopt")
+        recoveries += len(dep2.events)
+    except (NetworkError, SimLivelock, RuntimeError) as e:
+        failures.append(f"{type(e).__name__}: {e}")
+    finally:
+        try:
+            if dep2 is not None:
+                dep2.close()
+            else:
+                dep.close()
+        except Exception:
+            pass
+        shutil.rmtree(sdir, ignore_errors=True)
+    failures.extend(transport.violations)  # duplicate (epoch, ci) records
+    return ScenarioResult(
+        seed=seed, kind=schedule.kind, topology="farm", hosts=2,
+        schedule=schedule.describe() or variant,
+        fired=sum(ev.fired for ev in schedule.events),
+        recoveries=recoveries, ticks=clock.ticks, failures=failures)
+
+
+def run_stall_race_scenario(seed: int, *, clock_budget: int = 2_000_000,
+                            timeout_s: float = 1.5,
+                            stall_s: float = 2.5) -> ScenarioResult:
+    """A host stalls just PAST the controller's ``timeout_s`` — the
+    controller gives up on it, recovers, and then the zombie wakes up and
+    finishes the abandoned attempt, reporting under the old epoch while the
+    replay is in flight.  The epoch guard in ``_await_results`` must drop
+    that stale report (matching it to the replay would record a
+    pre-recovery result or re-quiesce healthy survivors); the scenario
+    asserts the batch still completes bit-identically with no duplicate
+    deliveries, however many recovery rounds the zombie's wake-up forces."""
+    rng = random.Random(seed)
+    topology = rng.choice(("farm", "pipeline"))
+    instances = 8
+    if topology == "farm":
+        factory = (sim_farm, (instances, rng.choice((2, 3))))
+    else:
+        factory = (sim_pipeline, (instances,))
+    net = factory[0](*factory[1])
+    plan = partition(net, hosts=rng.choice((2, 3)))
+    # stall a host that actually has ingress (recv) or egress (send)
+    op = rng.choice(("recv", "send"))
+    cands = sorted({plan.assignment[c.dst if op == "recv" else c.src]
+                    for c in plan.cut})
+    ev = FaultEvent(host=rng.choice(cands), op=op,
+                    at=rng.randrange(4), action="stall", stall_s=stall_s)
+    schedule = FaultSchedule([ev])
+    schedule.kind = "stall-past-timeout"
+    clock = SimClock(clock_budget)
+    transport = SimTransport(schedule, clock, rebuildable=True)
+    transport.recv_timeout_s = 2.0  # the zombie's doomed recv must not
+    # out-wait the whole scenario
+
+    from repro.core import run_sequential
+    oracle = float(run_sequential(net, instances)["collect"])
+    ctrl = ClusterController(net, plan, ExecConfig(microbatch_size=2),
+                             transport, factory, timeout_s)
+    ctrl.poll_s = 0.05
+    failures: list = []
+    outs = []
+    try:
+        ctrl.start()
+        transport.track_hosts(ctrl._procs)
+        outs.append(_run_with_recovery(ctrl, instances, "restart",
+                                       max_attempts=8))
+        schedule.arm()
+        transport.begin_stream()
+        outs.append(_run_with_recovery(ctrl, instances, "restart",
+                                       max_attempts=8))
+        for rev in ctrl.events:
+            if rev.refined is not True:
+                failures.append(
+                    f"epoch {rev.epoch_to}: check_redeployment failed")
+    except (NetworkError, SimLivelock, RuntimeError) as e:
+        failures.append(f"{type(e).__name__}: {e}")
+    finally:
+        try:
+            ctrl.close()
+        except Exception:
+            pass
+    for i, out in enumerate(outs):
+        got = float(np.asarray(out["collect"]))
+        if got != oracle:
+            failures.append(
+                f"batch {i}: result {got} != sequential oracle {oracle}")
+    failures.extend(transport.violations)
+    return ScenarioResult(
+        seed=seed, kind=schedule.kind, topology=topology,
+        hosts=len(plan.hosts()), schedule=schedule.describe(),
+        fired=sum(e.fired for e in schedule.events),
+        recoveries=len(ctrl.events), ticks=clock.ticks, failures=failures)
+
+
+# ==========================================================================
 # Kill-during-serving: faults under a live ServeEngine (PR 6)
 # ==========================================================================
 
@@ -1047,6 +1304,13 @@ def main(argv=None) -> int:
     ap.add_argument("--serve-kill", type=int, default=0, metavar="N",
                     help="run ONLY N seeded kill-during-serving scenarios "
                          "(live ServeEngine over the clustered decode farm)")
+    ap.add_argument("--kill-controller", type=int, default=0, metavar="N",
+                    help="run ONLY N seeded controller-crash durability "
+                         "scenarios (snapshots + adopt; N >= 5 covers "
+                         "every variant)")
+    ap.add_argument("--stall-race", type=int, default=0, metavar="N",
+                    help="run ONLY N seeded stall-past-timeout scenarios "
+                         "(controller-timeout races; slow — real stalls)")
     ap.add_argument("--verbose", action="store_true")
     args = ap.parse_args(argv)
 
@@ -1059,6 +1323,18 @@ def main(argv=None) -> int:
         for seed in range(args.seed_start,
                           args.seed_start + args.serve_kill):
             r = run_serve_kill_scenario(seed)
+            results.append(r)
+            print(r.describe())
+    elif args.kill_controller:
+        for seed in range(args.seed_start,
+                          args.seed_start + args.kill_controller):
+            r = run_kill_controller_scenario(seed)
+            results.append(r)
+            print(r.describe())
+    elif args.stall_race:
+        for seed in range(args.seed_start,
+                          args.seed_start + args.stall_race):
+            r = run_stall_race_scenario(seed)
             results.append(r)
             print(r.describe())
     else:

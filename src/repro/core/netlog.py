@@ -74,7 +74,8 @@ def _fmt_rate(bps: float) -> str:
     return f"{bps:.1f}GB/s"
 
 
-def cluster_report(plan, reports, events=None, depths=None) -> str:
+def cluster_report(plan, reports, events=None, depths=None,
+                   durability=None) -> str:
     """Cross-host §8 report: per-host partition, streaming telemetry,
     per-channel bytes/s (when the hosts sampled transport byte counters),
     captured failures (the paper's error-capture mechanism at cluster
@@ -85,8 +86,11 @@ def cluster_report(plan, reports, events=None, depths=None) -> str:
     a list of :class:`repro.cluster.runtime.HostReport`; ``events`` an
     optional list of :class:`repro.cluster.control.RecoveryEvent`;
     ``depths`` an optional live ``{"src->dst": queue depth}`` sample
-    (:meth:`ChannelTransport.channel_depths`).  Pure formatting — no
-    cluster imports, so the core stays dependency-free.
+    (:meth:`ChannelTransport.channel_depths`); ``durability`` an optional
+    list of :class:`repro.cluster.durable.DurabilityEvent` (controller-meta
+    snapshots, replay-from-snapshot restores, adopts), rendered in order
+    with per-event host dicts sorted.  Pure formatting — no cluster
+    imports, so the core stays dependency-free.
 
     The rendering is DETERMINISTIC in the report/event *content*: hosts are
     sorted, capacity merges walk reports in host order, and per-event dicts
@@ -132,5 +136,9 @@ def cluster_report(plan, reports, events=None, depths=None) -> str:
     if events:
         lines.append("-- recovery --")
         for ev in events:
+            lines.append(f"   {ev.describe()}")
+    if durability:
+        lines.append("-- durability --")
+        for ev in durability:
             lines.append(f"   {ev.describe()}")
     return "\n".join(lines)

@@ -70,6 +70,18 @@ def main():
                     help="record per-host trace rings, merge them on the "
                          "controller and export Chrome trace-event JSON "
                          "to PATH (open in chrome://tracing or Perfetto)")
+    ap.add_argument("--snapshot-every", type=int, default=0, metavar="N",
+                    help="durable deployment: snapshot each host's fold "
+                         "state every N chunks and the controller meta at "
+                         "batch boundaries (needs --snapshot-dir)")
+    ap.add_argument("--snapshot-dir", metavar="DIR", default=None,
+                    help="where the durable deployment state lives")
+    ap.add_argument("--resume-from", metavar="DIR", default=None,
+                    help="ADOPT a previous run's durable state from DIR "
+                         "instead of deploying fresh: bump the epoch, "
+                         "re-prove the §6.1.1 refinement, replay any "
+                         "pending batch from the fold snapshots, then "
+                         "serve --batches more")
     args = ap.parse_args()
 
     import time
@@ -85,16 +97,46 @@ def main():
         factory = (make_pipeline, (2.0,))
         instances = args.instances
     net = factory[0](*factory[1])
-    plan = partition(net, hosts=args.hosts)
-    print(plan.describe())
-    print(f"[cluster] CSP refinement (partitioned [T= unpartitioned, both "
-          f"directions): {check_refinement(net, plan)}")
-
     seq = run_sequential(net, instances)
     same = True
-    with ClusterDeployment(net, plan=plan, transport=args.transport,
-                           microbatch_size=args.microbatch,
-                           factory=factory, trace=bool(args.trace)) as dep:
+
+    def _same(out):
+        return all(bool((out[k] == seq[k]).all()
+                        if hasattr(seq[k], "all") else out[k] == seq[k])
+                   for k in seq)
+
+    if args.resume_from:
+        dep = ClusterDeployment.adopt(args.resume_from, factory=factory,
+                                      transport=args.transport,
+                                      trace=bool(args.trace))
+        plan = dep.plan
+        ev = dep.events[-1]
+        print(plan.describe())
+        print(f"[cluster] adopted durable deployment from "
+              f"{args.resume_from}: epoch {dep.epoch}, "
+              f"refined={ev.refined}", flush=True)
+        if ev.refined is not True:
+            raise SystemExit(1)
+    else:
+        plan = partition(net, hosts=args.hosts)
+        print(plan.describe())
+        print(f"[cluster] CSP refinement (partitioned [T= unpartitioned, "
+              f"both directions): {check_refinement(net, plan)}")
+        dep = ClusterDeployment(net, plan=plan, transport=args.transport,
+                                microbatch_size=args.microbatch,
+                                factory=factory, trace=bool(args.trace),
+                                snapshot_every=args.snapshot_every,
+                                snapshot_dir=args.snapshot_dir)
+    with dep:
+        if args.resume_from and dep.controller._needs_recovery:
+            t0 = time.perf_counter()
+            rec = dep.recover()
+            same = same and _same(rec)
+            ev = dep.events[-1]
+            print(f"[cluster] replayed the pending batch from the fold "
+                  f"snapshots in {(time.perf_counter() - t0) * 1e3:.1f}ms: "
+                  f"identical={same} replay_from="
+                  f"{dict(sorted(ev.replay_from.items()))}", flush=True)
         for b in range(max(args.batches, 1)):
             t0 = time.perf_counter()
             out = dep.run(instances=instances)

@@ -322,7 +322,8 @@ class ClusterDecodeBackend:
                  hosts: int = 2, transport="inprocess", max_len: int = 64,
                  prefill_chunk: int = 8, timeout_s: float = 60.0,
                  max_recover_attempts: int = 4, recover_mode: str = "restart",
-                 trace: bool = False):
+                 trace: bool = False, snapshot_every: int = 0,
+                 snapshot_dir: Optional[str] = None):
         from repro.cluster.deploy import ClusterDeployment
         if shards <= 0 or n_slots % shards:
             raise NetworkError(f"ClusterDecodeBackend: n_slots={n_slots} "
@@ -351,8 +352,17 @@ class ClusterDecodeBackend:
         self.dep = ClusterDeployment(
             factory[0](*factory[1]), hosts=hosts, transport=transport,
             microbatch_size=1, factory=factory, timeout_s=timeout_s,
-            trace=trace)
+            trace=trace, snapshot_every=snapshot_every,
+            snapshot_dir=snapshot_dir)
         self.dep.start()
+
+    @property
+    def store(self):
+        """The deployment's :class:`~repro.cluster.durable
+        .DeploymentStore` (None without ``snapshot_dir``) — hand it to
+        :class:`ServeEngine` as ``store=`` so the request table persists
+        next to the farm's durable state."""
+        return self.dep.controller.store
 
     # -- farm plumbing ------------------------------------------------------
     def _run(self, batch) -> list:
@@ -464,7 +474,8 @@ class ServeEngine:
 
     def __init__(self, backend, *, eos_id: int = -1,
                  time_fn=time.monotonic,
-                 recorder: Optional[_trace.TraceRecorder] = None):
+                 recorder: Optional[_trace.TraceRecorder] = None,
+                 store=None, persist_every: int = 1):
         self.backend = backend
         self.eos_id = eos_id
         self.time_fn = time_fn
@@ -479,6 +490,53 @@ class ServeEngine:
         self._live: dict[int, _Live] = {}     # rid -> admitted state
         self._known: set = set()
         self._submit_times: dict[int, float] = {}
+        # durability: a DeploymentStore persists the full request table
+        # (admission queue, in-flight slots, answered responses) plus the
+        # backend's serving caches at step boundaries, so a brand-new
+        # engine can adopt() the serving state and answer exactly-once
+        self.store = store
+        self.persist_every = persist_every
+        self._persist_seq = 0
+
+    @classmethod
+    def adopt(cls, backend, store, *, time_fn=time.monotonic,
+              recorder: Optional[_trace.TraceRecorder] = None,
+              persist_every: int = 1) -> "ServeEngine":
+        """Stand a brand-new engine up over a dead one's persisted serving
+        state: the request table resumes exactly where the last persisted
+        step left it — already-answered responses stay answered (never
+        recomputed, never re-delivered), in-flight requests resume
+        mid-decode on the restored caches, queued ones are admitted as
+        slots free up.  With the backend's decode being deterministic, the
+        adopted engine's token streams are bit-identical to an uncrashed
+        run: every accepted request is answered exactly once."""
+        state = store.load_serve()
+        if state is None:
+            raise NetworkError(
+                "ServeEngine.adopt: no persisted serving state in "
+                f"{store.root!r}")
+        eng = cls(backend, eos_id=state["eos_id"], time_fn=time_fn,
+                  recorder=recorder, store=store,
+                  persist_every=persist_every)
+        eng.rec.instant("adopt", "durable", steps=state["steps_run"])
+        eng.plan = state["plan"]
+        eng.pending = list(state["pending"])
+        eng.responses = dict(state["responses"])
+        eng.completed = list(state["completed"])
+        eng.steps_run = state["steps_run"]
+        eng.last_tok = np.asarray(state["last_tok"]).copy()
+        eng._live = dict(state["live"])
+        eng._known = set(state["known"])
+        eng._submit_times = dict(state["submit_times"])
+        eng._persist_seq = store.serve_step() or 0
+        if state.get("shard_cache") is not None:
+            backend.shard_cache = [
+                jax.tree_util.tree_map(np.asarray, c)
+                for c in state["shard_cache"]]
+        elif state.get("cache") is not None:
+            backend.cache = jax.tree_util.tree_map(jnp.asarray,
+                                                   state["cache"])
+        return eng
 
     # -- the public surface --------------------------------------------------
     def submit(self, req: Request) -> int:
@@ -548,6 +606,9 @@ class ServeEngine:
                     finished_at=now, steps=live.steps,
                     slot_events=tuple(e for e in self.plan.events
                                       if e.rid == rid)))
+        if (self.store is not None and self.persist_every
+                and self.steps_run % self.persist_every == 0):
+            self._persist()
         return len(active)
 
     def run_until_drained(self) -> list[Response]:
@@ -573,6 +634,40 @@ class ServeEngine:
         return list(self.plan.events)
 
     # -- internals -----------------------------------------------------------
+    def _state(self) -> dict:
+        """The engine's full serving state as one picklable dict — the
+        request table plus the backend's canonical caches, captured at a
+        step boundary so the pair is mutually consistent."""
+        import copy as _copy
+
+        from repro.cluster.durable import to_host
+        state = {
+            "eos_id": self.eos_id,
+            "plan": _copy.deepcopy(self.plan),
+            "pending": list(self.pending),
+            "responses": dict(self.responses),
+            "completed": list(self.completed),
+            "steps_run": self.steps_run,
+            "last_tok": np.asarray(self.last_tok).copy(),
+            "live": _copy.deepcopy(self._live),
+            "known": set(self._known),
+            "submit_times": dict(self._submit_times),
+            "shard_cache": None,
+            "cache": None,
+        }
+        be = self.backend
+        if hasattr(be, "shard_cache"):        # cluster farm: host numpy
+            state["shard_cache"] = [to_host(c) for c in be.shard_cache]
+        elif hasattr(be, "cache"):            # local backend: device tree
+            state["cache"] = to_host(be.cache)
+        return state
+
+    def _persist(self) -> None:
+        self._persist_seq += 1
+        with self.rec.span("persist", "durable", step=self.steps_run,
+                           seq=self._persist_seq):
+            self.store.save_serve(self._persist_seq, self._state())
+
     def _finish(self, resp: Response) -> None:
         self.responses[resp.rid] = resp
         self.completed.append(resp)

@@ -40,8 +40,9 @@ class Checkpointer:
     # -- save ----------------------------------------------------------------
     def save(self, step: int, tree: Any) -> None:
         host_tree = jax.tree_util.tree_map(lambda x: np.asarray(x), tree)
+        self.wait()  # one write in flight at a time — a sync save after an
+        # async one must not race it for the LATEST pointer
         if self.async_save:
-            self.wait()  # one in flight at a time
             self._thread = threading.Thread(
                 target=self._write, args=(step, host_tree), daemon=True)
             self._thread.start()
@@ -94,16 +95,49 @@ class Checkpointer:
             name = f.read().strip()
         return int(name.split("_")[1])
 
+    def steps_on_disk(self) -> list[int]:
+        """Completed (renamed) step directories, ascending."""
+        out = []
+        for d in os.listdir(self.dir):
+            if d.startswith("step_") and not d.endswith(".tmp"):
+                try:
+                    out.append(int(d.split("_")[1]))
+                except ValueError:
+                    continue
+        return sorted(out)
+
     def restore(self, like: Any, step: Optional[int] = None,
                 shardings: Any = None) -> tuple[int, Any]:
         """Restore into the structure of ``like``; optionally place leaves
         with ``shardings`` (same-structure tree of NamedSharding) — this is
         the elastic-remesh path: a checkpoint written on one mesh restores
-        onto any other."""
-        if step is None:
-            step = self.latest_step()
-            if step is None:
-                raise FileNotFoundError(f"no checkpoint in {self.dir}")
+        onto any other.
+
+        When ``step`` is None, a corrupt latest snapshot (manifest present
+        but a leaf blob truncated by a torn write, manifest unparseable,
+        structure mismatch, ...) falls back to the previous completed step
+        rather than raising — only when *no* step on disk restores do we
+        re-raise the newest step's error.  An explicit ``step`` is strict.
+        """
+        if step is not None:
+            return self._load_step(step, like, shardings)
+        latest = self.latest_step()
+        candidates = self.steps_on_disk()
+        if latest is not None and latest not in candidates:
+            candidates.append(latest)
+        if not candidates:
+            raise FileNotFoundError(f"no checkpoint in {self.dir}")
+        first_err: Optional[Exception] = None
+        for s in sorted(candidates, reverse=True):
+            try:
+                return self._load_step(s, like, shardings)
+            except Exception as e:  # corrupt/partial step: try the previous one
+                if first_err is None:
+                    first_err = e
+        raise first_err  # type: ignore[misc]
+
+    def _load_step(self, step: int, like: Any,
+                   shardings: Any) -> tuple[int, Any]:
         name = os.path.join(self.dir, f"step_{step:08d}")
         with open(os.path.join(name, "manifest.json")) as f:
             manifest = json.load(f)

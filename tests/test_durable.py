@@ -1,0 +1,217 @@
+"""Durable deployments: fold-state snapshots through the train
+Checkpointer, controller meta with a write-ahead batch record,
+replay-from-snapshot on recover(), and controller-crash adoption —
+plus the stale-epoch regression the stall-past-timeout sweep pinned."""
+
+import shutil
+import tempfile
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cluster import (ClusterDeployment, ClusterError, DeploymentStore,
+                           DurabilityEvent, run_kill_controller_scenario,
+                           run_stall_race_scenario)
+from repro.cluster.durable import _to_blob
+from repro.core import DataParallelCollect
+
+
+def _dur_farm(n, workers):
+    return DataParallelCollect(
+        create=lambda i: jnp.asarray(float(i)),
+        function=lambda x: x * x,
+        collector=lambda a, x: a + x, init=jnp.asarray(0.0),
+        workers=workers, jit_combine=True)
+
+
+_TRIP: dict = {}  # module-level so the collector closure stays picklable
+
+
+def _trip_farm(trip_at):
+    """A stateful dict-collector farm whose collector raises ONCE, on its
+    ``trip_at``-th call — a transient failure landing mid-batch, past the
+    fold snapshots the stream wrote along the way."""
+    def coll(acc, x):
+        _TRIP["n"] = _TRIP.get("n", 0) + 1
+        if _TRIP["n"] == trip_at:
+            raise RuntimeError("transient collector failure")
+        return {**acc, len(acc): float(x)}
+
+    return DataParallelCollect(
+        create=lambda i: jnp.asarray(float(i)),
+        function=lambda x: x * x,
+        collector=coll, init={}, workers=2, jit_combine=False)
+
+
+class TestDeploymentStore:
+    def test_meta_roundtrip_across_instances(self):
+        """A SECOND store instance (the adopting controller) must see the
+        flushed meta — async writes are invisible cross-instance until
+        flush()."""
+        state = {"epoch": 3, "kept": {("a", "b"): [1, 2]},
+                 "arr": np.arange(4.0)}
+        with tempfile.TemporaryDirectory() as d:
+            s1 = DeploymentStore(d)
+            s1.save_meta(1, state)
+            s1.flush()
+            s2 = DeploymentStore(d)
+            got = s2.load_meta()
+            assert got["epoch"] == 3
+            assert got["kept"] == {("a", "b"): [1, 2]}
+            np.testing.assert_array_equal(got["arr"], state["arr"])
+            assert s2.meta_step() == 1
+
+    def test_empty_store_loads_none(self):
+        with tempfile.TemporaryDirectory() as d:
+            assert DeploymentStore(d).load_meta() is None
+            assert DeploymentStore(d).load_host_snapshot(0) is None
+
+    def test_host_snapshot_roundtrip(self):
+        snap = {"batch_id": 4, "epoch": 2, "next_ci": 6,
+                "host_accs": {"collect": {0: 0.0, 1: 1.0}}}
+        with tempfile.TemporaryDirectory() as d:
+            store = DeploymentStore(d)
+            ck = store.host_checkpointer(1)
+            ck.save(6, _to_blob(snap))
+            ck.wait()
+            assert DeploymentStore(d).load_host_snapshot(1) == snap
+
+    def test_event_describe_sorts_hosts(self):
+        ev = DurabilityEvent(kind="restore", epoch=2, step=4,
+                             hosts={1: 2, 0: 0}, note="batch 3")
+        assert ev.describe() == ("restore (epoch 2, step 4); "
+                                 "host 0@chunk 0, host 1@chunk 2; batch 3")
+
+
+class TestAdopt:
+    def test_fresh_adopt_bit_identical(self):
+        """Controller and workers both gone: a brand-new controller stands
+        itself up from the on-disk meta, re-proves §6.1.1 across the
+        restart, bumps the epoch, and serves bit-identical batches."""
+        d = tempfile.mkdtemp()
+        try:
+            with ClusterDeployment(factory=(_dur_farm, (24, 3)), hosts=2,
+                                   transport="inprocess", microbatch_size=2,
+                                   snapshot_every=2, snapshot_dir=d) as dep:
+                r1 = dep.run(instances=24)
+                kinds = [e.kind for e in dep.controller.durable_events]
+                assert "snapshot" in kinds  # fold snapshots actually wrote
+            dep2 = ClusterDeployment.adopt(d, factory=(_dur_farm, (24, 3)))
+            try:
+                ev = dep2.events[-1]
+                assert ev.mode == "adopt" and ev.refined is True
+                assert dep2.epoch == 2
+                assert any(e.kind == "adopt"
+                           for e in dep2.controller.durable_events)
+                r2 = dep2.run(instances=24)
+                assert set(r1) == set(r2)
+                for k in r1:
+                    np.testing.assert_array_equal(np.asarray(r1[k]),
+                                                  np.asarray(r2[k]))
+            finally:
+                dep2.close()
+        finally:
+            shutil.rmtree(d, ignore_errors=True)
+
+    def test_salvage_adopt_zero_new_jits(self):
+        """Only the controller died: the new one adopts the on-disk meta
+        AND the still-live workers (salvage wiring) — warm survivors must
+        not rebuild a single stage jit."""
+        d = tempfile.mkdtemp()
+        dep = ClusterDeployment(factory=(_dur_farm, (24, 3)), hosts=2,
+                                transport="inprocess", microbatch_size=2,
+                                snapshot_every=2, snapshot_dir=d)
+        dep2 = None
+        try:
+            dep.start()
+            r1 = dep.run(instances=24)
+            dep.run(instances=24)  # fully warm
+            dep2 = ClusterDeployment.adopt(d, factory=(_dur_farm, (24, 3)),
+                                           salvage=dep.salvageable())
+            assert dep2.epoch == 2
+            assert dep2.events[-1].refined is True
+            out = dep2.run(instances=24)
+            assert sum(r.jit_builds for r in out.reports) == 0
+            for k in r1:
+                np.testing.assert_array_equal(np.asarray(r1[k]),
+                                              np.asarray(out[k]))
+        finally:
+            (dep2 or dep).close()
+            shutil.rmtree(d, ignore_errors=True)
+
+
+class TestReplayFromSnapshot:
+    def test_recover_replays_from_snapshot_not_chunk0(self):
+        """Satellite: a mid-batch failure past the last fold snapshot must
+        replay from that snapshot's chunk, not chunk 0 — and the stream's
+        StreamStats.replays counts exactly the one resumed attempt."""
+        _TRIP.clear()
+        expect = {i: float(i * i) for i in range(16)}
+        d = tempfile.mkdtemp()
+        try:
+            net = _trip_farm(trip_at=13)  # chunk ~6 of 8 (mb=2)
+            with ClusterDeployment(net, hosts=2, microbatch_size=2,
+                                   timeout_s=60, snapshot_every=2,
+                                   snapshot_dir=d) as dep:
+                with pytest.raises(ClusterError):
+                    dep.run(instances=16)
+                coll_host = [h for h in dep.plan.hosts()
+                             if dep.controller._host_stateful(h)][0]
+                # the replay is allowed to skip exactly what the last
+                # complete on-disk snapshot covers
+                snap = DeploymentStore(d).load_host_snapshot(coll_host)
+                assert snap is not None and snap["next_ci"] > 0
+                rec = dep.recover()
+                assert rec["collect"] == expect
+                (ev,) = dep.events
+                assert ev.refined is True
+                assert ev.replay_from[coll_host] == snap["next_ci"]
+                assert any(e.kind == "restore"
+                           for e in dep.controller.durable_events)
+                rep = [r for r in rec.reports if r.host == coll_host][0]
+                assert "replays=1@chunk" in rep.stats_summary
+                # keeps serving warm afterwards
+                out = dep.run(instances=16)
+                assert out["collect"] == expect
+                assert sum(r.jit_builds for r in out.reports) == 0
+        finally:
+            _TRIP.clear()
+            shutil.rmtree(d, ignore_errors=True)
+
+
+class TestStaleEpochGuard:
+    def test_stale_epoch_report_is_dropped(self):
+        """Regression (pinned by ``sim.py --stall-race``): a host that
+        stalled past timeout_s eventually finishes the abandoned attempt
+        and reports under the OLD epoch with the CURRENT batch id — only
+        the epoch stamp tells it apart from the replay.  The controller
+        must drop it rather than record the pre-recovery payload."""
+        with ClusterDeployment(factory=(_dur_farm, (12, 2)), hosts=2,
+                               transport="inprocess",
+                               microbatch_size=2) as dep:
+            r1 = dep.run(instances=12)
+            ctrl = dep.controller
+            for h in dep.plan.hosts():
+                ctrl._result_q.put(
+                    ("ok", h, ctrl._batch_seq, ctrl.epoch - 1,
+                     {"collect": jnp.asarray(-999.0)}, None))
+            out = dep.run(instances=12)
+            np.testing.assert_array_equal(np.asarray(out["collect"]),
+                                          np.asarray(r1["collect"]))
+
+
+class TestControllerCrashScenarios:
+    """The seeded sim variants, one fixed seed each — the full sweep runs
+    in CI (``sim.py --kill-controller``); these pin each code path."""
+
+    @pytest.mark.parametrize("variant", ["idle-salvage", "idle-fresh",
+                                         "midbatch", "kill-all-hosts",
+                                         "snap-kill"])
+    def test_variant_green(self, variant):
+        res = run_kill_controller_scenario(7, variant=variant)
+        assert res.ok, res.failures
+
+    def test_stall_race_green(self):
+        res = run_stall_race_scenario(0)
+        assert res.ok, res.failures

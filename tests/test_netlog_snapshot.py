@@ -86,6 +86,34 @@ class TestClusterReportDeterminism:
         ])
         assert got == want
 
+    def test_durability_section_golden(self):
+        """Snapshot / restore / adopt events render in a `-- durability --`
+        section, order preserved, per-event host dicts sorted — the same
+        stability contract as the recovery section."""
+        from repro.cluster.durable import DurabilityEvent
+
+        plan = _plan()
+        dur = [DurabilityEvent(kind="snapshot", epoch=2, step=3,
+                               hosts={1: 4, 0: 2}),
+               DurabilityEvent(kind="restore", epoch=3, step=3,
+                               hosts={1: 4}, note="batch 5"),
+               DurabilityEvent(kind="adopt", epoch=3, step=7,
+                               note="batch_seq=6")]
+        got = netlog.cluster_report(plan, _reports([1, 0]), durability=dur)
+        want = "\n".join([
+            "== cluster: pipeline over 2 host(s), plan epoch 2 ==",
+            "  channel stage0 -> stage1: host 0 -> 1 (capacity=3)",
+            "-- host 0 [ok]: emit, stage0",
+            "   stream: 4 chunks",
+            "-- host 1 [ok]: stage1, collect",
+            "   stream: 4 chunks",
+            "-- durability --",
+            "   snapshot (epoch 2, step 3); host 0@chunk 2, host 1@chunk 4",
+            "   restore (epoch 3, step 3); host 1@chunk 4; batch 5",
+            "   adopt (epoch 3, step 7); batch_seq=6",
+        ])
+        assert got == want
+
 
 class TestTimelineZeroWall:
     def test_all_zero_wall_renders_no_bars(self):

@@ -293,6 +293,52 @@ def test_serve_kill_scenario_green(seed):
     assert r.fired >= 1  # the schedule actually injected its fault
 
 
+def test_engine_adopt_exactly_once_across_crash():
+    """Durable serving: the engine persists its in-flight request table, a
+    crash mid-serving loses the backend AND engine, and a fresh pair
+    adopts the store — every request answered exactly once, bit-identical
+    to the per-request oracle (no drop, no duplicate)."""
+    import shutil
+    import tempfile
+
+    from repro.cluster.durable import DeploymentStore
+
+    model, params = _toy()
+    reqs = [Request(rid=i, prompt=(3 + i, 7, 11 + i)[:1 + i % 3],
+                    max_new=3 + i % 4) for i in range(6)]
+    expect = {r.rid: _oracle_tokens(model, params, r, max_len=32)
+              for r in reqs}
+    d = tempfile.mkdtemp()
+    try:
+        be = ClusterDecodeBackend(TOY, n_slots=4, shards=2, hosts=2,
+                                  max_len=32, prefill_chunk=4,
+                                  snapshot_every=2, snapshot_dir=d)
+        eng = ServeEngine(be, store=be.store)
+        for r in reqs[:4]:
+            eng.submit(r)
+        for _ in range(4):
+            eng.step()  # some requests complete, some stay in flight
+        be.close()  # the crash: engine and backend both die here
+
+        be2 = ClusterDecodeBackend(TOY, n_slots=4, shards=2, hosts=2,
+                                   max_len=32, prefill_chunk=4,
+                                   snapshot_every=2, snapshot_dir=d)
+        try:
+            eng2 = ServeEngine.adopt(be2, DeploymentStore(d))
+            for r in reqs[4:]:
+                eng2.submit(r)
+            eng2.run_until_drained()
+            answered = [resp.rid for resp in eng2.completed]
+            for r in reqs:
+                assert answered.count(r.rid) == 1, \
+                    f"rid {r.rid} answered {answered.count(r.rid)} times"
+                assert eng2.poll(r.rid).tokens == expect[r.rid], f"req {r.rid}"
+        finally:
+            be2.close()
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+
+
 # ==========================================================================
 # The deprecated FarmScheduler shim
 # ==========================================================================

@@ -130,6 +130,54 @@ class TestCheckpoint:
             with pytest.raises(AssertionError, match="structure mismatch"):
                 ck.restore({"a": jnp.zeros(3), "b": jnp.zeros(2)})
 
+    def test_corrupt_latest_falls_back_to_previous_step(self):
+        """A torn write (process killed mid-save) must not take restore()
+        down with it: the truncated latest step is skipped and the
+        previous complete step restores."""
+        like = {"x": jnp.zeros(4)}
+        with tempfile.TemporaryDirectory() as d:
+            ck = Checkpointer(d, keep=3)
+            ck.save(1, {"x": jnp.arange(4.0)})
+            ck.save(2, {"x": jnp.arange(4.0) * 10})
+            # simulate the mid-write kill: the renamed step_00000002 exists
+            # but one leaf blob is truncated to garbage
+            leaf = os.path.join(d, "step_00000002", "leaf_00000.npy")
+            with open(leaf, "wb") as f:
+                f.write(b"\x93NUMPY")  # header cut short
+            step, restored = ck.restore(like)
+            assert step == 1
+            np.testing.assert_array_equal(np.asarray(restored["x"]),
+                                          np.arange(4.0))
+            # an explicit step= stays strict: the caller asked for exactly
+            # that snapshot, so the corruption must surface
+            with pytest.raises(Exception):
+                ck.restore(like, step=2)
+
+    def test_tmp_dir_from_killed_write_is_invisible(self):
+        """A kill BEFORE the atomic rename leaves only step_X.tmp — which
+        neither restore() nor steps_on_disk() may see."""
+        like = {"x": jnp.zeros(2)}
+        with tempfile.TemporaryDirectory() as d:
+            ck = Checkpointer(d)
+            ck.save(5, {"x": jnp.asarray([1.0, 2.0])})
+            os.makedirs(os.path.join(d, "step_00000006.tmp"))
+            assert ck.steps_on_disk() == [5]
+            step, restored = ck.restore(like)
+            assert step == 5
+            np.testing.assert_array_equal(np.asarray(restored["x"]),
+                                          [1.0, 2.0])
+
+    def test_all_steps_corrupt_reraises(self):
+        like = {"x": jnp.zeros(2)}
+        with tempfile.TemporaryDirectory() as d:
+            ck = Checkpointer(d)
+            ck.save(1, {"x": jnp.ones(2)})
+            leaf = os.path.join(d, "step_00000001", "leaf_00000.npy")
+            with open(leaf, "wb") as f:
+                f.write(b"junk")
+            with pytest.raises(Exception):
+                ck.restore(like)
+
 
 class TestFaultTolerance:
     def test_injected_failures_recovered(self, key):
