@@ -175,6 +175,56 @@ def obs_markdown() -> str:
     return "\n".join(lines)
 
 
+def costs_markdown() -> str:
+    """Measured-cost partitioning summary from ``BENCH_costs.json``: the
+    calibration table (per-process wall time, output bytes, flops prior,
+    provenance) plus the cost-cut-vs-count-cut comparison the benchmark
+    measured.  Renders ``(not run)`` when the artifact is absent or
+    unreadable — exit code 0 always, like the tables above."""
+    path = os.path.join(REPO_DIR, "BENCH_costs.json")
+    lines = ["### measured-cost partitioning (calibration + cut compare)",
+             ""]
+    if not os.path.exists(path):
+        lines.append("(not run) — `python -m benchmarks.cluster --smoke` "
+                     "writes BENCH_costs.json")
+        return "\n".join(lines)
+    try:
+        with open(path) as f:
+            blob = json.load(f)
+        prof = blob["profile"]
+        costs = prof.get("costs", {})
+    except (ValueError, OSError, KeyError, TypeError) as e:
+        lines.append(f"(not run) — BENCH_costs.json unreadable ({e}); "
+                     "rerun `python -m benchmarks.cluster --smoke`")
+        return "\n".join(lines)
+    lines += ["| process | wall | out bytes | flops prior | source |",
+              "|---|---|---|---|---|"]
+    for name in sorted(costs):
+        c = costs[name]
+        wall = c.get("wall_s", 0.0)
+        lines.append(f"| {name} | {wall * 1e6:.1f}µs | "
+                     f"{c.get('out_bytes', 0)} | "
+                     f"{c.get('flops', 0.0):.3g} | "
+                     f"{c.get('source', '?')} |")
+    for kind, bw in sorted(prof.get("bandwidths", {}).items()):
+        lines.append(f"| bandwidth[{kind}] | {bw / 2 ** 20:.1f} MB/s | | "
+                     f"| calibrated |")
+    cost_us, count_us = blob.get("cost_us"), blob.get("count_us")
+    if isinstance(cost_us, (int, float)) and isinstance(count_us,
+                                                        (int, float)):
+        lines += ["",
+                  f"cost cut {cost_us:.0f}µs vs count cut "
+                  f"{count_us:.0f}µs ({count_us / cost_us:.2f}x) — "
+                  f"calibration {blob.get('calibrate_ms', 0):.0f}ms, "
+                  f"refined={blob.get('refined')}",
+                  f"- cost assignment: {blob.get('cost_assignment')}",
+                  f"- count assignment: {blob.get('count_assignment')}"]
+    else:
+        lines += ["", "cut comparison (not run) — rerun "
+                      "`python -m benchmarks.cluster --smoke`"]
+    return "\n".join(lines)
+
+
 if __name__ == "__main__":
     try:
         print(markdown())
@@ -185,3 +235,5 @@ if __name__ == "__main__":
     print(bench_markdown())
     print()
     print(obs_markdown())
+    print()
+    print(costs_markdown())

@@ -14,23 +14,28 @@ speed; :func:`run_cluster` is the one-shot convenience on top.
 """
 
 from .control import ClusterController, RecoveryEvent
+from .costs import CostProfile, ProcessCost, calibrate, calibrate_bandwidth
 from .deploy import ClusterDeployment
 from .durable import DeploymentStore, DurabilityEvent
 from .partition import (PartitionPlan, abstract_partitioned_model,
                         auto_assignment, check_redeployment,
-                        check_refinement, partition, repartition_without)
+                        check_refinement, cost_assignment, partition,
+                        repartition_without)
 from .runtime import (ClusterError, ClusterResult, ExecConfig, HostReport,
                       PartitionExecutor, derive_cut_capacities,
                       make_host_executor, run_cluster)
 from .sim import (FaultEvent, FaultSchedule, SimClock, SimTransport,
-                  run_kill_controller_scenario, run_pipe_brick_scenario,
-                  run_scenario, run_stall_race_scenario)
+                  run_coalesce_kill_scenario, run_kill_controller_scenario,
+                  run_pipe_brick_scenario, run_scenario,
+                  run_stall_race_scenario)
 from .transport import (ChannelTransport, InProcess, JaxMesh,
                         MultiProcessPipe, SharedMemoryRing, TransportError,
                         make_transport)
 
 __all__ = [
-    "PartitionPlan", "partition", "auto_assignment", "repartition_without",
+    "PartitionPlan", "partition", "auto_assignment", "cost_assignment",
+    "repartition_without",
+    "CostProfile", "ProcessCost", "calibrate", "calibrate_bandwidth",
     "abstract_partitioned_model", "check_refinement", "check_redeployment",
     "ChannelTransport", "InProcess", "MultiProcessPipe", "SharedMemoryRing",
     "JaxMesh", "TransportError", "make_transport",
@@ -42,4 +47,5 @@ __all__ = [
     "FaultEvent", "FaultSchedule", "SimClock", "SimTransport",
     "run_scenario", "run_pipe_brick_scenario",
     "run_kill_controller_scenario", "run_stall_race_scenario",
+    "run_coalesce_kill_scenario",
 ]

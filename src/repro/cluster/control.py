@@ -289,6 +289,11 @@ class ClusterController:
         self._trace_events: dict = {}   # host -> accumulated raw events
         self._trace_offsets: dict = {}  # host -> clock offset onto ours
         self._last_reports: dict = {}   # host -> HostReport of last batch
+        # cumulative per-channel transfer totals: chan_key -> [bytes, wall_s]
+        # accumulated across EVERY completed batch (and every epoch), so
+        # metrics().bytes_per_s reports the deployment-lifetime rate instead
+        # of resetting to the last batch's sample after reconfigure()
+        self._cum_chan: dict = {}
 
     # -- lifecycle ---------------------------------------------------------
     def start(self) -> None:
@@ -621,11 +626,27 @@ class ClusterController:
                 continue
             snap.throughput[h] = m.get("items_per_s", 0.0)
             snap.stall_rate[h] = m.get("stalls_per_chunk", 0.0)
-            wall = m.get("wall_s", 0.0)
+        # bytes/s from the cumulative ledger, not the last batch's sample:
+        # reconfigure()/recover() replace _last_reports (and may rename
+        # hosts), but a channel's lifetime transfer rate must not reset to
+        # zero just because the plan's epoch was bumped between batches
+        for chan_key, (nbytes, wall) in self._cum_chan.items():
             if wall > 0:
-                for chan_key, nbytes in m.get("sent_bytes", {}).items():
-                    snap.bytes_per_s[chan_key] = nbytes / wall
+                snap.bytes_per_s[chan_key] = nbytes / wall
         return snap
+
+    def _absorb_chan_totals(self, m: dict) -> None:
+        """Fold one host's per-batch metrics into the cumulative per-channel
+        ledger (``sent_bytes`` over that batch's ``wall_s``)."""
+        if not m:
+            return
+        wall = m.get("wall_s", 0.0)
+        if wall <= 0:
+            return
+        for chan_key, nbytes in m.get("sent_bytes", {}).items():
+            tot = self._cum_chan.setdefault(chan_key, [0.0, 0.0])
+            tot[0] += nbytes
+            tot[1] += wall
 
     def _poll_results(self, pending: set, timeout: float) -> list:
         """Whatever results the pending hosts have delivered, waiting up to
@@ -715,6 +736,7 @@ class ClusterController:
                  reports[h].jit_builds) = stats[:3]
                 if len(stats) > 3:
                     reports[h].metrics = stats[3] or {}
+                    self._absorb_chan_totals(reports[h].metrics)
                     self._absorb_trace(h, stats[4])
             if status == "ok":
                 if bid != batch_id:
@@ -782,7 +804,8 @@ class ClusterController:
             state = {
                 "epoch": self.epoch,
                 "assignment": dict(self.plan.assignment),
-                "cfg": dataclasses.asdict(self.cfg),
+                "cfg": {k: v for k, v in dataclasses.asdict(self.cfg).items()
+                        if k != "profile"},  # measured, not durable state
                 "batch_seq": self._batch_seq,
                 "needs_recovery": (True if pending is not None
                                    else self._needs_recovery),

@@ -88,7 +88,9 @@ class ClusterDeployment:
                  timeout_s: float = 300.0,
                  trace: bool = False,
                  snapshot_every: int = 0,
-                 snapshot_dir: Optional[str] = None):
+                 snapshot_dir: Optional[str] = None,
+                 coalesce_bytes: int = 0,
+                 profile=None):
         if net is None:
             if factory is None:
                 raise NetworkError("ClusterDeployment: need net= or factory=")
@@ -103,9 +105,12 @@ class ClusterDeployment:
         self.net = net
         cfg = ExecConfig(microbatch_size, max_in_flight, lanes, fuse,
                          trace=trace, snapshot_every=snapshot_every,
-                         snapshot_dir=snapshot_dir)
+                         snapshot_dir=snapshot_dir,
+                         coalesce_bytes=coalesce_bytes, profile=profile)
         t: ChannelTransport = (make_transport(transport)
                                if isinstance(transport, str) else transport)
+        if coalesce_bytes:
+            t.coalesce_bytes = coalesce_bytes
         store = DeploymentStore(snapshot_dir) if snapshot_dir else None
         self.controller = ClusterController(net, plan, cfg, t, factory,
                                             timeout_s, store=store)
@@ -144,7 +149,8 @@ class ClusterDeployment:
                   lanes=cfgd["lanes"], fuse=cfgd["fuse"], factory=factory,
                   timeout_s=timeout_s, trace=trace or cfgd["trace"],
                   snapshot_every=cfgd["snapshot_every"],
-                  snapshot_dir=snapshot_dir)
+                  snapshot_dir=snapshot_dir,
+                  coalesce_bytes=cfgd.get("coalesce_bytes", 0))
         dep.controller.adopt_state(meta, salvage=salvage)
         return dep
 

@@ -45,6 +45,7 @@ __all__ = [
     "PartitionPlan",
     "partition",
     "auto_assignment",
+    "cost_assignment",
     "repartition_without",
     "ingress_shim",
     "egress_shim",
@@ -153,14 +154,87 @@ def auto_assignment(net: Network, n_hosts: int) -> dict[str, int]:
         h = min(n_hosts - 1, int(acc * n_hosts / total))
         assignment[name] = h
         acc += weight[name]
-    # repair: a fan-out's branches join their spreader's host (cut channels
-    # must leave out-degree-1 sources); topo order cascades chained fans
-    for name in order:
+    return _repair_fans(net, assignment)
+
+
+def _repair_fans(net: Network, assignment: dict[str, int]) -> dict[str, int]:
+    """Co-locate every fan-out's branches with their spreader (cut channels
+    must leave out-degree-1 sources); topo order cascades chained fans."""
+    for name in net.toposort():
         succs = net.successors(name)
         if len(succs) > 1:
             for s in succs:
                 assignment[s] = assignment[name]
     return assignment
+
+
+def cost_assignment(net: Network, n_hosts: int, profile,
+                    *, transport: Optional[str] = None) -> dict[str, int]:
+    """Cut by measured *time*, not process count: choose the contiguous
+    topological split whose bottleneck host — per-chunk stage time plus the
+    transfer cost of the channels its block cuts — is minimal.
+
+    ``profile`` is a :class:`repro.cluster.costs.CostProfile` (measured
+    wall time per stage, output bytes, per-transport bandwidth);
+    ``transport`` names the bandwidth used to price cut traffic.  Exact
+    O(N²·H) interval DP over the topological order: ``f[h][i]`` = the best
+    achievable bottleneck when the first ``i`` processes occupy ``h``
+    hosts.  Fewer hosts than ``n_hosts`` are allowed — when one stage
+    dwarfs the rest, splitting the cheap remainder only adds transfer cost.
+    The result is an assignment dict for :func:`partition`, which validates
+    it and emits just another provable :class:`PartitionPlan`.
+    """
+    if n_hosts < 1:
+        raise NetworkError(
+            f"cost_assignment: hosts must be >= 1, got {n_hosts}")
+    order = net.toposort()
+    n = len(order)
+    pos = {name: i for i, name in enumerate(order)}
+    stage_s = [profile.time_of(name) for name in order]
+    # prefix sums: compute time of the contiguous block order[a:b]
+    pref = [0.0]
+    for s in stage_s:
+        pref.append(pref[-1] + s)
+    # channel transfer prices, by (src_pos, dst_pos)
+    edges = [(pos[c.src], pos[c.dst],
+              profile.transfer_s(profile.out_bytes_of(c.src), transport))
+             for c in net.channels]
+
+    def block_cost(a: int, b: int) -> float:
+        """Per-chunk time of host block order[a:b]: its stages plus every
+        channel crossing the block boundary (the host pays pack/unpack on
+        both its ingress and its egress)."""
+        t = pref[b] - pref[a]
+        for sp, dp, price in edges:
+            if (sp < a <= dp < b) or (a <= sp < b <= dp):
+                t += price
+        return t
+
+    INF = float("inf")
+    # f[h][i]: best bottleneck with order[:i] on h hosts; cut[h][i] = the j
+    # achieving it (order[j:i] is host h-1's block)
+    f = [[INF] * (n + 1) for _ in range(n_hosts + 1)]
+    cutp = [[0] * (n + 1) for _ in range(n_hosts + 1)]
+    f[0][0] = 0.0
+    for h in range(1, n_hosts + 1):
+        for i in range(1, n + 1):
+            best, best_j = INF, 0
+            for j in range(h - 1, i):
+                if f[h - 1][j] == INF:
+                    continue
+                c = max(f[h - 1][j], block_cost(j, i))
+                if c < best:
+                    best, best_j = c, j
+            f[h][i], cutp[h][i] = best, best_j
+    h_best = min(range(1, n_hosts + 1), key=lambda h: f[h][n])
+    assignment: dict[str, int] = {}
+    i = n
+    for h in range(h_best, 0, -1):
+        j = cutp[h][i]
+        for k in range(j, i):
+            assignment[order[k]] = h - 1
+        i = j
+    return _repair_fans(net, assignment)
 
 
 def partition(net: Network, *, hosts: Optional[int] = None,

@@ -78,6 +78,14 @@ class ExecConfig:
     # adopt() the deployment.  0 / None = durability off.
     snapshot_every: int = 0
     snapshot_dir: Optional[str] = None
+    # transport fast path: coalesce records up to this many bytes into one
+    # queue put / ring slot per cut channel (0 = legacy per-record sends);
+    # copied onto every host endpoint by make_host_executor
+    coalesce_bytes: int = 0
+    # measured CostProfile (cluster/costs.py) — lets derive_cut_capacities
+    # size coalesced channels by record bytes; optional and picklable as a
+    # plain object (hosts never need it, only the controller does)
+    profile: Optional[object] = None
 
 
 @dataclasses.dataclass
@@ -256,11 +264,38 @@ class PartitionExecutor(StreamExecutor):
         # the replayed tail belongs to the same batch)
         self.sent_bytes = {}
         self.recv_bytes = {}
+        # a fresh batch (or replay-from-ci, which only reaches hosts whose
+        # run state was reset) must not inherit another stream's read-ahead;
+        # a stall-RESUME goes through resume_partition and keeps it — the
+        # buffer holds exactly the records drained off the FIFO but unfolded
+        self.ep.clear_read_buffers()
         return self._run_plan(list(bounds), batch, start_ci=start_ci)
 
     def resume_partition(self, batch=None) -> dict:
         """Resume an interrupted batch from the saved replay state."""
         return self.resume_plan(batch)
+
+    def _drive(self, plan, batch, start_ci, jit_accs, host_accs):
+        """Bracket the base drive loop with coalesce flushes: on success the
+        egress buffers must be empty before the host reports done (the
+        consumer cannot fold what still sits in a producer-local buffer); on
+        failure they must hit the FIFO *before* the stalled report posts —
+        the controller's drain only sees the FIFO.  A flush that cannot
+        complete demotes the stall to a full-replay error (dropping a middle
+        record would break the drain/requeue contiguous-prefix contract)."""
+        if self.ep.coalesce_bytes <= 0:
+            return super()._drive(plan, batch, start_ci, jit_accs, host_accs)
+        try:
+            out = super()._drive(plan, batch, start_ci, jit_accs, host_accs)
+        except BaseException:
+            try:
+                self.ep.flush_sends()
+            except BaseException:
+                self.replay_state = None  # stalled -> err: replay from 0
+                raise
+            raise
+        self.ep.flush_sends()
+        return out
 
     def metrics_sample(self, wall_s: float) -> dict:
         """The per-batch telemetry sample shipped in
@@ -312,6 +347,8 @@ def make_host_executor(plan: PartitionPlan, host: int,
     once."""
     sub = plan.subnetwork(host)
     cn = build(sub, mesh=mesh)
+    if getattr(cfg, "coalesce_bytes", 0):
+        endpoint.coalesce_bytes = cfg.coalesce_bytes
     # cfg.trace: each host OWNS a recorder (correct attribution even when
     # hosts are threads sharing this process); spans ship back per batch
     rec = _trace.new_recorder(host=host) if cfg.trace else None
@@ -331,7 +368,8 @@ def make_host_executor(plan: PartitionPlan, host: int,
     return ex
 
 
-def derive_cut_capacities(plan: PartitionPlan, cfg: ExecConfig) -> dict:
+def derive_cut_capacities(plan: PartitionPlan, cfg: ExecConfig,
+                          profile=None) -> dict:
     """FIFO depth of each cut channel: explicit ``ChannelDef.capacity``, or a
     default derived from the consumer executor's actual appetite.
 
@@ -342,10 +380,19 @@ def derive_cut_capacities(plan: PartitionPlan, cfg: ExecConfig) -> dict:
     the accidental bottleneck while staying a bounded CSP buffer.  The chosen
     values are recorded per host in :attr:`HostReport.capacities` so a
     benchmark's ``derived`` string can explain observed stalls.
+
+    With coalescing on AND a measured ``profile`` (how many bytes one record
+    of this channel actually carries — ``CostProfile.out_bytes_of`` of the
+    cut source), each queue slot holds a whole batch of records, so the same
+    in-flight appetite needs proportionally fewer slots
+    (:func:`repro.core.stream.coalesced_capacity`).
     """
-    from repro.core.stream import plan_depth_lanes
+    from repro.core.stream import coalesced_capacity, plan_depth_lanes
 
     from .transport import DEFAULT_CAPACITY
+    profile = profile if profile is not None \
+        else getattr(cfg, "profile", None)
+    coalesce = getattr(cfg, "coalesce_bytes", 0)
     sizing: dict = {}
     caps: dict = {}
     for c in plan.cut:
@@ -358,7 +405,11 @@ def derive_cut_capacities(plan: PartitionPlan, cfg: ExecConfig) -> dict:
             sizing[h] = plan_depth_lanes(plan.subnetwork(h),
                                          cfg.max_in_flight, cfg.lanes)
         depth, lanes = sizing[h]
-        caps[chan] = max(DEFAULT_CAPACITY, depth, lanes)
+        if coalesce > 0 and profile is not None:
+            caps[chan] = coalesced_capacity(
+                depth, lanes, profile.out_bytes_of(c.src), coalesce)
+        else:
+            caps[chan] = max(DEFAULT_CAPACITY, depth, lanes)
     return caps
 
 

@@ -83,6 +83,7 @@ __all__ = [
     "run_pipe_brick_scenario",
     "run_kill_controller_scenario",
     "run_stall_race_scenario",
+    "run_coalesce_kill_scenario",
     "run_serve_kill_scenario",
     "main",
 ]
@@ -501,6 +502,11 @@ class _SimEndpoint(_SimOps, _QueueTransport):
 
     @epoch.setter
     def epoch(self, value: int) -> None:
+        # same obligation as the production endpoints: records coalesced
+        # under the OLD epoch must not be stamped with the new one — flush
+        # (best-effort; the consumer may already be gone) before the bump
+        if value != self._epoch and getattr(self, "_send_pending", None):
+            self.flush_sends(best_effort=True)
         self._epoch = value
         self._step("park")
 
@@ -544,6 +550,7 @@ class SimTransport(_SimOps, _QueueTransport):
     def endpoint(self, host: int) -> _SimEndpoint:
         ep = _SimEndpoint(host, self._queues, self._sim)
         ep.recv_timeout_s = self.recv_timeout_s  # keep any override
+        ep.coalesce_bytes = self.coalesce_bytes
         return ep
 
     def set_epoch(self, epoch: int) -> None:
@@ -1159,6 +1166,83 @@ def run_stall_race_scenario(seed: int, *, clock_budget: int = 2_000_000,
         recoveries=len(ctrl.events), ticks=clock.ticks, failures=failures)
 
 
+def run_coalesce_kill_scenario(seed: int, *, batches: int = 3,
+                               clock_budget: int = 500_000,
+                               timeout_s: float = 60.0,
+                               coalesce_bytes: int = 1 << 14
+                               ) -> ScenarioResult:
+    """Kill a producer host mid-stream while the transport COALESCES small
+    records — the batching fast path's failure window.  A partially-filled
+    coalesce buffer at the moment of death holds records the consumer never
+    saw; records flushed just before the kill may arrive twice via the
+    recovery replay.  The invariants are exactly the per-record protocol's:
+    no ``(chan, epoch, ci)`` delivered twice (the consumer's duplicate
+    filter sees sub-records, not batches), results bit-identical to the
+    sequential oracle, and every epoch bump re-proving §6.1.1."""
+    rng = random.Random(seed)
+    topology = rng.choice(("farm", "pipeline"))
+    instances = 8
+    if topology == "farm":
+        factory = (sim_farm, (instances, rng.choice((2, 3))))
+    else:
+        factory = (sim_pipeline, (instances,))
+    net = factory[0](*factory[1])
+    plan = partition(net, hosts=rng.choice((2, 3)))
+    # the victim is always a SENDER on a cut channel: its death strands
+    # whatever its coalesce buffer held — the window this scenario exists
+    # to cover (run_scenario's random schedules rarely land there)
+    senders = sorted({plan.assignment[c.src] for c in plan.cut})
+    ev = FaultEvent(host=rng.choice(senders), op="send",
+                    at=rng.randrange(4), action="kill", brick=False)
+    schedule = FaultSchedule([ev])
+    schedule.kind = "coalesce-kill"
+    mode = rng.choice(("restart", "rebalance"))
+    clock = SimClock(clock_budget)
+    transport = SimTransport(schedule, clock, rebuildable=True)
+    transport.coalesce_bytes = coalesce_bytes
+
+    from repro.core import run_sequential
+    oracle = float(run_sequential(net, instances)["collect"])
+    ctrl = ClusterController(net, plan, ExecConfig(
+        microbatch_size=2, coalesce_bytes=coalesce_bytes),
+        transport, factory, timeout_s)
+    ctrl.poll_s = 0.05
+    failures: list = []
+    outs = []
+    try:
+        ctrl.start()
+        transport.track_hosts(ctrl._procs)
+        outs.append(_run_with_recovery(ctrl, instances, mode,
+                                       max_attempts=8))
+        schedule.arm()
+        for _ in range(batches - 1):
+            transport.begin_stream()
+            outs.append(_run_with_recovery(ctrl, instances, mode,
+                                           max_attempts=8))
+        for rev in ctrl.events:
+            if rev.refined is not True:
+                failures.append(
+                    f"epoch {rev.epoch_to}: check_redeployment failed")
+    except (NetworkError, SimLivelock, RuntimeError) as e:
+        failures.append(f"{type(e).__name__}: {e}")
+    finally:
+        try:
+            ctrl.close()
+        except Exception:
+            pass
+    for i, out in enumerate(outs):
+        got = float(np.asarray(out["collect"]))
+        if got != oracle:
+            failures.append(
+                f"batch {i}: result {got} != sequential oracle {oracle}")
+    failures.extend(transport.violations)  # duplicate (epoch, ci) records
+    return ScenarioResult(
+        seed=seed, kind=schedule.kind, topology=topology,
+        hosts=len(plan.hosts()), schedule=schedule.describe(),
+        fired=sum(e.fired for e in schedule.events),
+        recoveries=len(ctrl.events), ticks=clock.ticks, failures=failures)
+
+
 # ==========================================================================
 # Kill-during-serving: faults under a live ServeEngine (PR 6)
 # ==========================================================================
@@ -1311,6 +1395,10 @@ def main(argv=None) -> int:
     ap.add_argument("--stall-race", type=int, default=0, metavar="N",
                     help="run ONLY N seeded stall-past-timeout scenarios "
                          "(controller-timeout races; slow — real stalls)")
+    ap.add_argument("--coalesce-kill", type=int, default=0, metavar="N",
+                    help="run ONLY N seeded kill-during-coalesced-send "
+                         "scenarios (transport batching fast path under "
+                         "fire: stranded/replayed coalesce buffers)")
     ap.add_argument("--verbose", action="store_true")
     args = ap.parse_args(argv)
 
@@ -1335,6 +1423,12 @@ def main(argv=None) -> int:
         for seed in range(args.seed_start,
                           args.seed_start + args.stall_race):
             r = run_stall_race_scenario(seed)
+            results.append(r)
+            print(r.describe())
+    elif args.coalesce_kill:
+        for seed in range(args.seed_start,
+                          args.seed_start + args.coalesce_kill):
+            r = run_coalesce_kill_scenario(seed)
             results.append(r)
             print(r.describe())
     else:

@@ -43,6 +43,21 @@ prefix.  :meth:`ChannelTransport.drain` empties the FIFOs between epochs,
 optionally *requeueing* still-valid undelivered chunks (re-tagged to the new
 epoch) so a restarted host replays only the chunks that never reached the
 transport.
+
+Coalescing fast path (``coalesce_bytes > 0``): small records buffer per
+channel until a byte budget fills, then ship as ONE queue put / ring slot
+(:class:`_Coalesced` on the wire; one ``("cbatch", ...)`` header for shm).
+The receiver explodes a batch into a read-ahead buffer and feeds each
+sub-record through the same epoch/duplicate/order protocol as a plain
+record, so exactly-once replay is untouched.  Flush points keep the elastic
+machinery honest: EOS flushes before it ships, an epoch bump flushes under
+the OLD epoch (buffered records belong to the abandoned stream and must
+arrive stale — never renumbered), the executor flushes at end of stream and
+on failure (so drained FIFOs see everything a producer believes it sent),
+and :meth:`ChannelTransport.drain` sweeps any still-unflushed local buffers
+after the FIFO contents.  ``SharedMemoryRing(double_buffer=True)``
+allocates 2× slots per ring (same logical CSP capacity) so a producer can
+pack the next slot while the consumer is still unpacking the previous one.
 """
 
 from __future__ import annotations
@@ -173,6 +188,43 @@ def unpack_raw(value):
     return jax.tree_util.tree_map(_one, value)
 
 
+class _Coalesced:
+    """Wire wrapper for records coalesced into one queue put.
+
+    ``records`` is ``[(ci, packed_payload), ...]`` in send order; the whole
+    batch carries ONE epoch stamp (records never straddle an epoch bump —
+    the bump flushes first).  Not a pytree; queue transports pickle it as a
+    unit.
+    """
+
+    __slots__ = ("records",)
+
+    def __init__(self, records: list):
+        self.records = records
+
+    def __getstate__(self):
+        return self.records
+
+    def __setstate__(self, state):
+        self.records = state
+
+
+def _payload_nbytes(value) -> int:
+    """Approximate wire size of one record for coalesce-budget accounting:
+    raw buffers and array leaves by byte length, markers/exotica by a small
+    constant (the budget is a batching heuristic, not an exact quota)."""
+    if isinstance(value, str):
+        return 64
+    import jax
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(value):
+        if isinstance(leaf, _RawLeaf):
+            total += len(leaf.buf)
+        else:
+            total += int(getattr(leaf, "nbytes", 64))
+    return total
+
+
 class ChannelTransport:
     """One bounded FIFO per cut channel; chunk-granular send/recv.
 
@@ -188,11 +240,72 @@ class ChannelTransport:
 
     name = "abstract"
     process_hosts = False  # True: hosts are spawned OS processes
-    epoch = 1  # deployment epoch records are stamped with (controller-bumped)
+    _epoch = 1  # backing store of the epoch property (controller-bumped)
     # how long a blocked send/recv waits before declaring the peer hung —
     # a class attribute so the fault-injection simulator (and tests) can
     # shrink it without patching the module constant
     recv_timeout_s = _RECV_TIMEOUT_S
+    # coalescing fast path: > 0 buffers small records per channel until this
+    # many bytes are pending, then ships them as ONE queue put / ring slot.
+    # 0 (the default) keeps the legacy one-record-per-put wire format.
+    coalesce_bytes = 0
+
+    @property
+    def epoch(self) -> int:
+        """Deployment epoch records are stamped with."""
+        return self._epoch
+
+    @epoch.setter
+    def epoch(self, value: int) -> None:
+        # an epoch bump is a flush barrier: records buffered before it
+        # belong to the abandoned stream and must arrive STALE (never
+        # renumbered) — best effort, since a full FIFO of a doomed epoch is
+        # not worth blocking recovery over (the replay re-sends drops)
+        if value != self._epoch and getattr(self, "_send_pending", None):
+            self.flush_sends(best_effort=True)
+        self._epoch = value
+
+    # -- coalescing buffers (lazy: endpoints that skip __init__ still work) --
+    def _pending_map(self) -> dict:
+        """``chan -> [records, nbytes]`` unflushed coalesce buffers."""
+        p = getattr(self, "_send_pending", None)
+        if p is None:
+            p = self._send_pending = {}
+        return p
+
+    def _exploded_map(self) -> dict:
+        """``chan -> [(ci, payload), ...]`` read-ahead buffer of an exploded
+        coalesced batch (records pulled off the FIFO, not yet delivered)."""
+        p = getattr(self, "_recv_exploded", None)
+        if p is None:
+            p = self._recv_exploded = {}
+        return p
+
+    def flush_sends(self, chan=None, *, best_effort: bool = False) -> None:
+        """Ship whatever the coalescing fast path still buffers — one
+        batched record per channel (``chan`` limits it; None = all).  No-op
+        with nothing pending.  ``best_effort`` drops what a full FIFO cannot
+        take quickly instead of raising (stale-epoch flushes: the replay
+        machinery re-sends anything dropped)."""
+        pend = getattr(self, "_send_pending", None)
+        if not pend:
+            return
+        for c in ([chan] if chan is not None else list(pend)):
+            buf = pend.pop(c, None)
+            if buf and buf[0]:
+                self._flush_one(c, buf, best_effort=best_effort)
+
+    def _flush_one(self, chan, buf, *, best_effort: bool = False) -> None:
+        raise NotImplementedError
+
+    def clear_read_buffers(self) -> None:
+        """Drop read-ahead state from a previous stream.  An executor calls
+        this when it RESETS its run state (fresh batch / replay from
+        scratch); a stall-resume keeps the buffers — they hold exactly the
+        records already pulled off the FIFO but not yet folded."""
+        m = getattr(self, "_recv_exploded", None)
+        if m:
+            m.clear()
 
     def setup(self, cut_channels, capacities: dict) -> None:
         raise NotImplementedError
@@ -235,6 +348,11 @@ class ChannelTransport:
         for ci, value in records[:self._requeue_limit(chan)]:
             self.send(chan, ci, value)
             n += 1
+        if n and self.coalesce_bytes > 0:
+            # requeued records must be ON the FIFO when the replay floor is
+            # computed — a partial coalesce buffer here would break the
+            # contiguous-prefix contract
+            self.flush_sends(chan)
         return n
 
     def _requeue_limit(self, chan) -> int:
@@ -361,18 +479,66 @@ class _QueueTransport(ChannelTransport):
             pass
 
     def send(self, chan, ci: int, value) -> None:
+        if self.coalesce_bytes > 0:
+            if isinstance(value, str) and value == EOS:
+                # EOS terminates the stream: flush everything buffered before
+                # it, then ship the marker ALONE so drains and out-of-band
+                # consumers keep seeing it unwrapped
+                self.flush_sends(chan)
+                self._put_record(chan, ci, self._pack(value))
+                return
+            packed = self._pack(value)
+            buf = self._pending_map().setdefault(chan, [[], 0])
+            buf[0].append((ci, packed))
+            buf[1] += _payload_nbytes(packed)
+            if buf[1] >= self.coalesce_bytes:
+                self.flush_sends(chan)
+            return
+        self._put_record(chan, ci, self._pack(value))
+
+    def _put_record(self, chan, ci: int, packed, *,
+                    best_effort: bool = False) -> None:
         try:
-            self._queues[chan].put((self.epoch, ci, self._pack(value)),
-                                   timeout=self.recv_timeout_s)
+            self._queues[chan].put((self.epoch, ci, packed),
+                                   timeout=0.1 if best_effort
+                                   else self.recv_timeout_s)
         except queue.Full:
+            if best_effort:
+                return  # stale-epoch flush: replay re-sends the drop
             raise TransportError(
                 f"{self.name}: channel {chan} full for "
                 f"{self.recv_timeout_s}s (consumer host stalled?)") from None
 
+    def _flush_one(self, chan, buf, *, best_effort: bool = False) -> None:
+        records = buf[0]
+        if len(records) == 1:  # no batching win — ship the plain record
+            self._put_record(chan, records[0][0], records[0][1],
+                             best_effort=best_effort)
+        else:
+            self._put_record(chan, records[0][0], _Coalesced(records),
+                             best_effort=best_effort)
+
     def recv(self, chan, ci: int):
         deadline = _time.monotonic() + (self.recv_timeout_s if ci >= 0
                                         else 1.0)
+        exploded = self._exploded_map()
         while True:
+            buf = exploded.get(chan)
+            while buf:  # read-ahead from an exploded coalesced batch
+                got_ci, value = buf.pop(0)
+                if not buf:
+                    exploded.pop(chan, None)
+                if isinstance(value, str) and value == EOS:
+                    return EOS
+                if ci < 0:
+                    return value
+                if got_ci < ci:
+                    continue  # replayed duplicate of an already-folded chunk
+                if got_ci > ci:
+                    raise TransportError(
+                        f"{self.name}: channel {chan} out of order: "
+                        f"expected chunk {ci}, got {got_ci}")
+                return value
             try:
                 ep, got_ci, value = self._queues[chan].get(
                     timeout=max(deadline - _time.monotonic(), 0.01))
@@ -380,6 +546,21 @@ class _QueueTransport(ChannelTransport):
                 raise TransportError(
                     f"{self.name}: channel {chan} empty for "
                     f"{self.recv_timeout_s}s (producer host died?)") from None
+            if isinstance(value, _Coalesced):
+                # ONE epoch check for the whole batch (records never
+                # straddle a bump), then explode into the read-ahead buffer;
+                # each sub-record still passes the dup/order filter above
+                if ci >= 0 and ep < self.epoch:
+                    continue  # pre-recovery leftover batch
+                if ci >= 0 and ep > self.epoch:
+                    raise TransportError(
+                        f"{self.name}: channel {chan} carries epoch {ep} "
+                        f"but this endpoint is at {self.epoch} (controller "
+                        "out of sync)")
+                exploded.setdefault(chan, []).extend(
+                    (rci, rv if isinstance(rv, str) else self._unpack(rv))
+                    for rci, rv in value.records)
+                continue
             if ci < 0:  # draining: any record at any epoch
                 if isinstance(value, str) and value == EOS:
                     return EOS
@@ -409,12 +590,25 @@ class _QueueTransport(ChannelTransport):
             records, empties, failures = [], 0, 0
             while empties < 2 and failures < 10_000:
                 try:
-                    records.append(q.get(timeout=_DRAIN_POLL_S))
+                    item = q.get(timeout=_DRAIN_POLL_S)
+                    if isinstance(item[2], _Coalesced):  # flatten the batch
+                        records.extend((item[0], rci, rv)
+                                       for rci, rv in item[2].records)
+                    else:
+                        records.append(item)
                     empties = 0
                 except queue.Empty:
                     empties += 1
                 except Exception:  # a peer killed mid-put can corrupt a
                     failures += 1  # pickled record — count it lost, move on
+            # sweep OUR unflushed coalesce buffer last (thread hosts share
+            # this instance): the producer believes those were sent
+            pend = getattr(self, "_send_pending", None)
+            if pend:
+                local = pend.pop(chan, None)
+                if local:
+                    records.extend((self.epoch, rci, rv)
+                                   for rci, rv in local[0])
             kept, dropped = [], 0
             for ep, ci, value in records:
                 if (chan in keep and ci >= 0
@@ -497,6 +691,7 @@ class MultiProcessPipe(_QueueTransport):
         # mp.Queues are inheritable through Process args; ship only the dict
         ep = _PipeEndpoint(self._queues)
         ep.recv_timeout_s = self.recv_timeout_s  # keep any override
+        ep.coalesce_bytes = self.coalesce_bytes
         return ep
 
     def _pack(self, value):
@@ -565,11 +760,15 @@ class _ShmRing:
     ``SharedMemory`` objects are cached per process, never pickled.
     """
 
-    def __init__(self, slot_names: list, slot_bytes: int, free_q, data_q):
+    def __init__(self, slot_names: list, slot_bytes: int, free_q, data_q,
+                 capacity: int = None):
         self.slot_names = slot_names
         self.slot_bytes = slot_bytes
         self.free_q = free_q  # indices of writable slots (backpressure)
         self.data_q = data_q  # (ci, header) FIFO, bounded by capacity
+        # the LOGICAL CSP bound — double-buffered rings hold 2× slots but
+        # the header queue still only admits `capacity` in-flight records
+        self.capacity = capacity if capacity is not None else len(slot_names)
 
 
 class _ShmOps:
@@ -593,9 +792,26 @@ class _ShmOps:
         return cache[name]
 
     def send(self, chan, ci: int, value) -> None:
+        if self.coalesce_bytes > 0:
+            if isinstance(value, str) and value == EOS:
+                # EOS flushes what precedes it, then ships alone (unwrapped)
+                self.flush_sends(chan)
+                self._send_one(chan, ci, value)
+                return
+            buf = self._pending_map().setdefault(chan, [[], 0])
+            buf[0].append((ci, value))  # RAW values; packed into a slot at
+            buf[1] += _payload_nbytes(value)  # flush time
+            if buf[1] >= self.coalesce_bytes:
+                self.flush_sends(chan)
+            return
+        self._send_one(chan, ci, value)
+
+    def _send_one(self, chan, ci: int, value, *,
+                  best_effort: bool = False) -> None:
         ring = self._rings[chan]
         if isinstance(value, str):  # SKIP / EOS markers need no slot
-            self._put_header(ring, chan, (self.epoch, ci, ("marker", value)))
+            self._put_header(ring, chan, (self.epoch, ci, ("marker", value)),
+                             best_effort=best_effort)
             return
         import jax
         arrs = jax.tree_util.tree_map(_as_contig, value)
@@ -604,11 +820,15 @@ class _ShmOps:
         if total > ring.slot_bytes or any(not _rawable(a) for a in leaves):
             # graceful fallback: oversized / exotic chunks ship inline
             self._put_header(ring, chan,
-                             (self.epoch, ci, ("inline", pack_raw(arrs))))
+                             (self.epoch, ci, ("inline", pack_raw(arrs))),
+                             best_effort=best_effort)
             return
         try:
-            idx = ring.free_q.get(timeout=self.recv_timeout_s)
+            idx = ring.free_q.get(timeout=0.1 if best_effort
+                                  else self.recv_timeout_s)
         except queue.Empty:
+            if best_effort:
+                return  # stale-epoch flush: replay re-sends the drop
             raise TransportError(
                 f"{self.name}: channel {chan} has no free slot for "
                 f"{self.recv_timeout_s}s (consumer host stalled?)") from None
@@ -628,12 +848,80 @@ class _ShmOps:
 
         meta_tree = jax.tree_util.tree_map(_write, arrs)
         self._put_header(ring, chan, (self.epoch, ci,
-                                      ("slot", idx, meta_tree)))
+                                      ("slot", idx, meta_tree)),
+                         best_effort=best_effort)
 
-    def _put_header(self, ring: _ShmRing, chan, item) -> None:
+    def _flush_one(self, chan, buf, *, best_effort: bool = False) -> None:
+        records = buf[0]
+        if len(records) == 1:  # no batching win — ship the plain record
+            self._send_one(chan, records[0][0], records[0][1],
+                           best_effort=best_effort)
+            return
+        ring = self._rings[chan]
+        import jax
+        prepped, total, exotic = [], 0, False
+        for ci, value in records:
+            if isinstance(value, str):
+                prepped.append((ci, value, None))
+                continue
+            arrs = jax.tree_util.tree_map(_as_contig, value)
+            if any(not _rawable(a)
+                   for a in jax.tree_util.tree_leaves(arrs)):
+                exotic = True
+                break
+            prepped.append((ci, None, arrs))
+            total += sum(a.nbytes
+                         for a in jax.tree_util.tree_leaves(arrs))
+        if exotic or total > ring.slot_bytes:
+            # the batch cannot share one slot: fall back per record
+            for ci, value in records:
+                self._send_one(chan, ci, value, best_effort=best_effort)
+            return
         try:
-            ring.data_q.put(item, timeout=self.recv_timeout_s)
+            idx = ring.free_q.get(timeout=0.1 if best_effort
+                                  else self.recv_timeout_s)
+        except queue.Empty:
+            if best_effort:
+                return
+            raise TransportError(
+                f"{self.name}: channel {chan} has no free slot for "
+                f"{self.recv_timeout_s}s (consumer host stalled?)") from None
+        slot_buf = self._slot(ring, idx).buf
+        offset = 0
+
+        def _write(a):
+            nonlocal offset
+            meta = _ShmLeaf(a.dtype.str, a.shape, offset)
+            if a.nbytes:
+                dst = np.frombuffer(slot_buf, dtype=a.dtype, count=a.size,
+                                    offset=offset).reshape(a.shape)
+                np.copyto(dst, a)
+            offset += a.nbytes
+            return meta
+
+        entries = []
+        for ci, marker, arrs in prepped:
+            if marker is not None:
+                entries.append((ci, ("marker", marker)))
+            else:
+                entries.append((ci, ("tree",
+                                     jax.tree_util.tree_map(_write, arrs))))
+        self._put_header(ring, chan,
+                         (self.epoch, records[0][0],
+                          ("cbatch", idx, entries)),
+                         best_effort=best_effort)
+
+    def _put_header(self, ring: _ShmRing, chan, item, *,
+                    best_effort: bool = False) -> None:
+        try:
+            ring.data_q.put(item, timeout=0.1 if best_effort
+                            else self.recv_timeout_s)
         except queue.Full:
+            if best_effort:
+                header = item[2]  # dropping the header must still recycle
+                if header[0] in ("slot", "cbatch"):  # its slot
+                    ring.free_q.put(header[1])
+                return
             raise TransportError(
                 f"{self.name}: channel {chan} full for "
                 f"{self.recv_timeout_s}s (consumer host stalled?)") from None
@@ -641,7 +929,7 @@ class _ShmOps:
     def _discard_header(self, ring: _ShmRing, header) -> None:
         """Drop a header, recycling its slot (the ring invariant is that
         free slots + in-flight slots == capacity)."""
-        if header[0] == "slot":
+        if header[0] in ("slot", "cbatch"):
             ring.free_q.put(header[1])
 
     def _consume_header(self, ring: _ShmRing, header):
@@ -667,11 +955,54 @@ class _ShmOps:
         ring.free_q.put(idx)
         return out
 
+    def _consume_batch(self, ring: _ShmRing, header) -> list:
+        """Decode every record of a ``("cbatch", idx, entries)`` header out
+        of its slot (copying — the slot is recycled once, at the end) and
+        return ``[(ci, value), ...]`` in send order."""
+        _, idx, entries = header
+        slot_buf = self._slot(ring, idx).buf
+        import jax
+
+        def _read(meta):
+            if not isinstance(meta, _ShmLeaf):
+                return meta
+            dt = np.dtype(meta.dtype)
+            n = int(np.prod(meta.shape, dtype=np.int64)) if meta.shape else 1
+            a = np.frombuffer(slot_buf, dtype=dt, count=n,
+                              offset=meta.offset).reshape(meta.shape)
+            return a.copy()
+
+        out = []
+        for ci, entry in entries:
+            if entry[0] == "marker":
+                out.append((ci, entry[1]))
+            else:
+                out.append((ci, jax.tree_util.tree_map(_read, entry[1])))
+        ring.free_q.put(idx)
+        return out
+
     def recv(self, chan, ci: int):
         ring = self._rings[chan]
         deadline = _time.monotonic() + (self.recv_timeout_s if ci >= 0
                                         else 1.0)
+        exploded = self._exploded_map()
         while True:
+            buf = exploded.get(chan)
+            while buf:  # read-ahead from an exploded coalesced batch
+                got_ci, value = buf.pop(0)
+                if not buf:
+                    exploded.pop(chan, None)
+                if isinstance(value, str) and value == EOS:
+                    return EOS
+                if ci < 0:
+                    return value
+                if got_ci < ci:
+                    continue  # replayed duplicate of an already-folded chunk
+                if got_ci > ci:
+                    raise TransportError(
+                        f"{self.name}: channel {chan} out of order: "
+                        f"expected chunk {ci}, got {got_ci}")
+                return value
             try:
                 ep, got_ci, header = ring.data_q.get(
                     timeout=max(deadline - _time.monotonic(), 0.01))
@@ -679,6 +1010,21 @@ class _ShmOps:
                 raise TransportError(
                     f"{self.name}: channel {chan} empty for "
                     f"{self.recv_timeout_s}s (producer host died?)") from None
+            if header[0] == "cbatch":
+                # ONE epoch check for the whole batch, then explode into the
+                # read-ahead buffer (sub-records hit the dup/order filter)
+                if ci >= 0 and ep < self.epoch:
+                    self._discard_header(ring, header)
+                    continue
+                if ci >= 0 and ep > self.epoch:
+                    self._discard_header(ring, header)
+                    raise TransportError(
+                        f"{self.name}: channel {chan} carries epoch {ep} "
+                        f"but this endpoint is at {self.epoch} (controller "
+                        "out of sync)")
+                exploded.setdefault(chan, []).extend(
+                    self._consume_batch(ring, header))
+                continue
             is_eos = header[0] == "marker" and header[1] == EOS
             if ci < 0:  # draining: any record at any epoch
                 return EOS if is_eos else self._consume_header(ring, header)
@@ -713,7 +1059,7 @@ class _ShmOps:
         return out
 
     def channel_capacities(self) -> dict:
-        return {chan: len(ring.slot_names)
+        return {chan: getattr(ring, "capacity", len(ring.slot_names))
                 for chan, ring in self._rings.items()}
 
 
@@ -737,12 +1083,17 @@ class SharedMemoryRing(_ShmOps, ChannelTransport):
     name = "shm"
     process_hosts = True
 
-    def __init__(self, ctx=None, slot_bytes: int = 1 << 20):
+    def __init__(self, ctx=None, slot_bytes: int = 1 << 20,
+                 double_buffer: bool = False):
         if ctx is None:
             import multiprocessing
             ctx = multiprocessing.get_context("spawn")
         self.ctx = ctx
         self.slot_bytes = slot_bytes
+        # 2× physical slots per ring (same logical CSP capacity): a producer
+        # packs the next slot while the consumer is still unpacking the
+        # previous one, instead of blocking on free_q
+        self.double_buffer = double_buffer
         self._rings: dict = {}
         self._caps: dict = {}   # chan -> capacity, kept for rebuilds
         self._owned: dict = {}  # chan -> created segments; we unlink them
@@ -751,17 +1102,18 @@ class SharedMemoryRing(_ShmOps, ChannelTransport):
     def _make_ring(self, chan, capacities) -> _ShmRing:
         from multiprocessing import shared_memory
         cap = capacities.get(chan, 0) or DEFAULT_CAPACITY
+        n_slots = cap * 2 if self.double_buffer else cap
         slots = [shared_memory.SharedMemory(create=True,
                                             size=self.slot_bytes)
-                 for _ in range(cap)]
+                 for _ in range(n_slots)]
         self._owned[chan] = slots
         self._attached().update({s.name: s for s in slots})
         free_q = self.ctx.Queue()
-        for i in range(cap):
+        for i in range(n_slots):
             free_q.put(i)
-        data_q = self.ctx.Queue(maxsize=cap)
+        data_q = self.ctx.Queue(maxsize=cap)  # the CSP bound, not slot count
         return _ShmRing([s.name for s in slots], self.slot_bytes,
-                        free_q, data_q)
+                        free_q, data_q, capacity=cap)
 
     def setup(self, cut_channels, capacities) -> None:
         self._caps.update(capacities)
@@ -857,6 +1209,18 @@ class SharedMemoryRing(_ShmOps, ChannelTransport):
                     failures += 1  # pickled header — count it lost, move on
             kept, dropped = [], failures
             for ep, ci, header in records:
+                if header[0] == "cbatch":
+                    if chan in keep:
+                        for rci, rv in self._consume_batch(ring, header):
+                            if rci >= 0 and not (isinstance(rv, str)
+                                                 and rv == EOS):
+                                kept.append((rci, rv))
+                            else:
+                                dropped += 1
+                    else:
+                        self._discard_header(ring, header)
+                        dropped += 1
+                    continue
                 is_eos = header[0] == "marker" and header[1] == EOS
                 if chan in keep and ci >= 0 and not is_eos:
                     # decode out of the slot (recycling it): holding slots
@@ -865,11 +1229,23 @@ class SharedMemoryRing(_ShmOps, ChannelTransport):
                 else:
                     self._discard_header(ring, header)
                     dropped += 1
+            # sweep OUR unflushed coalesce buffer (raw values, send order)
+            pend = getattr(self, "_send_pending", None)
+            if pend:
+                local = pend.pop(chan, None)
+                if local:
+                    for rci, rv in local[0]:
+                        if (chan in keep and rci >= 0
+                                and not (isinstance(rv, str) and rv == EOS)):
+                            kept.append((rci, rv))
+                        else:
+                            dropped += 1
             out[chan] = (kept, dropped)
         return out
 
     def _requeue_limit(self, chan) -> int:
-        return len(self._rings[chan].slot_names)
+        ring = self._rings[chan]
+        return getattr(ring, "capacity", len(ring.slot_names))
 
     def inject_eos(self, chan) -> bool:
         try:
@@ -882,6 +1258,7 @@ class SharedMemoryRing(_ShmOps, ChannelTransport):
     def endpoint(self, host: int):
         ep = _ShmEndpoint(self._rings)
         ep.recv_timeout_s = self.recv_timeout_s  # keep any override
+        ep.coalesce_bytes = self.coalesce_bytes
         return ep
 
     def _unlink_owned(self) -> None:
@@ -978,4 +1355,8 @@ def make_transport(kind: str, **kw) -> ChannelTransport:
     if kind not in kinds:
         raise NetworkError(
             f"unknown transport {kind!r}; pick one of {sorted(kinds)}")
-    return kinds[kind](**kw)
+    coalesce = kw.pop("coalesce_bytes", 0)  # accepted by every kind
+    t = kinds[kind](**kw)
+    if coalesce:
+        t.coalesce_bytes = int(coalesce)
+    return t

@@ -62,6 +62,7 @@ __all__ = [
     "SlotPlan",
     "fused_chains",
     "plan_depth_lanes",
+    "coalesced_capacity",
     "EmitChunks",
     "StreamStats",
     "StreamExecutor",
@@ -260,6 +261,20 @@ def plan_depth_lanes(net: Network, max_in_flight: Optional[int],
             and p.fan_any)]
     n_lanes = lanes if lanes is not None else max(fan_widths + [depth])
     return depth, n_lanes
+
+
+def coalesced_capacity(depth: int, lanes: int, record_bytes: int,
+                       coalesce_bytes: int) -> int:
+    """FIFO slot count for a cut channel whose transport coalesces records.
+
+    With a ``coalesce_bytes`` budget, one queue slot carries
+    ``budget // record_bytes`` records, so the consumer's in-flight appetite
+    (``max(depth, lanes)`` records) fits in proportionally fewer slots —
+    never below the rendezvous floor of 2, and degrading to the uncoalesced
+    sizing when records are larger than the budget (each ships alone)."""
+    appetite = max(depth, lanes, 2)
+    per_slot = max(1, coalesce_bytes // max(1, record_bytes))
+    return max(2, -(-appetite // per_slot))
 
 
 # ==========================================================================

@@ -10,8 +10,18 @@ instead of five argparse blocks drifting apart.
 from __future__ import annotations
 
 import argparse
+import os
+import sys
 
 TRANSPORTS = ["inprocess", "pipe", "shm", "jaxmesh"]
+
+# well-known tcmalloc locations (debian/ubuntu images); preloading it in
+# the environment makes every SPAWNED host inherit the faster allocator
+_TCMALLOC_CANDIDATES = (
+    "/usr/lib/x86_64-linux-gnu/libtcmalloc_minimal.so.4",
+    "/usr/lib/x86_64-linux-gnu/libtcmalloc.so.4",
+    "/usr/lib/libtcmalloc_minimal.so.4",
+)
 
 
 def add_model_flags(ap: argparse.ArgumentParser, *,
@@ -33,4 +43,41 @@ def add_cluster_flags(ap: argparse.ArgumentParser, *,
     ap.add_argument("--transport", default=default_transport,
                     choices=TRANSPORTS,
                     help="cut-channel transport between hosts")
+    ap.add_argument("--virtual-devices", type=int, default=0, metavar="N",
+                    help="fake an N-device host on CPU (XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N): the "
+                         "jaxmesh transport and sharded stages see N "
+                         "devices without any accelerator attached. Must "
+                         "be applied before jax initialises — the "
+                         "launcher sets it for this process AND for every "
+                         "spawned host")
     return ap
+
+
+def apply_runtime_env(args) -> None:
+    """Process-environment hygiene that must land BEFORE the first jax
+    import: virtual device count, TF/absl log noise, and (when present on
+    the image) tcmalloc for the spawned hosts.  Launchers call this right
+    after ``parse_args`` — their heavy imports all happen inside ``main``,
+    so nothing has pulled jax in yet."""
+    n = int(getattr(args, "virtual_devices", 0) or 0)
+    if n > 0:
+        if "jax" in sys.modules:
+            raise RuntimeError(
+                "--virtual-devices must be applied before jax is imported "
+                "(XLA reads XLA_FLAGS once, at backend initialisation)")
+        flags = os.environ.get("XLA_FLAGS", "")
+        if "--xla_force_host_platform_device_count" not in flags:
+            os.environ["XLA_FLAGS"] = (
+                flags + f" --xla_force_host_platform_device_count={n}"
+            ).strip()
+    # silence the TF/XLA C++ banner spam that drowns launcher output
+    os.environ.setdefault("TF_CPP_MIN_LOG_LEVEL", "2")
+    os.environ.setdefault("GRPC_VERBOSITY", "ERROR")
+    if "LD_PRELOAD" not in os.environ:
+        for lib in _TCMALLOC_CANDIDATES:
+            if os.path.exists(lib):
+                # too late for THIS process (the loader already ran) but
+                # every spawned host interpreter inherits the allocator
+                os.environ["LD_PRELOAD"] = lib
+                break

@@ -13,7 +13,7 @@ from __future__ import annotations
 
 import argparse
 
-from ._common import add_cluster_flags
+from ._common import add_cluster_flags, apply_runtime_env
 
 
 # module-level factories: the pipe transport spawns fresh interpreters that
@@ -82,7 +82,23 @@ def main():
                          "re-prove the §6.1.1 refinement, replay any "
                          "pending batch from the fold snapshots, then "
                          "serve --batches more")
+    ap.add_argument("--cut", default="count", choices=["count", "cost"],
+                    help="partition objective: 'count' balances process "
+                         "COUNTS per host (the §6 default); 'cost' runs a "
+                         "short seeded calibration and minimises the "
+                         "bottleneck host's measured TIME, cut-channel "
+                         "transfer included — the plan is still proved as "
+                         "a §6.1.1 refinement before anything deploys")
+    ap.add_argument("--calibrate", action="store_true",
+                    help="print the measured per-process cost profile "
+                         "(wall time, output bytes, flops prior) and the "
+                         "calibrated transport bandwidth before deploying")
+    ap.add_argument("--coalesce-bytes", type=int, default=0, metavar="B",
+                    help="transport fast path: coalesce small records into "
+                         "one ring slot / one pipe write, up to B bytes "
+                         "per flush (0 = per-record sends, the default)")
     args = ap.parse_args()
+    apply_runtime_env(args)
 
     import time
 
@@ -118,7 +134,23 @@ def main():
         if ev.refined is not True:
             raise SystemExit(1)
     else:
-        plan = partition(net, hosts=args.hosts)
+        profile = None
+        if args.cut == "cost" or args.calibrate:
+            from repro.cluster import calibrate
+            t0 = time.perf_counter()
+            profile = calibrate(net, instances=instances,
+                                microbatch_size=args.microbatch,
+                                transports=(args.transport,))
+            print(f"[cluster] calibrated {len(profile.costs)} process "
+                  f"cost(s) in {(time.perf_counter() - t0) * 1e3:.1f}ms")
+            if args.calibrate:
+                print(profile.describe())
+        if args.cut == "cost":
+            from repro.cluster import cost_assignment
+            plan = partition(net, assignment=cost_assignment(
+                net, args.hosts, profile, transport=args.transport))
+        else:
+            plan = partition(net, hosts=args.hosts)
         print(plan.describe())
         print(f"[cluster] CSP refinement (partitioned [T= unpartitioned, "
               f"both directions): {check_refinement(net, plan)}")
@@ -126,7 +158,9 @@ def main():
                                 microbatch_size=args.microbatch,
                                 factory=factory, trace=bool(args.trace),
                                 snapshot_every=args.snapshot_every,
-                                snapshot_dir=args.snapshot_dir)
+                                snapshot_dir=args.snapshot_dir,
+                                coalesce_bytes=args.coalesce_bytes,
+                                profile=profile)
     with dep:
         if args.resume_from and dep.controller._needs_recovery:
             t0 = time.perf_counter()

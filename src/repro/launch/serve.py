@@ -20,7 +20,7 @@ import argparse
 import random
 import time
 
-from ._common import add_cluster_flags, add_model_flags
+from ._common import add_cluster_flags, add_model_flags, apply_runtime_env
 
 
 def _pct(xs: list, q: float) -> float:
@@ -44,6 +44,7 @@ def main():
     ap.add_argument("--seed", type=int, default=0,
                     help="arrival-trace seed")
     args = ap.parse_args()
+    apply_runtime_env(args)
 
     import jax
 

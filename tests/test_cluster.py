@@ -12,13 +12,14 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.cluster import (ClusterDeployment, ClusterError, ExecConfig,
-                           InProcess, JaxMesh, MultiProcessPipe,
-                           PartitionExecutor, SharedMemoryRing,
+from repro.cluster import (ClusterDeployment, ClusterError, CostProfile,
+                           ExecConfig, InProcess, JaxMesh, MultiProcessPipe,
+                           PartitionExecutor, ProcessCost, SharedMemoryRing,
                            abstract_partitioned_model, auto_assignment,
-                           check_redeployment, check_refinement,
-                           derive_cut_capacities, make_transport, partition,
-                           repartition_without, run_cluster)
+                           calibrate, check_redeployment, check_refinement,
+                           cost_assignment, derive_cut_capacities,
+                           make_transport, partition, repartition_without,
+                           run_cluster)
 from repro.core import (Collect, CombineNto1, DataParallelCollect, Emit,
                         GroupOfPipelineCollects, Network, NetworkError,
                         OnePipelineCollect, OneSeqCastList, Worker, build,
@@ -985,3 +986,90 @@ class TestJaxMesh:
     def test_unknown_transport_rejected(self):
         with pytest.raises(NetworkError, match="unknown transport"):
             make_transport("carrier-pigeon")
+
+
+class TestCostPartitioning:
+    """Tentpole: measured-cost planning — calibrate once, cut by TIME not
+    by count, emit a perfectly ordinary PartitionPlan that faces the same
+    §6.1.1 proof obligations (and hot-swaps through reconfigure)."""
+
+    def _skewed_net(self):
+        # four stages, uniform COUNT, skewed COST (stage0/stage1 heavy)
+        return OnePipelineCollect(create=_mk_items(8),
+                                  stage_ops=[_sq, _sq, _inc, _inc],
+                                  collector=_add, init=jnp.asarray(0.0),
+                                  jit_combine=True)
+
+    def _skewed_profile(self, heavy=("stage0", "stage1")):
+        costs = {name: ProcessCost(name=name, shape=(), dtype="float32",
+                                   wall_s=1e-3 if name in heavy else 1e-6,
+                                   out_bytes=8)
+                 for name in ("emit", "stage0", "stage1", "stage2",
+                              "stage3", "collect")}
+        return CostProfile(costs=costs, bandwidths={"inprocess": 1e9})
+
+    def test_cost_cut_differs_from_count_cut_and_refines(self):
+        net = self._skewed_net()
+        profile = self._skewed_profile()
+        count_plan = partition(net, hosts=2)
+        cost_plan = partition(net, assignment=cost_assignment(
+            net, 2, profile, transport="inprocess"))
+        a = count_plan.assignment
+        assert a["stage0"] == a["stage1"]  # count piles the heavies up
+        assert (cost_plan.assignment["stage0"]
+                != cost_plan.assignment["stage1"])  # cost splits them 1/1
+        for plan in (count_plan, cost_plan):
+            assert check_refinement(net, plan)
+        assert check_redeployment(net, count_plan, cost_plan)
+
+    def test_cost_assignment_may_use_fewer_hosts(self):
+        # transfer dwarfs compute: every cut costs ~1000s, so the cheapest
+        # legal plan is all-on-one-host even when three are offered
+        net = _pipeline()
+        costs = {n: ProcessCost(name=n, shape=(), dtype="float32",
+                                wall_s=1e-7, out_bytes=1 << 20)
+                 for n in ("emit", "stage0", "stage1", "collect")}
+        profile = CostProfile(costs=costs, bandwidths={"inprocess": 1e3})
+        a = cost_assignment(net, 3, profile, transport="inprocess")
+        assert len(set(a.values())) == 1
+        assert check_refinement(net, partition(net, assignment=a))
+
+    def test_calibrate_measures_every_stage(self):
+        net = _pipeline()
+        profile = calibrate(net, instances=4, microbatch_size=2,
+                            transports=("inprocess",))
+        for name in ("stage0", "stage1", "collect"):
+            c = profile.costs[name]
+            assert c.source == "measured"
+            assert c.wall_s > 0
+        assert profile.bandwidths.get("inprocess", 0) > 0
+        # the json round-trip plans identically to the live profile
+        rt = CostProfile.from_json(profile.to_json())
+        assert (cost_assignment(net, 2, profile, transport="inprocess")
+                == cost_assignment(net, 2, rt, transport="inprocess"))
+
+    def test_hot_swap_to_cost_plan_via_reconfigure(self):
+        net = self._skewed_net()
+        n = 8
+        seq = run_sequential(net, n)
+        cost_plan = partition(net, assignment=cost_assignment(
+            net, 2, self._skewed_profile(), transport="inprocess"))
+        with ClusterDeployment(net, hosts=2, transport="inprocess",
+                               microbatch_size=2) as dep:
+            out = dep.run(instances=n)
+            assert bool(out["collect"] == seq["collect"])
+            ev = dep.reconfigure(plan=cost_plan)
+            assert ev.mode == "reconfigure" and ev.refined is True
+            assert dep.plan.assignment == cost_plan.assignment
+            out2 = dep.run(instances=n)
+            assert bool(out2["collect"] == seq["collect"])
+
+    def test_coalesced_deployment_bit_identical(self):
+        net = _farm(12, 3)
+        seq = run_sequential(net, 12)
+        with ClusterDeployment(net, hosts=2, transport="inprocess",
+                               microbatch_size=2,
+                               coalesce_bytes=1 << 14) as dep:
+            for _ in range(2):
+                out = dep.run(instances=12)
+                assert bool(out["collect"] == seq["collect"])

@@ -266,6 +266,31 @@ class TestClusterTrace:
             m = dep.metrics()  # metrics don't need tracing
             assert set(m.throughput) == {0, 1}
 
+    def test_bytes_per_s_survives_reconfigure(self):
+        """Regression: per-channel bytes/s came from the LAST batch's
+        reports, so a reconfigure() (which replaces the report map and
+        bumps the epoch) zeroed every channel's rate until the next batch
+        — and dropped channels the new plan no longer cuts entirely.  The
+        snapshot now reports deployment-lifetime cumulative rates."""
+        net = _farm_factory(2)
+        with ClusterDeployment(net, hosts=2, transport="inprocess",
+                               microbatch_size=2) as dep:
+            dep.run(instances=8)
+            before = dep.metrics().bytes_per_s
+            assert before and all(v > 0 for v in before.values())
+            dep.reconfigure(hosts=1)  # replaces _last_reports, bumps epoch
+            after = dep.metrics()
+            assert after.epoch == 2
+            for chan_key, rate in before.items():
+                assert after.bytes_per_s.get(chan_key, 0) > 0, (
+                    f"{chan_key} rate reset across reconfigure")
+            dep.reconfigure(hosts=2)
+            dep.run(instances=8)
+            final = dep.metrics().bytes_per_s
+            # the ledger accumulates: the cut channel's rate is still live
+            for chan_key in before:
+                assert final.get(chan_key, 0) > 0
+
 
 class TestSimGoldenTrace:
     def _one(self):

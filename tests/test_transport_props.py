@@ -202,6 +202,131 @@ class TestEpochProtocolProperty:
             t.close()
 
 
+class TestCoalescingProperties:
+    """Tentpole: the batching fast path is protocol-invisible — same
+    records in the same order, EOS and epoch bumps flush the buffer, and
+    drain/requeue stay lossless over partially-coalesced state."""
+
+    @given(kind=st.sampled_from(["pipe", "shm"]),
+           dtype=st.sampled_from(_DTYPES),
+           shape=st.sampled_from(_SHAPES),
+           seed=st.integers(0, 5))
+    @settings(max_examples=40, deadline=None)
+    def test_batched_pack_roundtrip(self, kind, dtype, shape, seed):
+        """Several records coalesced into ONE write/slot decode back
+        bit-identical — over byte orders, 0-d and empty shapes."""
+        chan = ("a", "b")
+        t = _mk_transport(kind)
+        t.coalesce_bytes = 1 << 12
+        try:
+            t.setup([chan], {chan: 8})
+            arrs = [_make_array(dtype, shape, seed + i) for i in range(5)]
+            for ci, a in enumerate(arrs):
+                t.send(chan, ci, {"x": a, "pair": (a, a)})
+            t.flush_sends()
+            for ci, a in enumerate(arrs):
+                got = t.recv(chan, ci)
+                for g in (got["x"], got["pair"][0], got["pair"][1]):
+                    assert g.dtype == a.dtype and g.shape == a.shape
+                    assert (g.tobytes()
+                            == np.ascontiguousarray(a).tobytes())
+            assert _fifo_len(t, chan) == 0
+        finally:
+            t.close()
+
+    @given(kind=st.sampled_from(_TRANSPORTS), seed=st.integers(0, 9))
+    @settings(max_examples=30, deadline=None)
+    def test_eos_flushes_pending(self, kind, seed):
+        """EOS lands BEHIND every buffered record: the consumer sees the
+        full stream, in order, then the marker — no explicit flush."""
+        import random
+        rng = random.Random(seed)
+        chan = ("a", "b")
+        t = _mk_transport(kind)
+        t.coalesce_bytes = 1 << 13  # budget >> payloads: nothing
+        try:                        # auto-flushes before the EOS
+            t.setup([chan], {chan: 8})
+            k = rng.randrange(1, 6)
+            for ci in range(k):
+                t.send(chan, ci, _payload(kind, ci))
+            from repro.cluster.transport import EOS
+            t.send(chan, k, EOS)
+            for ci in range(k):
+                got = t.recv(chan, ci)
+                np.testing.assert_array_equal(got["v"],
+                                              _payload(kind, ci)["v"])
+            got = t.recv(chan, k)
+            assert isinstance(got, str) and got == EOS
+        finally:
+            t.close()
+
+    @given(kind=st.sampled_from(_TRANSPORTS), seed=st.integers(0, 9))
+    @settings(max_examples=30, deadline=None)
+    def test_epoch_bump_flushes_under_old_epoch(self, kind, seed):
+        """Records coalesced before an epoch bump are flushed stamped with
+        the OLD epoch — the new-epoch consumer drops them as stale instead
+        of mistaking them for current records."""
+        import random
+        rng = random.Random(seed)
+        chan = ("a", "b")
+        t = _mk_transport(kind)
+        t.coalesce_bytes = 1 << 13
+        try:
+            t.setup([chan], {chan: 8})
+            k = rng.randrange(1, 5)
+            for ci in range(k):  # abandoned epoch-1 records, still buffered
+                t.send(chan, ci, {"v": np.full((3,), -1.0)})
+            assert _fifo_len(t, chan) == 0  # nothing hit the FIFO yet
+            t.set_epoch(2)                  # bump flushes, stamped epoch 1
+            _settle(t, chan, 1)
+            for ci in range(k):             # the replay, under epoch 2
+                t.send(chan, ci, _payload(kind, ci))
+            t.flush_sends()
+            for ci in range(k):  # stale epoch-1 batch dropped silently
+                got = t.recv(chan, ci)
+                np.testing.assert_array_equal(got["v"],
+                                              _payload(kind, ci)["v"])
+        finally:
+            t.close()
+
+    @given(kind=st.sampled_from(_TRANSPORTS), seed=st.integers(0, 9))
+    @settings(max_examples=30, deadline=None)
+    def test_drain_sweeps_partial_coalesce_buffer(self, kind, seed):
+        """Drain sees BOTH the flushed FIFO contents and the producer's
+        still-buffered partial batch — requeue then replays every record
+        exactly once under the new epoch (the contiguous-prefix contract
+        recovery depends on)."""
+        import random
+        rng = random.Random(seed)
+        chan = ("a", "b")
+        t = _mk_transport(kind)
+        t.coalesce_bytes = 1 << 13
+        try:
+            t.setup([chan], {chan: 8})
+            k = rng.randrange(2, 7)
+            j = rng.randrange(0, k)  # flushed prefix; the rest stays local
+            for ci in range(j):
+                t.send(chan, ci, _payload(kind, ci))
+            if j:
+                t.flush_sends()
+                _settle(t, chan, 1)
+            for ci in range(j, k):
+                t.send(chan, ci, _payload(kind, ci))
+            drained = t.drain([chan], keep={chan})[chan]
+            assert [ci for ci, _ in drained[0]] == list(range(k))
+            assert drained[1] == 0          # losslessness: nothing dropped
+            t.set_epoch(2)
+            n = t.requeue(chan, drained[0])
+            assert n == k
+            for ci in range(k):             # exactly once, in order
+                got = t.recv(chan, ci)
+                np.testing.assert_array_equal(got["v"],
+                                              _payload(kind, ci)["v"])
+            assert _fifo_len(t, chan) == 0
+        finally:
+            t.close()
+
+
 class TestDrainRequeueLosslessness:
     """Satellite: every undelivered chunk reappears exactly once under the
     new epoch; nothing is delivered twice, nothing is lost."""
