@@ -731,16 +731,22 @@ class ClusterController:
                 # survivors) against the current attempt; the host still
                 # owes a current-epoch report for the queued message.
                 continue
+            batch_metrics = None
             if stats is not None:
                 (reports[h].stats_summary, reports[h].donation_summary,
                  reports[h].jit_builds) = stats[:3]
                 if len(stats) > 3:
-                    reports[h].metrics = stats[3] or {}
-                    self._absorb_chan_totals(reports[h].metrics)
+                    batch_metrics = reports[h].metrics = stats[3] or {}
                     self._absorb_trace(h, stats[4])
             if status == "ok":
                 if bid != batch_id:
                     continue  # stale success from an abandoned batch
+                if batch_metrics:
+                    # Fold channel totals into the lifetime ledger only for
+                    # accepted successes: stale-batch and stalled reports
+                    # cover (part of) a batch that is re-run and re-reported,
+                    # so absorbing them would double-count replayed bytes.
+                    self._absorb_chan_totals(batch_metrics)
                 results[h] = payload
                 reports[h].ok = True
             elif status == "stalled":

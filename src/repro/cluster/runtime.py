@@ -407,7 +407,8 @@ def derive_cut_capacities(plan: PartitionPlan, cfg: ExecConfig,
         depth, lanes = sizing[h]
         if coalesce > 0 and profile is not None:
             caps[chan] = coalesced_capacity(
-                depth, lanes, profile.out_bytes_of(c.src), coalesce)
+                depth, lanes, profile.out_bytes_of(c.src), coalesce,
+                floor=DEFAULT_CAPACITY)
         else:
             caps[chan] = max(DEFAULT_CAPACITY, depth, lanes)
     return caps

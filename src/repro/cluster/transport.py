@@ -55,15 +55,25 @@ the OLD epoch (buffered records belong to the abandoned stream and must
 arrive stale — never renumbered), the executor flushes at end of stream and
 on failure (so drained FIFOs see everything a producer believes it sent),
 and :meth:`ChannelTransport.drain` sweeps any still-unflushed local buffers
-after the FIFO contents.  ``SharedMemoryRing(double_buffer=True)``
-allocates 2× slots per ring (same logical CSP capacity) so a producer can
-pack the next slot while the consumer is still unpacking the previous one.
+— the controller's own and each thread host endpoint's — after the FIFO
+contents.  ``SharedMemoryRing(double_buffer=True)`` allocates 2× slots per
+ring (same logical CSP capacity) so a producer can pack the next slot while
+the consumer is still unpacking the previous one.
+
+Thread transports (:class:`InProcess` / :class:`JaxMesh`) hand each host
+its own :class:`_ThreadEndpoint`: the FIFOs and the epoch are live views of
+the parent's, but the coalescing state — unflushed send buffers and the
+exploded-batch read-ahead — is per host, so concurrent host threads never
+race one another's buffers and a host resetting for a replay-from-scratch
+clears only its OWN ingress read-ahead, never a stall-resuming peer's.
 """
 
 from __future__ import annotations
 
 import queue
+import threading
 import time as _time
+from contextlib import nullcontext
 
 import numpy as np
 
@@ -266,8 +276,21 @@ class ChannelTransport:
         self._epoch = value
 
     # -- coalescing buffers (lazy: endpoints that skip __init__ still work) --
+    # Thread transports set a real threading.Lock here: their buffers can be
+    # touched by a host thread (send / flush) and the controller thread
+    # (epoch-bump flush, drain sweep) at once.  Per-process endpoints own
+    # their buffers outright and stay lock-free.
+    _coalesce_lock = None
+
+    def _buf_lock(self):
+        lk = self._coalesce_lock
+        return lk if lk is not None else nullcontext()
+
     def _pending_map(self) -> dict:
-        """``chan -> [records, nbytes]`` unflushed coalesce buffers."""
+        """``chan -> [records, nbytes]`` unflushed coalesce buffers.  Only
+        mutate under :meth:`_buf_lock`: an unguarded flush-pop can race a
+        concurrent append, landing a record in an already-detached buffer
+        that never flushes."""
         p = getattr(self, "_send_pending", None)
         if p is None:
             p = self._send_pending = {}
@@ -281,28 +304,57 @@ class ChannelTransport:
             p = self._recv_exploded = {}
         return p
 
+    def _take_pending(self, chan):
+        """Atomically detach ``chan``'s coalesce buffer (None when empty)."""
+        if not getattr(self, "_send_pending", None):
+            return None
+        with self._buf_lock():
+            return self._send_pending.pop(chan, None)
+
+    def _sweep_pending(self, chan) -> list:
+        """Pop ``chan``'s unflushed coalesce records in send order — ours
+        and every registered per-host endpoint's (thread transports): those
+        producers believe the records were sent."""
+        out = []
+        for owner in (self, *getattr(self, "_endpoints", {}).values()):
+            buf = owner._take_pending(chan)
+            if buf:
+                out.extend(buf[0])
+        return out
+
     def flush_sends(self, chan=None, *, best_effort: bool = False) -> None:
         """Ship whatever the coalescing fast path still buffers — one
         batched record per channel (``chan`` limits it; None = all).  No-op
         with nothing pending.  ``best_effort`` drops what a full FIFO cannot
         take quickly instead of raising (stale-epoch flushes: the replay
-        machinery re-sends anything dropped)."""
+        machinery re-sends anything dropped).  Buffers detach under the
+        lock and ship outside it — a blocking put must not hold other
+        threads' sends hostage."""
         pend = getattr(self, "_send_pending", None)
         if not pend:
             return
-        for c in ([chan] if chan is not None else list(pend)):
-            buf = pend.pop(c, None)
+        with self._buf_lock():
+            chans = [chan] if chan is not None else list(pend)
+            bufs = [(c, pend.pop(c)) for c in chans if c in pend]
+        for c, buf in bufs:
             if buf and buf[0]:
                 self._flush_one(c, buf, best_effort=best_effort)
 
     def _flush_one(self, chan, buf, *, best_effort: bool = False) -> None:
         raise NotImplementedError
 
+    def _send_transform(self, chan, value) -> object:
+        """Pre-send payload hook (JaxMesh's consumer-submesh placement);
+        per-host thread endpoints delegate to their parent's."""
+        return value
+
     def clear_read_buffers(self) -> None:
-        """Drop read-ahead state from a previous stream.  An executor calls
-        this when it RESETS its run state (fresh batch / replay from
-        scratch); a stall-resume keeps the buffers — they hold exactly the
-        records already pulled off the FIFO but not yet folded."""
+        """Drop THIS endpoint's read-ahead state from a previous stream.
+        An executor calls this when it RESETS its run state (fresh batch /
+        replay from scratch); a stall-resume keeps the buffers — they hold
+        exactly the records already pulled off the FIFO but not yet folded.
+        Endpoints are per host on every transport, so the reset is host
+        local: it can never destroy a stall-resuming peer's read-ahead."""
         m = getattr(self, "_recv_exploded", None)
         if m:
             m.clear()
@@ -488,11 +540,15 @@ class _QueueTransport(ChannelTransport):
                 self._put_record(chan, ci, self._pack(value))
                 return
             packed = self._pack(value)
-            buf = self._pending_map().setdefault(chan, [[], 0])
-            buf[0].append((ci, packed))
-            buf[1] += _payload_nbytes(packed)
-            if buf[1] >= self.coalesce_bytes:
-                self.flush_sends(chan)
+            full = None
+            with self._buf_lock():
+                buf = self._pending_map().setdefault(chan, [[], 0])
+                buf[0].append((ci, packed))
+                buf[1] += _payload_nbytes(packed)
+                if buf[1] >= self.coalesce_bytes:
+                    full = self._send_pending.pop(chan)
+            if full is not None:  # ship outside the lock (the put may block)
+                self._flush_one(chan, full)
             return
         self._put_record(chan, ci, self._pack(value))
 
@@ -601,14 +657,11 @@ class _QueueTransport(ChannelTransport):
                     empties += 1
                 except Exception:  # a peer killed mid-put can corrupt a
                     failures += 1  # pickled record — count it lost, move on
-            # sweep OUR unflushed coalesce buffer last (thread hosts share
-            # this instance): the producer believes those were sent
-            pend = getattr(self, "_send_pending", None)
-            if pend:
-                local = pend.pop(chan, None)
-                if local:
-                    records.extend((self.epoch, rci, rv)
-                                   for rci, rv in local[0])
+            # sweep the unflushed coalesce buffers last — the controller's
+            # own AND every thread host endpoint's: those producers believe
+            # the records were sent
+            records.extend((self.epoch, rci, rv)
+                           for rci, rv in self._sweep_pending(chan))
             kept, dropped = [], 0
             for ep, ci, value in records:
                 if (chan in keep and ci >= 0
@@ -653,12 +706,106 @@ class _QueueTransport(ChannelTransport):
 
 class InProcess(_QueueTransport):
     """Loopback transport: hosts are threads, channels are ``queue.Queue``s
-    bounded by the CSP capacity.  The always-available reference."""
+    bounded by the CSP capacity.  The always-available reference.
+
+    :meth:`endpoint` hands each host its own :class:`_ThreadEndpoint` —
+    shared FIFOs and epoch, host-local coalesce buffers and read-ahead —
+    so concurrent host threads never touch one another's buffered records."""
 
     name = "inprocess"
 
+    def __init__(self):
+        super().__init__()
+        # controller-side flushes and drain sweeps race host-thread sends:
+        # the coalesce buffers need a real lock here (per-process endpoints
+        # are single-threaded and stay lock-free)
+        self._coalesce_lock = threading.Lock()
+        self._endpoints: dict = {}  # host -> _ThreadEndpoint (stable)
+
     def _new_queue(self, chan, capacities):
         return queue.Queue(maxsize=self._capacity(capacities, chan))
+
+    def endpoint(self, host: int):
+        # one stable endpoint per host: a restarted thread host reuses it
+        # (its fresh executor clears the read-ahead; stale send buffers
+        # flush as stale-epoch records on the next bump)
+        ep = self._endpoints.get(host)
+        if ep is None:
+            ep = self._endpoints[host] = _ThreadEndpoint(self, host)
+        return ep
+
+    def set_epoch(self, epoch: int) -> None:
+        # the epoch bump is a flush barrier for EVERY host's buffers, not
+        # just the controller's own: records buffered before the bump
+        # belong to the abandoned stream and must arrive stamped with the
+        # OLD epoch (never renumbered)
+        if epoch != self._epoch:
+            for ep in list(self._endpoints.values()):
+                ep.flush_sends(best_effort=True)
+        super().set_epoch(epoch)
+
+
+class _ThreadEndpoint(_QueueTransport):
+    """Per-host handle of a thread transport (InProcess / JaxMesh).
+
+    The FIFOs, epoch and knobs are live views of the parent's (a rebuilt
+    channel is visible immediately — thread hosts, unlike spawned
+    processes, never snapshot the queue map), but the coalescing state —
+    unflushed send buffers and the exploded-batch read-ahead — is THIS
+    host's alone.  Sharing it (the old endpoint()-returns-``self``
+    behaviour) let one host's ``clear_read_buffers`` destroy a
+    stall-resuming peer's read-ahead, and let a flush-pop interleave with a
+    concurrent append so a record landed in an already-detached buffer and
+    never flushed."""
+
+    def __init__(self, parent, host: int):
+        self._parent = parent
+        self.host = host
+        self.name = parent.name
+        self._send_pending: dict = {}
+        self._recv_exploded: dict = {}
+        self._coalesce_lock = threading.Lock()
+
+    @property
+    def _queues(self):
+        return self._parent._queues
+
+    @property
+    def epoch(self) -> int:
+        return self._parent.epoch
+
+    @epoch.setter
+    def epoch(self, value: int) -> None:
+        # the epoch is deployment-wide state: route through the parent so
+        # every host's stale buffers flush under the old stamp
+        self._parent.set_epoch(value)
+
+    @property
+    def recv_timeout_s(self) -> float:
+        return self._parent.recv_timeout_s
+
+    @recv_timeout_s.setter
+    def recv_timeout_s(self, value: float) -> None:
+        self._parent.recv_timeout_s = value
+
+    @property
+    def coalesce_bytes(self) -> int:
+        return self._parent.coalesce_bytes
+
+    @coalesce_bytes.setter
+    def coalesce_bytes(self, value: int) -> None:
+        self._parent.coalesce_bytes = value
+
+    def send(self, chan, ci: int, value) -> None:
+        if not isinstance(value, str):
+            value = self._parent._send_transform(chan, value)
+        super().send(chan, ci, value)
+
+    def _pack(self, value):
+        return self._parent._pack(value)
+
+    def _unpack(self, value):
+        return self._parent._unpack(value)
 
 
 class MultiProcessPipe(_QueueTransport):
@@ -778,6 +925,37 @@ class _ShmOps:
     name = "shm"
     _rings: dict
 
+    # the shm coalesce budget is capped by the ring's slot size: a batch
+    # must fit ONE slot, or _flush_one silently degrades to per-record
+    # sends and the fast path never engages.  The setter clamps (with a
+    # warning) so a mis-sized budget is visible instead of silent.
+    @property
+    def coalesce_bytes(self) -> int:
+        return getattr(self, "_coalesce_bytes", 0)
+
+    @coalesce_bytes.setter
+    def coalesce_bytes(self, value: int) -> None:
+        value = int(value)
+        limit = self._slot_limit()
+        if value > 0 and limit and value > limit:
+            import warnings
+            warnings.warn(
+                f"shm: coalesce_bytes={value} exceeds slot_bytes={limit}; "
+                f"clamping to {limit} (a coalesced batch must fit one ring "
+                "slot or every batch falls back to per-record sends)",
+                RuntimeWarning, stacklevel=2)
+            value = limit
+        self._coalesce_bytes = value
+
+    def _slot_limit(self) -> int:
+        sb = getattr(self, "slot_bytes", 0)  # the owning transport
+        if sb:
+            return sb
+        rings = getattr(self, "_rings", None)  # a child endpoint
+        if rings:
+            return min((r.slot_bytes for r in rings.values()), default=0)
+        return 0
+
     def _attached(self) -> dict:
         cache = getattr(self, "_shm_cache", None)
         if cache is None:
@@ -798,11 +976,15 @@ class _ShmOps:
                 self.flush_sends(chan)
                 self._send_one(chan, ci, value)
                 return
-            buf = self._pending_map().setdefault(chan, [[], 0])
-            buf[0].append((ci, value))  # RAW values; packed into a slot at
-            buf[1] += _payload_nbytes(value)  # flush time
-            if buf[1] >= self.coalesce_bytes:
-                self.flush_sends(chan)
+            full = None
+            with self._buf_lock():
+                buf = self._pending_map().setdefault(chan, [[], 0])
+                buf[0].append((ci, value))  # RAW values; packed into a
+                buf[1] += _payload_nbytes(value)  # slot at flush time
+                if buf[1] >= self.coalesce_bytes:
+                    full = self._send_pending.pop(chan)
+            if full is not None:  # pack + ship outside the lock
+                self._flush_one(chan, full)
             return
         self._send_one(chan, ci, value)
 
@@ -1229,17 +1411,13 @@ class SharedMemoryRing(_ShmOps, ChannelTransport):
                 else:
                     self._discard_header(ring, header)
                     dropped += 1
-            # sweep OUR unflushed coalesce buffer (raw values, send order)
-            pend = getattr(self, "_send_pending", None)
-            if pend:
-                local = pend.pop(chan, None)
-                if local:
-                    for rci, rv in local[0]:
-                        if (chan in keep and rci >= 0
-                                and not (isinstance(rv, str) and rv == EOS)):
-                            kept.append((rci, rv))
-                        else:
-                            dropped += 1
+            # sweep the unflushed coalesce buffers (raw values, send order)
+            for rci, rv in self._sweep_pending(chan):
+                if (chan in keep and rci >= 0
+                        and not (isinstance(rv, str) and rv == EOS)):
+                    kept.append((rci, rv))
+                else:
+                    dropped += 1
             out[chan] = (kept, dropped)
         return out
 
@@ -1343,9 +1521,14 @@ class JaxMesh(InProcess):
 
         return self._jax.tree_util.tree_map(_one, value)
 
+    def _send_transform(self, chan, value):
+        # per-host endpoints route their sends through this hook, so the
+        # consumer-submesh placement happens no matter which handle sends
+        return self._put(chan, value)
+
     def send(self, chan, ci: int, value) -> None:
         if not isinstance(value, str):
-            value = self._put(chan, value)
+            value = self._send_transform(chan, value)
         super().send(chan, ci, value)
 
 

@@ -264,16 +264,22 @@ def plan_depth_lanes(net: Network, max_in_flight: Optional[int],
 
 
 def coalesced_capacity(depth: int, lanes: int, record_bytes: int,
-                       coalesce_bytes: int) -> int:
+                       coalesce_bytes: int, floor: int = 2) -> int:
     """FIFO slot count for a cut channel whose transport coalesces records.
 
     With a ``coalesce_bytes`` budget, one queue slot carries
     ``budget // record_bytes`` records, so the consumer's in-flight appetite
     (``max(depth, lanes)`` records) fits in proportionally fewer slots —
-    never below the rendezvous floor of 2, and degrading to the uncoalesced
-    sizing when records are larger than the budget (each ships alone)."""
-    appetite = max(depth, lanes, 2)
+    never below the rendezvous floor of 2.  ``floor`` is the transport's
+    uncoalesced default capacity: when records are larger than the budget
+    each ships alone (one record per slot), and the channel gets exactly
+    the uncoalesced sizing ``max(floor, depth, lanes)`` — shrinking a
+    large-record channel's FIFO below what the per-record path would
+    allocate only adds backpressure stalls."""
     per_slot = max(1, coalesce_bytes // max(1, record_bytes))
+    if per_slot == 1:
+        return max(floor, depth, lanes)  # degraded: uncoalesced sizing
+    appetite = max(depth, lanes, 2)
     return max(2, -(-appetite // per_slot))
 
 

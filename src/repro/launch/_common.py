@@ -51,15 +51,21 @@ def add_cluster_flags(ap: argparse.ArgumentParser, *,
                          "be applied before jax initialises — the "
                          "launcher sets it for this process AND for every "
                          "spawned host")
+    ap.add_argument("--tcmalloc", action="store_true",
+                    help="LD_PRELOAD tcmalloc (when present on the image) "
+                         "so every spawned host inherits the faster "
+                         "allocator; off by default — a global allocator "
+                         "swap should be an explicit choice")
     return ap
 
 
 def apply_runtime_env(args) -> None:
     """Process-environment hygiene that must land BEFORE the first jax
-    import: virtual device count, TF/absl log noise, and (when present on
-    the image) tcmalloc for the spawned hosts.  Launchers call this right
-    after ``parse_args`` — their heavy imports all happen inside ``main``,
-    so nothing has pulled jax in yet."""
+    import: virtual device count, TF/absl log noise, and (opt-in via
+    ``--tcmalloc``, when present on the image) tcmalloc for the spawned
+    hosts.  Launchers call this right after ``parse_args`` — their heavy
+    imports all happen inside ``main``, so nothing has pulled jax in
+    yet."""
     n = int(getattr(args, "virtual_devices", 0) or 0)
     if n > 0:
         if "jax" in sys.modules:
@@ -74,10 +80,12 @@ def apply_runtime_env(args) -> None:
     # silence the TF/XLA C++ banner spam that drowns launcher output
     os.environ.setdefault("TF_CPP_MIN_LOG_LEVEL", "2")
     os.environ.setdefault("GRPC_VERBOSITY", "ERROR")
-    if "LD_PRELOAD" not in os.environ:
+    if getattr(args, "tcmalloc", False) and "LD_PRELOAD" not in os.environ:
         for lib in _TCMALLOC_CANDIDATES:
             if os.path.exists(lib):
                 # too late for THIS process (the loader already ran) but
                 # every spawned host interpreter inherits the allocator
                 os.environ["LD_PRELOAD"] = lib
+                print(f"[launch] LD_PRELOAD={lib} for spawned hosts "
+                      "(--tcmalloc)", file=sys.stderr)
                 break

@@ -340,6 +340,37 @@ class TestDerivedCapacities:
                                                       lanes=1))
         assert caps[(c.src, c.dst)] == DEFAULT_CAPACITY == 2
 
+    def test_coalesced_capacity_degrades_to_uncoalesced_floor(self):
+        """Satellite edge case: records larger than the coalesce budget
+        ship one per slot, so the channel must get exactly the uncoalesced
+        sizing ``max(floor, depth, lanes)`` — the degraded case once
+        dropped the transport's floor and shrank large-record FIFOs."""
+        from repro.core.stream import coalesced_capacity
+        # per_slot == 1: budget smaller than one record
+        assert coalesced_capacity(1, 1, record_bytes=4096,
+                                  coalesce_bytes=64, floor=4) == 4
+        assert coalesced_capacity(6, 3, record_bytes=4096,
+                                  coalesce_bytes=64, floor=4) == 6
+        # genuine coalescing still shrinks proportionally (floor unused)
+        assert coalesced_capacity(8, 1, record_bytes=64,
+                                  coalesce_bytes=256, floor=4) == 2
+
+    def test_derived_capacities_floor_under_coalescing(self):
+        """With coalescing on but a cut whose records exceed the budget,
+        the derived FIFO must match what the per-record path would get."""
+        from repro.cluster.costs import CostProfile, ProcessCost
+        net = _farm()
+        plan = partition(net, hosts=2)
+        (c,) = plan.cut
+        profile = CostProfile(costs={c.src: ProcessCost(
+            name=c.src, out_bytes=1 << 20)})  # 1 MiB records
+        cfg = ExecConfig(max_in_flight=1, lanes=1,
+                         coalesce_bytes=1 << 10,  # far below one record
+                         profile=profile)
+        plain = derive_cut_capacities(plan, ExecConfig(max_in_flight=1,
+                                                       lanes=1))
+        assert derive_cut_capacities(plan, cfg, profile=profile) == plain
+
 
 class TestClusterDeployment:
     """Tentpole: a deployment partitions, compiles, and spawns ONCE; warm

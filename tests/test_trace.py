@@ -291,6 +291,40 @@ class TestClusterTrace:
             for chan_key in before:
                 assert final.get(chan_key, 0) > 0
 
+    def test_ledger_absorbs_only_accepted_successes(self):
+        """Regression: channel totals were folded into the cumulative
+        ledger BEFORE the batch-id staleness check, so an abandoned batch's
+        late success (and a stalled host's partial report, which is re-run
+        and re-reported) double-counted its bytes."""
+        from repro.cluster.control import ClusterController
+        from repro.cluster.runtime import HostReport
+
+        c = object.__new__(ClusterController)
+        c.timeout_s, c.poll_s, c.epoch = 5.0, 0.01, 1
+        c._procs, c._cum_chan = {}, {}
+        c._stalled, c._dead, c._erred = {}, set(), set()
+        c._absorb_trace = lambda *a: None
+        c._quiesce = lambda *a: None
+        stale = ("ok", 0, 98, 1, None,
+                 ("", "", 0, {"wall_s": 1.0,
+                              "sent_bytes": {"a->b": 7777}}, None))
+        stalled = ("stalled", 1, 99, 1, (3, "tb"),
+                   ("", "", 0, {"wall_s": 1.0,
+                                "sent_bytes": {"a->b": 5555}}, None))
+        good = ("ok", 0, 99, 1, None,
+                ("", "", 0, {"wall_s": 2.0,
+                             "sent_bytes": {"a->b": 1000}}, None))
+        script = [[stale], [stalled], [good]]
+        c._poll_results = lambda pending, timeout: (
+            script.pop(0) if script else [])
+        reports = {0: HostReport(host=0, procs=[]),
+                   1: HostReport(host=1, procs=[])}
+        results = c._await_results(99, reports, {0, 1})
+        assert reports[0].ok and 0 in results
+        assert reports[1].stalled and c._stalled[1] == 3
+        # only the accepted success reached the lifetime ledger
+        assert c._cum_chan == {"a->b": [1000.0, 2.0]}
+
 
 class TestSimGoldenTrace:
     def _one(self):

@@ -243,7 +243,7 @@ class TestCoalescingProperties:
         rng = random.Random(seed)
         chan = ("a", "b")
         t = _mk_transport(kind)
-        t.coalesce_bytes = 1 << 13  # budget >> payloads: nothing
+        t.coalesce_bytes = 1 << 12  # budget >> payloads: nothing
         try:                        # auto-flushes before the EOS
             t.setup([chan], {chan: 8})
             k = rng.randrange(1, 6)
@@ -270,7 +270,7 @@ class TestCoalescingProperties:
         rng = random.Random(seed)
         chan = ("a", "b")
         t = _mk_transport(kind)
-        t.coalesce_bytes = 1 << 13
+        t.coalesce_bytes = 1 << 12
         try:
             t.setup([chan], {chan: 8})
             k = rng.randrange(1, 5)
@@ -300,7 +300,7 @@ class TestCoalescingProperties:
         rng = random.Random(seed)
         chan = ("a", "b")
         t = _mk_transport(kind)
-        t.coalesce_bytes = 1 << 13
+        t.coalesce_bytes = 1 << 12
         try:
             t.setup([chan], {chan: 8})
             k = rng.randrange(2, 7)
@@ -364,5 +364,164 @@ class TestDrainRequeueLosslessness:
                 seen.append(ci)
             assert seen == list(range(j, k))
             assert _fifo_len(t, chan) == 0  # ... and exactly once: empty
+        finally:
+            t.close()
+
+
+class TestThreadEndpointIsolation:
+    """Regression: thread transports (InProcess/JaxMesh) used to return
+    ``self`` from endpoint(), so with coalescing on every host thread shared
+    one ``_send_pending``/``_recv_exploded`` — a host resetting for a
+    replay-from-scratch cleared a stall-resuming peer's read-ahead (records
+    already off the FIFO, never replayed: silent loss), and a flush-pop
+    could race a concurrent append.  Each host now gets its own
+    ``_ThreadEndpoint`` over the shared FIFOs."""
+
+    def test_endpoints_distinct_stable_share_fifos(self):
+        chan = ("a", "b")
+        t = InProcess()
+        try:
+            t.setup([chan], {chan: 4})
+            ep0, ep1 = t.endpoint(0), t.endpoint(1)
+            assert ep0 is not ep1 and ep0 is not t
+            assert t.endpoint(0) is ep0          # stable across calls
+            assert ep0._queues is t._queues      # live FIFO view
+            ep0.send(chan, 0, {"v": np.arange(3.0)})
+            got = ep1.recv(chan, 0)
+            np.testing.assert_array_equal(got["v"], np.arange(3.0))
+        finally:
+            t.close()
+
+    def test_clear_read_buffers_is_host_local(self):
+        """Host 1 explodes a coalesced batch into its read-ahead and folds
+        a prefix; host 2 resetting for a from-scratch replay must NOT
+        destroy the remainder — those records are off the FIFO and, per the
+        exactly-once invariant, are never replayed."""
+        c1, c2 = ("a", "b"), ("a", "c")
+        t = InProcess()
+        t.coalesce_bytes = 1 << 12
+        try:
+            t.setup([c1, c2], {c1: 4, c2: 4})
+            ep1, ep2 = t.endpoint(1), t.endpoint(2)
+            for ci in range(3):
+                t.send(c1, ci, {"v": np.full((3,), float(ci))})
+            t.flush_sends()
+            got = ep1.recv(c1, 0)   # explodes the batch: 1, 2 read ahead
+            np.testing.assert_array_equal(got["v"], np.zeros(3))
+            assert ep1._recv_exploded[c1]
+            ep2.clear_read_buffers()  # the peer's reset ...
+            for ci in (1, 2):         # ... leaves the survivor intact
+                got = ep1.recv(c1, ci)
+                np.testing.assert_array_equal(got["v"],
+                                              np.full((3,), float(ci)))
+        finally:
+            t.close()
+
+    def test_parent_drain_sweeps_endpoint_buffers(self):
+        """A host thread's unflushed coalesce buffer is part of what drain
+        must surface: that producer believes the records were sent."""
+        chan = ("a", "b")
+        t = InProcess()
+        t.coalesce_bytes = 1 << 12
+        try:
+            t.setup([chan], {chan: 4})
+            ep = t.endpoint(0)
+            ep.send(chan, 0, {"v": np.arange(3.0)})  # buffered, unflushed
+            assert _fifo_len(t, chan) == 0
+            drained = t.drain([chan], keep={chan})[chan]
+            assert [ci for ci, _ in drained[0]] == [0]
+            assert drained[1] == 0
+            assert not ep._send_pending              # buffer detached
+        finally:
+            t.close()
+
+    def test_epoch_bump_flushes_endpoint_buffers_stale(self):
+        """The controller's epoch bump is a flush barrier for EVERY host's
+        buffers: endpoint records buffered before the bump ship stamped
+        with the OLD epoch and are discarded as stale by the consumer."""
+        chan = ("a", "b")
+        t = InProcess()
+        t.coalesce_bytes = 1 << 12
+        try:
+            t.setup([chan], {chan: 4})
+            ep = t.endpoint(0)
+            ep.send(chan, 0, {"v": np.full((3,), -1.0)})  # doomed record
+            assert _fifo_len(t, chan) == 0
+            t.set_epoch(2)
+            assert not ep._send_pending      # flushed by the bump ...
+            assert _fifo_len(t, chan) == 1   # ... under epoch 1
+            assert ep.epoch == 2             # endpoint tracks the parent
+            ep.send(chan, 0, {"v": np.arange(3.0)})
+            ep.flush_sends()
+            got = ep.recv(chan, 0)           # stale flush dropped silently
+            np.testing.assert_array_equal(got["v"], np.arange(3.0))
+        finally:
+            t.close()
+
+    def test_concurrent_host_sends_lose_nothing(self):
+        """Two host threads coalescing concurrently: every record arrives
+        exactly once, in order (the old shared-buffer flush-pop/append race
+        could land a record in an already-detached buffer)."""
+        import threading
+        t = InProcess()
+        t.coalesce_bytes = 200  # a handful of records per batch
+        chans = [("p0", "c"), ("p1", "c")]
+        n = 200
+        try:
+            t.setup(chans, {c: 64 for c in chans})
+
+            def producer(h, chan):
+                ep = t.endpoint(h)
+                for ci in range(n):
+                    ep.send(chan, ci, {"v": np.full((4,), float(ci))})
+                ep.flush_sends()
+
+            threads = [threading.Thread(target=producer, args=(h, c))
+                       for h, c in enumerate(chans)]
+            for th in threads:
+                th.start()
+            for th in threads:
+                th.join()
+            consumer = t.endpoint(2)
+            for chan in chans:
+                for ci in range(n):
+                    got = consumer.recv(chan, ci)
+                    np.testing.assert_array_equal(
+                        got["v"], np.full((4,), float(ci)))
+        finally:
+            t.close()
+
+    def test_jaxmesh_endpoint_send_places_and_roundtrips(self):
+        """JaxMesh's consumer-submesh placement must survive the move to
+        per-host endpoints: an endpoint send routes through the parent's
+        placement hook."""
+        import jax
+        chan = ("a", "b")
+        t = JaxMesh()
+        t.coalesce_bytes = 1 << 12
+        try:
+            t.setup([chan], {chan: 4})
+            t.bind([chan], {chan: 0}, 1)
+            ep = t.endpoint(0)
+            ep.send(chan, 0, {"v": np.arange(3.0)})
+            ep.flush_sends()
+            got = t.endpoint(1).recv(chan, 0)
+            assert isinstance(got["v"], jax.Array)  # placement happened
+            np.testing.assert_array_equal(np.asarray(got["v"]),
+                                          np.arange(3.0))
+        finally:
+            t.close()
+
+    def test_shm_coalesce_budget_clamps_to_slot_bytes(self):
+        """A coalesce budget larger than slot_bytes would silently degrade
+        every batch to per-record sends; the shm transport clamps it (with
+        a warning) so the fast path stays engaged."""
+        t = SharedMemoryRing(slot_bytes=1 << 12)
+        try:
+            with pytest.warns(RuntimeWarning, match="clamping"):
+                t.coalesce_bytes = 1 << 13
+            assert t.coalesce_bytes == 1 << 12
+            t.coalesce_bytes = 256  # within the slot: no warning, kept
+            assert t.coalesce_bytes == 256
         finally:
             t.close()
