@@ -460,6 +460,52 @@ def run(*, smoke: bool = False, hosts: int = 2,
             "refined": bool(refined),
         }, f, indent=2)
 
+    # -- load-driven autoscaling: spike -> scale-out (ROADMAP item 1) ------
+    # warm 2-host baseline sets the latency SLO; a 4x traffic spike
+    # crosses it, the policy adds a host (epoch bump + re-proof, never a
+    # restart), and post-scale-up throughput must at least hold the
+    # pre-spike baseline — the acceptance gate for the autoscaler
+    from repro.cluster import AutoscalePolicy
+    a_inst, a_mult, amb = 6, 4, 2
+    afactory = (make_skewed_pipeline, (96, 12))
+    anet = afactory[0](*afactory[1])
+    aseq = float(run_sequential(anet, a_inst)["collect"])
+    aseq_big = float(run_sequential(anet, a_inst * a_mult)["collect"])
+    apolicy = AutoscalePolicy(high_occupancy=2.0, high_stall_rate=1e9,
+                              sustain=1, cooldown=1,
+                              min_hosts=hosts, max_hosts=hosts + 1)
+    with ClusterDeployment(anet, hosts=hosts, transport="inprocess",
+                           microbatch_size=amb, factory=afactory,
+                           autoscale=apolicy) as adep:
+        adep.run(instances=a_inst)  # cold: spawn + compile
+        a_base, a_same = float("inf"), True
+        for _ in range(max(warm_batches, 3)):
+            t0 = time.perf_counter()
+            out = adep.run(instances=a_inst)
+            a_base = min(a_base, time.perf_counter() - t0)
+            a_same = a_same and float(out["collect"]) == aseq
+        base_tps = a_inst / a_base
+        apolicy.high_batch_wall_s = 2.0 * a_base  # the SLO the spike crosses
+        spike_walls = []
+        for _ in range(max(warm_batches, 3) + 1):
+            t0 = time.perf_counter()
+            out = adep.run(instances=a_inst * a_mult)
+            spike_walls.append(time.perf_counter() - t0)
+            a_same = a_same and float(out["collect"]) == aseq_big
+        scaled = [e for e in adep.autoscale_events if e.executed]
+        a_refined = all(e.event.refined is True for e in scaled)
+        a_hosts = len(adep.controller.plan.hosts())
+    post = min(spike_walls[1:])  # batches after the scale-out landed
+    post_tps = a_inst * a_mult / post
+    scaleup_ok = bool(scaled) and a_hosts == hosts + 1 \
+        and post_tps >= base_tps
+    rows.append(("cluster_autoscale_spike", post * 1e6,
+                 f"identical={a_same} scaleup_ok={scaleup_ok} "
+                 f"refined={a_refined} actions={len(scaled)} "
+                 f"post_tps={post_tps:.1f} base_tps={base_tps:.1f} "
+                 f"spike0_us={spike_walls[0] * 1e6:.0f} "
+                 f"hosts={hosts}->{a_hosts}"))
+
     # -- jaxmesh over virtual devices (satellite: --virtual-devices) -------
     # fresh interpreters: XLA fixes the device count at backend init
     for n in (4, 8):
@@ -498,7 +544,7 @@ def main() -> None:
         blob.append({"name": name, "us_per_call": us, "derived": derived})
     bad = ("identical=False", "refines=False", "overhead_ok=False",
            "from_snap_ok=False", "coalesce_ok=False", "cost_ok=False",
-           "refined=False", "devices_ok=False")
+           "refined=False", "devices_ok=False", "scaleup_ok=False")
     if any(b in r["derived"] for r in blob for b in bad):
         print("cluster benchmark: oracle divergence, refinement failure, "
               "or durability gate miss", file=sys.stderr)

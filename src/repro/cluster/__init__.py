@@ -13,6 +13,7 @@ streams batch after batch through the warm hosts at near single-host
 speed; :func:`run_cluster` is the one-shot convenience on top.
 """
 
+from .autoscale import Autoscaler, AutoscaleEvent, AutoscalePolicy
 from .control import ClusterController, RecoveryEvent
 from .costs import CostProfile, ProcessCost, calibrate, calibrate_bandwidth
 from .deploy import ClusterDeployment
@@ -25,9 +26,10 @@ from .runtime import (ClusterError, ClusterResult, ExecConfig, HostReport,
                       PartitionExecutor, derive_cut_capacities,
                       make_host_executor, run_cluster)
 from .sim import (FaultEvent, FaultSchedule, SimClock, SimTransport,
-                  run_coalesce_kill_scenario, run_kill_controller_scenario,
-                  run_pipe_brick_scenario, run_scenario,
-                  run_stall_race_scenario)
+                  WorkloadSchedule, run_coalesce_kill_scenario,
+                  run_kill_controller_scenario, run_pipe_brick_scenario,
+                  run_scenario, run_stall_race_scenario,
+                  run_workload_scenario)
 from .transport import (ChannelTransport, InProcess, JaxMesh,
                         MultiProcessPipe, SharedMemoryRing, TransportError,
                         make_transport)
@@ -42,10 +44,12 @@ __all__ = [
     "PartitionExecutor", "run_cluster", "ClusterResult", "ClusterError",
     "HostReport", "ExecConfig", "ClusterDeployment", "ClusterController",
     "RecoveryEvent",
+    "Autoscaler", "AutoscaleEvent", "AutoscalePolicy",
     "derive_cut_capacities", "make_host_executor",
     "DeploymentStore", "DurabilityEvent",
     "FaultEvent", "FaultSchedule", "SimClock", "SimTransport",
+    "WorkloadSchedule",
     "run_scenario", "run_pipe_brick_scenario",
     "run_kill_controller_scenario", "run_stall_race_scenario",
-    "run_coalesce_kill_scenario",
+    "run_coalesce_kill_scenario", "run_workload_scenario",
 ]

@@ -618,14 +618,22 @@ class ClusterController:
             key = f"{chan[0]}->{chan[1]}"
             snap.queue_depths[key] = depth
             cap = caps.get(chan, 0)
-            if cap and depth >= 0:
-                snap.occupancy[key] = depth / cap
+            if depth >= 0:
+                # a channel with no usable capacity reading is exactly the
+                # one a scaling policy must see: surface it as occupancy
+                # None (unknown) instead of dropping the key — the raw
+                # depth stays in queue_depths either way.  A transient
+                # depth > cap (coalesced flush landing mid-read) clamps
+                # to 1.0: occupancy is a backpressure signal, not a count.
+                snap.occupancy[key] = (min(depth / cap, 1.0) if cap
+                                       else None)
         for h, rep in self._last_reports.items():
             m = rep.metrics
             if not m:
                 continue
             snap.throughput[h] = m.get("items_per_s", 0.0)
             snap.stall_rate[h] = m.get("stalls_per_chunk", 0.0)
+            snap.batch_wall_s[h] = m.get("wall_s", 0.0)
         # bytes/s from the cumulative ledger, not the last batch's sample:
         # reconfigure()/recover() replace _last_reports (and may rename
         # hosts), but a channel's lifetime transfer rate must not reset to
@@ -634,6 +642,24 @@ class ClusterController:
             if wall > 0:
                 snap.bytes_per_s[chan_key] = nbytes / wall
         return snap
+
+    def _prune_metrics(self, new_plan: PartitionPlan) -> None:
+        """Drop telemetry rows a replan made meaningless, at the epoch
+        bump: ``_last_reports`` entries for hosts the new plan dropped or
+        renamed (a policy polling :meth:`metrics` must never see ghost
+        hosts), and ``_cum_chan`` ledger keys whose endpoint processes the
+        replanned net no longer has (dangling string keys would otherwise
+        leak into ``bytes_per_s`` forever).  A channel a replan merely
+        stopped cutting keeps its lifetime history — a later replan can
+        cut it again, and its rate must resume, not reset."""
+        live = set(new_plan.hosts())
+        self._last_reports = {h: r for h, r in self._last_reports.items()
+                              if h in live}
+        procs = set(new_plan.net.procs)
+        self._cum_chan = {
+            k: v for k, v in self._cum_chan.items()
+            if k.partition("->")[0] in procs
+            and k.partition("->")[2] in procs}
 
     def _absorb_chan_totals(self, m: dict) -> None:
         """Fold one host's per-batch metrics into the cumulative per-channel
@@ -1056,6 +1082,7 @@ class ClusterController:
         self.transport.reconfigure(
             [(c.src, c.dst) for c in new_plan.cut], new_caps)
         self._bind_meshes()
+        self._prune_metrics(new_plan)
         for h in dropped:
             self.stop_host(h)
             self._work_qs.pop(h, None)
@@ -1138,6 +1165,7 @@ class ClusterController:
         self.transport.reconfigure(
             [(c.src, c.dst) for c in new_plan.cut], new_caps)
         self._bind_meshes()
+        self._prune_metrics(new_plan)
         for h in dropped_hosts:
             self.stop_host(h)
             self._work_qs.pop(h, None)

@@ -90,7 +90,8 @@ class ClusterDeployment:
                  snapshot_every: int = 0,
                  snapshot_dir: Optional[str] = None,
                  coalesce_bytes: int = 0,
-                 profile=None):
+                 profile=None,
+                 autoscale=None):
         if net is None:
             if factory is None:
                 raise NetworkError("ClusterDeployment: need net= or factory=")
@@ -114,6 +115,15 @@ class ClusterDeployment:
         store = DeploymentStore(snapshot_dir) if snapshot_dir else None
         self.controller = ClusterController(net, plan, cfg, t, factory,
                                             timeout_s, store=store)
+        # autoscale= is a policy (or True for the defaults), NOT part of
+        # ExecConfig: the policy holds live hysteresis state and must not
+        # ride the durable cfg into adopt()
+        self.autoscaler = None
+        if autoscale is not None and autoscale is not False:
+            from .autoscale import Autoscaler, AutoscalePolicy
+            pol = (AutoscalePolicy() if autoscale is True else autoscale)
+            self.autoscaler = Autoscaler(self.controller, pol,
+                                         profile=profile)
 
     @classmethod
     def adopt(cls, snapshot_dir: str, *, factory: tuple,
@@ -197,6 +207,13 @@ class ClusterDeployment:
         return self.controller.events
 
     @property
+    def autoscale_events(self) -> list:
+        """:class:`~repro.cluster.autoscale.AutoscaleEvent` per autoscale
+        decision (executed or vetoed), oldest first; [] without
+        ``autoscale=``."""
+        return [] if self.autoscaler is None else self.autoscaler.events
+
+    @property
     def cfg(self) -> ExecConfig:
         return self.controller.cfg
 
@@ -258,8 +275,16 @@ class ClusterDeployment:
         After a failure the deployment is NOT poisoned: :meth:`recover`
         replays the failed batch, or the next :meth:`run` auto-recovers and
         moves on.
+
+        Deployed with ``autoscale=``, every completed batch is followed by
+        one policy poll: a sustained load signal resizes the plan between
+        batches as an epoch-bumped replan (``dep.autoscaler.events``
+        records each decision, executed or vetoed).
         """
-        return self.controller.run_batch(instances, batch=batch)
+        out = self.controller.run_batch(instances, batch=batch)
+        if self.autoscaler is not None:
+            self.autoscaler.poll()
+        return out
 
     def recover(self, mode: str = "restart") -> Optional[ClusterResult]:
         """Repair a failed deployment and replay the failed batch's lost

@@ -161,6 +161,11 @@ class PartitionExecutor(StreamExecutor):
         # counting is a tree_leaves sum, negligible next to the send itself
         self.sent_bytes: dict = {}
         self.recv_bytes: dict = {}
+        # StreamStats progress counters as of this serve call's start:
+        # metrics_sample reports the DELTA, so a resumed batch samples only
+        # the replayed tail and a warm host's row never decays toward a
+        # lifetime average
+        self._sample_base = (0, 0, 0)  # (chunks_done, items_done, stalls)
         self.ingress = [(ingress_shim(c.src, c.dst), (c.src, c.dst))
                         for c in plan.ingress_of(host)]
         self.egress = [(egress_shim(c.src, c.dst), (c.src, c.dst))
@@ -261,9 +266,12 @@ class PartitionExecutor(StreamExecutor):
         """Stream chunks ``bounds[start_ci:]`` through this partition
         (``start_ci`` > 0: a replay of only the lost tail of a batch)."""
         # fresh batch: byte counters restart (a resume keeps accumulating —
-        # the replayed tail belongs to the same batch)
+        # the replayed tail belongs to the same batch).  The sample baseline
+        # is zero because _run_plan creates a fresh StreamStats whose
+        # progress counters start at 0.
         self.sent_bytes = {}
         self.recv_bytes = {}
+        self._sample_base = (0, 0, 0)
         # a fresh batch (or replay-from-ci, which only reaches hosts whose
         # run state was reset) must not inherit another stream's read-ahead;
         # a stall-RESUME goes through resume_partition and keeps it — the
@@ -273,7 +281,20 @@ class PartitionExecutor(StreamExecutor):
 
     def resume_partition(self, batch=None) -> dict:
         """Resume an interrupted batch from the saved replay state."""
+        # resume keeps the interrupted run's StreamStats: rebase the sample
+        # so this serve call reports only the tail it actually streams
+        if self.replay_state is not None:
+            st = self.replay_state.stats
+            self._sample_base = (st.chunks_done, st.items_done, st.stalls)
         return self.resume_plan(batch)
+
+    def resume_from_state(self, state: dict, batch=None):
+        """Durable-snapshot resume (see base class) with the sample baseline
+        rebased to the snapshot's progress counters — the serve call that
+        replays the tail must not bill the pre-snapshot chunks again."""
+        st = state["stats"]
+        self._sample_base = (st.chunks_done, st.items_done, st.stalls)
+        return super().resume_from_state(state, batch)
 
     def _drive(self, plan, batch, start_ci, jit_accs, host_accs):
         """Bracket the base drive loop with coalesce flushes: on success the
@@ -300,14 +321,25 @@ class PartitionExecutor(StreamExecutor):
     def metrics_sample(self, wall_s: float) -> dict:
         """The per-batch telemetry sample shipped in
         :attr:`HostReport.metrics` — one host's row of the controller's
-        :class:`repro.core.trace.MetricsSnapshot`."""
+        :class:`repro.core.trace.MetricsSnapshot`.
+
+        Rates come from the RETIRED-progress delta since this serve call
+        began (``_sample_base`` against ``StreamStats.chunks_done`` /
+        ``items_done``), never from the plan totals ``n_items``/``n_chunks``
+        — those are preset when the run starts, so a stalled host would
+        report full throughput for work it never finished, and a resumed
+        tail would bill the whole batch against the tail's wall clock.  A
+        scaling policy polling these rows needs the truth per call."""
         st = self.stats
+        b_chunks, b_items, b_stalls = self._sample_base
+        n_chunks = st.chunks_done - b_chunks
+        n_items = st.items_done - b_items
+        stalls = st.stalls - b_stalls
         wall = max(wall_s, 1e-9)
         return {
             "wall_s": wall_s,
-            "items_per_s": st.n_items / wall,
-            "stalls_per_chunk": (st.stalls / st.n_chunks
-                                 if st.n_chunks else 0.0),
+            "items_per_s": n_items / wall,
+            "stalls_per_chunk": stalls / n_chunks if n_chunks else 0.0,
             "sent_bytes": dict(self.sent_bytes),
             "recv_bytes": dict(self.recv_bytes),
         }

@@ -84,7 +84,11 @@ def cluster_report(plan, reports, events=None, depths=None,
 
     ``plan`` is a :class:`repro.cluster.partition.PartitionPlan`; ``reports``
     a list of :class:`repro.cluster.runtime.HostReport`; ``events`` an
-    optional list of :class:`repro.cluster.control.RecoveryEvent`;
+    optional list of :class:`repro.cluster.control.RecoveryEvent` — an
+    autoscale action's event carries its decision as ``auto_mode``
+    (``autoscale add_host: ...``), so scaling renders right next to
+    recoveries here, and :class:`repro.cluster.autoscale.AutoscaleEvent`
+    duck-types into the same list via its own ``describe()``;
     ``depths`` an optional live ``{"src->dst": queue depth}`` sample
     (:meth:`ChannelTransport.channel_depths`); ``durability`` an optional
     list of :class:`repro.cluster.durable.DurabilityEvent` (controller-meta

@@ -298,6 +298,12 @@ class StreamStats:
     lanes: int = 1
     schedule: list = dataclasses.field(default_factory=list)  # (chunk, lane)
     stalls: int = 0  # times the dispatcher blocked on backpressure
+    # live progress, incremented at retirement (the only synchronisation
+    # point).  Unlike ``n_items``/``n_chunks`` — plan totals preset when the
+    # run starts — these count what actually finished, so a stalled or
+    # partially-replayed run samples the truth, not the plan.
+    chunks_done: int = 0
+    items_done: int = 0
     # per-stage buffer-donation outcomes: {stage: [chunks_requested,
     # chunks_honoured]} — honoured means the input buffer was actually
     # consumed (is_deleted) by the stage jit, i.e. the memory was reused
@@ -728,7 +734,7 @@ class StreamExecutor:
 
     # -- retirement (the only synchronisation point) -------------------------
     def _retire(self, entry, host_accs) -> None:
-        ci, lanes_used, host_streams, watermark = entry
+        ci, chunk_items, lanes_used, host_streams, watermark = entry
         with self.rec.span("retire", "stream", ci=ci):
             # Collect is the CSP sink: block on this chunk's folded
             # accumulators (snapshots — later chunks' folds keep streaming
@@ -746,6 +752,8 @@ class StreamExecutor:
                     item = jax.tree_util.tree_map(lambda a: a[i], stream)
                     acc = p.fn(acc, item)
                 host_accs[name] = acc
+        self.stats.chunks_done += 1
+        self.stats.items_done += chunk_items
         for lane in lanes_used:
             self._outstanding[lane] -= 1
 
@@ -900,7 +908,8 @@ class StreamExecutor:
             # COMBINE accumulators throttle too (collect may see nothing yet)
             for cname, acc in self._combine_carry.items():
                 watermark[f"combine:{cname}"] = acc
-            in_flight.append((ci, lanes_used, host_streams, watermark))
+            in_flight.append((ci, hi - lo, lanes_used, host_streams,
+                              watermark))
             rec.counter("in_flight", len(in_flight), "stream")
         while in_flight:
             self._retire(in_flight.popleft(), host_accs)

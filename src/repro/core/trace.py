@@ -315,8 +315,11 @@ class MetricsSnapshot:
     epoch: int = 0
     # "src->dst" -> records waiting in the cut-channel FIFO right now
     queue_depths: dict = dataclasses.field(default_factory=dict)
-    # "src->dst" -> depth / capacity (1.0 = the FIFO is exerting
-    # backpressure; persistent occupancy marks the bottleneck cut)
+    # "src->dst" -> depth / capacity, clamped to <= 1.0 (1.0 = the FIFO is
+    # exerting backpressure; persistent occupancy marks the bottleneck
+    # cut).  None = the channel is live but its capacity is unknown — a
+    # policy should treat that as suspect, not invisible (the raw depth
+    # is still in queue_depths)
     occupancy: dict = dataclasses.field(default_factory=dict)
     # host -> items/s over its last completed batch
     throughput: dict = dataclasses.field(default_factory=dict)
@@ -325,6 +328,11 @@ class MetricsSnapshot:
     stall_rate: dict = dataclasses.field(default_factory=dict)
     # "src->dst" -> sender-side bytes/s over the sender's last batch
     bytes_per_s: dict = dataclasses.field(default_factory=dict)
+    # host -> wall seconds its last batch took end to end: the latency
+    # signal a service-level scaling policy compares against its target
+    # (between batches occupancy drains to 0, so batch wall is the one
+    # load signal that survives the poll boundary)
+    batch_wall_s: dict = dataclasses.field(default_factory=dict)
 
     def describe(self) -> str:
         """Deterministic one-line-per-section rendering."""
@@ -334,7 +342,9 @@ class MetricsSnapshot:
                 f"{c}={d}" for c, d in sorted(self.queue_depths.items())))
         if self.occupancy:
             lines.append("  occupancy: " + ", ".join(
-                f"{c}={o:.2f}" for c, o in sorted(self.occupancy.items())))
+                f"{c}=?" if o is None else f"{c}={o:.2f}"
+                for c, o in sorted(self.occupancy.items(),
+                                   key=lambda kv: kv[0])))
         if self.throughput:
             lines.append("  throughput: " + ", ".join(
                 f"host {h}={v:.1f} items/s"
@@ -347,6 +357,10 @@ class MetricsSnapshot:
             lines.append("  bytes/s: " + ", ".join(
                 f"{c}={_fmt_bytes(v)}/s"
                 for c, v in sorted(self.bytes_per_s.items())))
+        if self.batch_wall_s:
+            lines.append("  batch wall: " + ", ".join(
+                f"host {h}={v:.3f}s"
+                for h, v in sorted(self.batch_wall_s.items())))
         return "\n".join(lines)
 
 

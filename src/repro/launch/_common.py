@@ -56,7 +56,34 @@ def add_cluster_flags(ap: argparse.ArgumentParser, *,
                          "so every spawned host inherits the faster "
                          "allocator; off by default — a global allocator "
                          "swap should be an explicit choice")
+    ap.add_argument("--autoscale", action="store_true",
+                    help="poll the deployment's metrics between batches "
+                         "and resize the plan when load demands it "
+                         "(repro.cluster.AutoscalePolicy defaults; bound "
+                         "by --min-hosts/--max-hosts). Every action is an "
+                         "epoch-bumped reconfigure with the refinement "
+                         "re-proof, never a restart")
+    ap.add_argument("--min-hosts", type=int, default=None, metavar="N",
+                    help="autoscale floor (default: the starting --hosts)")
+    ap.add_argument("--max-hosts", type=int, default=None, metavar="N",
+                    help="autoscale ceiling (default: --hosts + 2)")
     return ap
+
+
+def autoscale_policy(args):
+    """The :class:`repro.cluster.AutoscalePolicy` the flags describe, or
+    ``None`` when ``--autoscale`` is off — pass straight to
+    ``ClusterDeployment(autoscale=...)`` / ``ClusterDecodeBackend``."""
+    if not getattr(args, "autoscale", False):
+        return None
+    from repro.cluster import AutoscalePolicy
+    hosts = int(getattr(args, "hosts", 1) or 1)
+    lo = args.min_hosts if args.min_hosts is not None else hosts
+    hi = args.max_hosts if args.max_hosts is not None else hosts + 2
+    if not 1 <= lo <= hi:
+        raise SystemExit(
+            f"--min-hosts/--max-hosts: need 1 <= {lo} <= {hi}")
+    return AutoscalePolicy(min_hosts=lo, max_hosts=hi)
 
 
 def apply_runtime_env(args) -> None:

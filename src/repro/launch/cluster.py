@@ -13,7 +13,7 @@ from __future__ import annotations
 
 import argparse
 
-from ._common import add_cluster_flags, apply_runtime_env
+from ._common import add_cluster_flags, apply_runtime_env, autoscale_policy
 
 
 # module-level factories: the pipe transport spawns fresh interpreters that
@@ -160,7 +160,8 @@ def main():
                                 snapshot_every=args.snapshot_every,
                                 snapshot_dir=args.snapshot_dir,
                                 coalesce_bytes=args.coalesce_bytes,
-                                profile=profile)
+                                profile=profile,
+                                autoscale=autoscale_policy(args))
     with dep:
         if args.resume_from and dep.controller._needs_recovery:
             t0 = time.perf_counter()
@@ -182,6 +183,8 @@ def main():
                 print(f"[cluster] batch {b} "
                       f"({'cold' if b == 0 else 'warm'}): "
                       f"{wall * 1e3:.1f}ms identical={same}")
+        for aev in dep.autoscale_events:
+            print(f"[cluster] {aev.describe()}")
         depths = {f"{s}->{d}": n for (s, d), n
                   in dep.transport.channel_depths().items()}
         if args.trace:

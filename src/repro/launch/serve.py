@@ -20,7 +20,8 @@ import argparse
 import random
 import time
 
-from ._common import add_cluster_flags, add_model_flags, apply_runtime_env
+from ._common import (add_cluster_flags, add_model_flags, apply_runtime_env,
+                      autoscale_policy)
 
 
 def _pct(xs: list, q: float) -> float:
@@ -59,7 +60,7 @@ def main():
         backend = ClusterDecodeBackend(
             ("model", args.arch, args.reduced), n_slots=args.n_slots,
             shards=shards, hosts=args.hosts, transport=args.transport,
-            max_len=args.max_len)
+            max_len=args.max_len, autoscale=autoscale_policy(args))
         where = f"cluster[{args.transport}x{args.hosts}h/{shards} shards]"
     else:
         from repro.models import Model
@@ -102,6 +103,8 @@ def main():
           f"tokens in {dt:.2f}s ({toks / max(dt, 1e-9):.1f} tok/s) over "
           f"{steps} farm steps "
           f"(mean occupancy {toks / max(steps, 1):.2f}/{args.n_slots})")
+    for aev in getattr(backend, "autoscale_events", []):
+        print(f"[serve] {aev.describe()}")
     ttfts = [r.ttft * 1e3 for r in done]
     tpots = [r.tpot * 1e3 for r in done if len(r.tokens) > 1]
     if ttfts:

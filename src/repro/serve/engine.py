@@ -316,14 +316,19 @@ class ClusterDecodeBackend:
     full steps (exactly-once responses under host kills).  ``scale()``
     re-fits the same farm to a new host count via the controller's
     epoch-bumped :meth:`~repro.cluster.control.ClusterController
-    .reconfigure`."""
+    .reconfigure`; ``autoscale=`` (an
+    :class:`~repro.cluster.autoscale.AutoscalePolicy`, or ``True`` for
+    the defaults) does the same *automatically*: :class:`ServeEngine`
+    calls :meth:`maybe_autoscale` after every decode step, so the farm
+    grows and shrinks under open-loop traffic with no operator in the
+    loop."""
 
     def __init__(self, spec: tuple, *, n_slots: int, shards: int = 2,
                  hosts: int = 2, transport="inprocess", max_len: int = 64,
                  prefill_chunk: int = 8, timeout_s: float = 60.0,
                  max_recover_attempts: int = 4, recover_mode: str = "restart",
                  trace: bool = False, snapshot_every: int = 0,
-                 snapshot_dir: Optional[str] = None):
+                 snapshot_dir: Optional[str] = None, autoscale=None):
         from repro.cluster.deploy import ClusterDeployment
         if shards <= 0 or n_slots % shards:
             raise NetworkError(f"ClusterDecodeBackend: n_slots={n_slots} "
@@ -355,6 +360,15 @@ class ClusterDecodeBackend:
             trace=trace, snapshot_every=snapshot_every,
             snapshot_dir=snapshot_dir)
         self.dep.start()
+        # the backend owns its Autoscaler (rather than handing autoscale=
+        # to the deployment) so polling is per decode STEP, under the
+        # engine's control — not per internal batch, where one-item
+        # prefill chunks would pollute the policy's rate signals
+        self.autoscaler = None
+        if autoscale is not None and autoscale is not False:
+            from repro.cluster.autoscale import Autoscaler, AutoscalePolicy
+            pol = AutoscalePolicy() if autoscale is True else autoscale
+            self.autoscaler = Autoscaler(self.dep.controller, pol)
 
     @property
     def store(self):
@@ -445,6 +459,20 @@ class ClusterDecodeBackend:
         §6.1.1 re-proof; serving state (caches, admission queue) is
         untouched.  Returns the :class:`RecoveryEvent`."""
         return self.dep.reconfigure(hosts=hosts)
+
+    def maybe_autoscale(self):
+        """One :class:`~repro.cluster.autoscale.AutoscalePolicy` poll
+        against the live farm — the hook :meth:`ServeEngine.step` calls
+        after every decode step.  No-op without ``autoscale=``; returns
+        the :class:`AutoscaleEvent` when the policy decided anything."""
+        if self.autoscaler is None:
+            return None
+        return self.autoscaler.poll()
+
+    @property
+    def autoscale_events(self) -> list:
+        """Every autoscale decision so far (executed and vetoed)."""
+        return [] if self.autoscaler is None else self.autoscaler.events
 
     def close(self) -> None:
         self.dep.close()
@@ -606,6 +634,12 @@ class ServeEngine:
                     finished_at=now, steps=live.steps,
                     slot_events=tuple(e for e in self.plan.events
                                       if e.rid == rid)))
+        # elasticity: the backend's autoscale policy (if any) polls the
+        # farm's metrics once per decode step — a scale decision lands as
+        # an epoch bump between steps, invisible to slot bookkeeping
+        maybe = getattr(self.backend, "maybe_autoscale", None)
+        if maybe is not None:
+            maybe()
         if (self.store is not None and self.persist_every
                 and self.steps_run % self.persist_every == 0):
             self._persist()
